@@ -1,0 +1,76 @@
+"""Paper Appendix F ablations (analytic parts exact, accuracy at smoke scale).
+
+* Table 15: codebook size K -> compression ratio (exact arithmetic)
+* Table 12: NAVQ noise magnitude lambda -> train/val gap (smoke fine-tune)
+* Table 14: commitment weight beta (smoke fine-tune)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.core.comm_model import compression_ratio
+from benchmarks.common import fmt_table
+
+
+def codebook_size_table() -> str:
+    rows = []
+    for k in (256, 512, 1024, 2048):
+        rows.append([k, compression_ratio(12, 768, 32, k, 32)])
+    return fmt_table("Appendix F Table 15: codebook size vs compression "
+                     "(ViT-Base, G=32)",
+                     ["K", "compression_ratio"], rows)
+
+
+def navq_lambda_table(steps: int = 40) -> str:
+    from repro.data import pipeline
+    from repro.training.trainer import Trainer
+
+    base = get_config("gpt2-small").reduced()
+    rows = []
+    for lam in (0.0, 0.3, 1.0):
+        cfg = dataclasses.replace(
+            base, astra=dataclasses.replace(base.astra, noise_lambda=lam))
+        tr = Trainer(cfg, num_devices_sim=4, astra_mode="sim")
+        data = pipeline.lm_batches(pipeline.LMDataConfig(
+            batch_size=8, seq_len=64, seed=0))
+        hist = tr.fit(data, steps=steps, log=False)
+        train_loss = hist[-1]["task_loss"]
+        val = tr.eval_loss(pipeline.lm_batches(pipeline.LMDataConfig(
+            batch_size=8, seq_len=64, seed=777)), batches=4)
+        rows.append([lam, train_loss, val, val - train_loss])
+    return fmt_table(
+        "Appendix F Table 12 (smoke): NAVQ lambda vs train/val gap",
+        ["lambda", "train_loss", "val_loss", "gap"], rows)
+
+
+def commit_beta_table(steps: int = 40) -> str:
+    from repro.data import pipeline
+    from repro.training.trainer import Trainer
+
+    base = get_config("gpt2-small").reduced()
+    rows = []
+    for beta in (0.0, 5e-4, 0.25):
+        cfg = dataclasses.replace(
+            base, astra=dataclasses.replace(base.astra, commit_beta=beta))
+        tr = Trainer(cfg, num_devices_sim=4, astra_mode="sim")
+        data = pipeline.lm_batches(pipeline.LMDataConfig(
+            batch_size=8, seq_len=64, seed=0))
+        tr.fit(data, steps=steps, log=False)
+        val = tr.eval_loss(pipeline.lm_batches(pipeline.LMDataConfig(
+            batch_size=8, seq_len=64, seed=777)), batches=4)
+        rows.append([beta, val])
+    return fmt_table(
+        "Appendix F Table 14 (smoke): commitment weight beta vs val loss",
+        ["beta", "val_loss"], rows)
+
+
+def main(fast: bool = False) -> str:
+    steps = 15 if fast else 40
+    return "\n\n".join([codebook_size_table(),
+                        navq_lambda_table(steps),
+                        commit_beta_table(steps)])
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,36 @@
+"""Paper Appendix G: VQ codebook overhead + KV-cache savings (exact)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import ASSIGNED, get_config
+from repro.serving.kv_cache import memory_report
+from benchmarks.common import fmt_table
+
+
+def main() -> str:
+    rows = []
+    # the paper's worked example: Llama-3-8B, N=1024, 4 devices, G=32
+    cfg = get_config("llama3-8b")
+    cfg = dataclasses.replace(
+        cfg, astra=dataclasses.replace(cfg.astra, groups=32))
+    rep = memory_report(cfg, seq_len=1024, num_devices=4)
+    rows.append(["llama3-8b(paper)", 1024, rep["kv_fp_bytes"],
+                 rep["kv_astra_bytes"], rep["astra_fraction"],
+                 rep["codebook_bytes"]])
+    # every assigned arch at decode_32k scale
+    for arch in ASSIGNED:
+        c = get_config(arch)
+        if c.arch_type == "ssm":
+            continue  # no KV cache
+        r = memory_report(c, seq_len=32768, num_devices=4)
+        rows.append([arch, 32768, r["kv_fp_bytes"], r["kv_astra_bytes"],
+                     r["astra_fraction"], r["codebook_bytes"]])
+    return fmt_table(
+        "Appendix G: KV-cache + codebook memory (bytes, batch=1)",
+        ["arch", "seq", "kv_fp", "kv_astra", "astra_fraction",
+         "codebook"], rows)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,58 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads results/dryrun/*.json and prints, per (arch x shape x mesh x mode):
+the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs
+and bytes/device — the source for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import fmt_table
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(pattern: str = "*.json"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def main() -> str:
+    recs = load()
+    if not recs:
+        return ("# Roofline: no dry-run artifacts found — run "
+                "`python -m repro.launch.dryrun --arch all --shape all`")
+    rows = []
+    for r in recs:
+        if r.get("tag") not in ("", None):
+            continue
+        if r["status"] == "skipped":
+            rows.append([r["arch"], r["shape"], r["mesh"], r["mode"],
+                         "skipped", 0, 0, 0, 0, 0])
+            continue
+        if r["status"] != "ok":
+            rows.append([r["arch"], r["shape"], r["mesh"], r["mode"],
+                         "ERROR", 0, 0, 0, 0, 0])
+            continue
+        t = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], r["mesh"], r["mode"], t["bottleneck"],
+            t["compute_s"], t["memory_s"], t["collective_s"],
+            r.get("useful_flops_fraction", 0.0),
+            r.get("memory", {}).get("peak_bytes_per_device", 0) / 2**30,
+        ])
+    return fmt_table(
+        "Roofline terms per (arch x shape x mesh x mode) [v5e constants]",
+        ["arch", "shape", "mesh", "mode", "bottleneck", "compute_s",
+         "memory_s", "collective_s", "useful_flops_frac", "peak_GiB/dev"],
+        rows)
+
+
+if __name__ == "__main__":
+    print(main())

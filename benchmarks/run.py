@@ -1,0 +1,53 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="shrink the CPU fine-tune in table1")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        appendixD_heterogeneous,
+        appendixF_ablations,
+        appendixG_memory,
+        fig3_breakdown,
+        fig6_dynamic_network,
+        roofline_report,
+        table1_accuracy_comm,
+        table2_devices,
+        table4_speedup,
+        table7_prefill,
+        table13_dct,
+    )
+
+    sections = [
+        ("table4_speedup (Fig 1 + Table 4)", lambda: table4_speedup.main()),
+        ("fig3_breakdown", lambda: fig3_breakdown.main()),
+        ("table2_devices (Fig 4 + Fig 5)", lambda: table2_devices.main()),
+        ("table7_prefill (Llama-3-8B)", lambda: table7_prefill.main()),
+        ("appendixG_memory", lambda: appendixG_memory.main()),
+        ("roofline_report (dry-run)", lambda: roofline_report.main()),
+        ("fig6_dynamic_network", lambda: fig6_dynamic_network.main()),
+        ("table1_accuracy_comm", lambda: table1_accuracy_comm.main(args.fast)),
+        ("appendixF_ablations", lambda: appendixF_ablations.main(args.fast)),
+        ("table13_dct", lambda: table13_dct.main(args.fast)),
+        ("appendixD_heterogeneous",
+         lambda: appendixD_heterogeneous.main(args.fast)),
+    ]
+    for name, fn in sections:
+        t0 = time.time()
+        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        print(fn())
+        print(f"-- {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

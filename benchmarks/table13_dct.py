@@ -1,0 +1,66 @@
+"""Paper Table 13 (smoke scale): Distributed vs Single Class Token.
+
+Fine-tunes the reduced ViT with both CLS strategies at two group settings
+and reports validation accuracy — reproducing the paper's finding that DCT
+consistently wins (paper: +0.37% to +7.13%).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_config
+from benchmarks.common import fmt_table
+
+
+def accuracy(cfg, steps, seed=0):
+    import jax
+
+    from repro.data import pipeline
+    from repro.training.trainer import Trainer
+
+    tr = Trainer(cfg, num_devices_sim=4, astra_mode="sim", seed=seed)
+    data = pipeline.classification_batches(8, 16, cfg.frontend_dim,
+                                           cfg.num_classes, seed=seed)
+    tr.fit(data, steps=steps, log=False)
+    # accuracy on held-out batches
+    import jax.numpy as jnp
+
+    from repro.models import model_factory as mf
+    from repro.models.context import StepCtx
+
+    ctx = dataclasses.replace(tr.ctx, train=False)
+    correct = tot = 0
+    val = pipeline.classification_batches(8, 16, cfg.frontend_dim,
+                                          cfg.num_classes, seed=seed + 999)
+    for _ in range(32):
+        batch = next(val)
+        logits, _, _ = mf.forward(
+            tr.state.params, {"patch_embeds": jnp.asarray(
+                batch["patch_embeds"])}, ctx=ctx, navq_state=tr.state.navq)
+        pred = np.asarray(jnp.argmax(logits, -1))
+        correct += int((pred == batch["labels"]).sum())
+        tot += pred.size
+    return correct / tot
+
+
+def main(fast: bool = False) -> str:
+    steps = 20 if fast else 120
+    base = get_config("vit-base").reduced()
+    rows = []
+    for g in (1, 4):
+        for dist in (False, True):
+            cfg = dataclasses.replace(
+                base, astra=dataclasses.replace(base.astra, groups=g,
+                                                distributed_cls=dist))
+            accs = [accuracy(cfg, steps, seed=s0) for s0 in (0, 1)]
+            rows.append([g, "dist" if dist else "single",
+                         float(np.mean(accs))])
+    return fmt_table(
+        "Table 13 (smoke): distributed vs single class token accuracy",
+        ["groups", "cls", "val_acc"], rows)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,84 @@
+"""Paper Tables 1 & 3: task quality vs communication compression.
+
+Part A (exact): Total-Bits-per-Token and compression ratios for ViT-Base,
+GPT2-S, GPT2-M, Llama-3-8B — closed-form, must equal the paper's numbers.
+
+Part B (accuracy proxy, CPU scale): fine-tune the reduced GPT2 with ASTRA at
+G in {1, 4, 16} vs the unquantized baseline on the synthetic corpus and
+report eval loss — reproducing the paper's *trend* (more groups -> closer to
+baseline) at smoke scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.core.comm_model import (
+    astra_total_bits_per_token,
+    compression_ratio,
+    full_precision_bits_per_token,
+)
+from benchmarks.common import fmt_table
+
+# (model, layers, d_model, r_bits, codebooks)
+_MODELS = [
+    ("vit-base", 12, 768, 32, 1),
+    ("gpt2-small", 12, 768, 32, 1),
+    ("gpt2-medium", 24, 1024, 32, 1),
+    ("llama3-8b", 32, 4096, 8, 2),
+]
+
+
+def exact_table() -> str:
+    rows = []
+    for name, l, d, r, c in _MODELS:
+        base = full_precision_bits_per_token(l, d, r)
+        rows.append([name, "-", base, 1.0])
+        for g in (1, 16, 32):
+            bits = astra_total_bits_per_token(l, g, 1024, c)
+            rows.append([name, g, bits,
+                         compression_ratio(l, d, g, 1024, r, c)])
+    return fmt_table("Table 1/3/6 exact: bits per token & compression",
+                     ["model", "groups", "bits_per_token", "compression"],
+                     rows)
+
+
+def accuracy_proxy(steps: int = 60, fast: bool = False) -> str:
+    from repro.data import pipeline
+    from repro.training.trainer import Trainer
+
+    cfg0 = get_config("gpt2-small").reduced()
+    rows = []
+    settings = [("baseline", None)] + [(f"astra_g{g}", g)
+                                       for g in ((1, 4) if fast else (1, 2, 4))]
+    for name, g in settings:
+        if g is None:
+            cfg = dataclasses.replace(
+                cfg0, astra=dataclasses.replace(cfg0.astra, enabled=False))
+            mode = "off"
+        else:
+            cfg = dataclasses.replace(
+                cfg0, astra=dataclasses.replace(cfg0.astra, groups=g))
+            mode = "sim"
+        tr = Trainer(cfg, num_devices_sim=4, astra_mode=mode)
+        data = pipeline.lm_batches(pipeline.LMDataConfig(
+            batch_size=8, seq_len=64, seed=0))
+        tr.fit(data, steps=steps, log=False)
+        val = tr.eval_loss(pipeline.lm_batches(pipeline.LMDataConfig(
+            batch_size=8, seq_len=64, seed=321)), batches=4)
+        bits = (cfg.astra.groups * cfg.astra.bits_per_code
+                * 2 * cfg.num_layers if g else
+                cfg.num_layers * cfg.d_model * 32)
+        rows.append([name, bits, val])
+    return fmt_table(
+        "Table 1/3 accuracy proxy (reduced GPT2, synthetic corpus)",
+        ["setting", "bits_per_token", "eval_loss"], rows)
+
+
+def main(fast: bool = False) -> str:
+    out = [exact_table(), accuracy_proxy(20 if fast else 60, fast)]
+    return "\n\n".join(out)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,52 @@
+"""Paper Table 2 / Figures 4-5: scaling with device count and token length.
+
+Latency speedup of ASTRA vs baselines when N in {2,4,6,8} (Fig 4) and
+T in {256,...,4096} (Fig 5), at 20 and 200 Mbps.
+"""
+from __future__ import annotations
+
+from repro.core.comm_model import CommEnv, latency_model
+from benchmarks.common import fmt_table, vit_base_forward_s
+
+METHODS = {
+    "SP": dict(),
+    "BP+AG": dict(nb=1),
+    "ASTRA@1": dict(groups=1),
+    "ASTRA@32": dict(groups=32),
+}
+
+
+def sweep_devices() -> str:
+    rows = []
+    for bw in (20, 200):
+        for n in (2, 4, 6, 8):
+            single = vit_base_forward_s(1024)
+            env = CommEnv(bandwidth_mbps=bw, num_devices=n, seq_len=1024,
+                          d_model=768, num_layers=12)
+            rows.append([bw, n] + [
+                single / latency_model(env, single, m.split("@")[0], **kw)
+                for m, kw in METHODS.items()])
+    return fmt_table("Fig 4: speedup vs device count (1024 tokens)",
+                     ["bandwidth_mbps", "devices"] + list(METHODS), rows)
+
+
+def sweep_tokens() -> str:
+    rows = []
+    for bw in (20, 200):
+        for t in (256, 512, 1024, 2048, 4096):
+            single = vit_base_forward_s(t)
+            env = CommEnv(bandwidth_mbps=bw, num_devices=4, seq_len=t,
+                          d_model=768, num_layers=12)
+            rows.append([bw, t] + [
+                single / latency_model(env, single, m.split("@")[0], **kw)
+                for m, kw in METHODS.items()])
+    return fmt_table("Fig 5: speedup vs input length (4 devices)",
+                     ["bandwidth_mbps", "tokens"] + list(METHODS), rows)
+
+
+def main() -> str:
+    return sweep_devices() + "\n\n" + sweep_tokens()
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,59 @@
+"""Paper Figure 1 + Table 4: speedup vs bandwidth (4 devices, 1024 tokens).
+
+Reproduces the bandwidth sweep with the paper's analytic latency model for
+TP (Megatron), SP (Voltage), BP+AG / BP+SP (DeTransformer, Nb=1) and ASTRA
+(G in {1, 16, 32}), on the 12-layer 768-d encoder the paper times.
+"""
+from __future__ import annotations
+
+from repro.core.comm_model import CommEnv, latency_model
+from benchmarks.common import fmt_table, vit_base_forward_s
+
+BANDWIDTHS = (10, 20, 50, 100, 200, 500)
+METHODS = {
+    "TP": dict(),
+    "SP": dict(),
+    "BP+AG": dict(nb=1),
+    "BP+SP": dict(nb=1),
+    "ASTRA@1": dict(groups=1),
+    "ASTRA@16": dict(groups=16),
+    "ASTRA@32": dict(groups=32),
+}
+
+
+def speedups(num_devices: int = 4, seq_len: int = 1024):
+    single = vit_base_forward_s(seq_len)
+    grid = {}
+    for bw in BANDWIDTHS:
+        env = CommEnv(bandwidth_mbps=bw, num_devices=num_devices,
+                      seq_len=seq_len, d_model=768, num_layers=12)
+        row = {}
+        for m, kw in METHODS.items():
+            lat = latency_model(env, single, m.split("@")[0], **kw)
+            row[m] = single / lat
+        grid[bw] = row
+    return grid, single
+
+
+def main() -> str:
+    grid, single = speedups()
+    rows = [[bw] + [grid[bw][m] for m in METHODS] for bw in BANDWIDTHS]
+    t1 = fmt_table(
+        f"Fig 1: speedup over single device (single fwd = {single*1e3:.1f} ms)",
+        ["bandwidth_mbps"] + list(METHODS), rows)
+
+    # Table 4: ASTRA's speedup over each baseline (best ASTRA group per bw)
+    rows4 = []
+    for bw in BANDWIDTHS:
+        best_astra = max(grid[bw][m] for m in
+                         ("ASTRA@1", "ASTRA@16", "ASTRA@32"))
+        rows4.append([bw] + [best_astra / grid[bw][m]
+                             for m in ("TP", "SP", "BP+AG", "BP+SP")])
+    t2 = fmt_table("Table 4: ASTRA speedup over baselines",
+                   ["bandwidth_mbps", "vs_TP", "vs_SP", "vs_BP+AG",
+                    "vs_BP+SP"], rows4)
+    return t1 + "\n\n" + t2
+
+
+if __name__ == "__main__":
+    print(main())

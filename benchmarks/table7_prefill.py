@@ -1,0 +1,61 @@
+"""Paper Table 7: Llama-3-8B prefill latency (s) vs bandwidth, 4 devices,
+1024 tokens, 8-bit execution for all methods.
+
+The paper reports single-device prefill = 4.578 s on TitanX-class GPUs; we
+calibrate the compute term to that number and apply the analytic comm model
+(TP: 2 all-reduce/layer; SP: 1 all-gather/layer; BP: Nb boundaries; ASTRA:
+VQ codes with C=2 codebooks/layer).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.comm_model import (
+    CommEnv,
+    bits_astra,
+    bits_block_parallel,
+    bits_sequence_parallel,
+    bits_tensor_parallel,
+    comm_time_s,
+)
+from benchmarks.common import fmt_table
+
+SINGLE_S = 4.578  # paper's measured single-device prefill
+BANDWIDTHS = (10, 20, 50, 100, 200, 500)
+
+
+def main() -> str:
+    cfg = get_config("llama3-8b")
+    rows = [["single-device"] + [SINGLE_S] * len(BANDWIDTHS)]
+    comp = SINGLE_S / 4
+
+    def env_at(bw):
+        return CommEnv(bandwidth_mbps=bw, num_devices=4, seq_len=1024,
+                       d_model=cfg.d_model, num_layers=cfg.num_layers,
+                       precision_bits=8)
+
+    cases = [
+        ("TP", lambda e: comm_time_s(bits_tensor_parallel(e), e,
+                                     2 * cfg.num_layers)),
+        ("SP", lambda e: comm_time_s(bits_sequence_parallel(e), e,
+                                     cfg.num_layers)),
+        ("BP,Nb=4", lambda e: comm_time_s(bits_block_parallel(e, 4, "AG"),
+                                          e, 4)),
+        ("BP,Nb=8", lambda e: comm_time_s(bits_block_parallel(e, 8, "AG"),
+                                          e, 8)),
+        ("ASTRA,G=1", lambda e: comm_time_s(
+            bits_astra(e, 1, codebooks_per_layer=2), e, cfg.num_layers)),
+        ("ASTRA,G=16", lambda e: comm_time_s(
+            bits_astra(e, 16, codebooks_per_layer=2), e, cfg.num_layers)),
+        ("ASTRA,G=32", lambda e: comm_time_s(
+            bits_astra(e, 32, codebooks_per_layer=2), e, cfg.num_layers)),
+    ]
+    for name, comm_fn in cases:
+        c = comp * (1.12 if name.startswith("ASTRA") else 1.0)
+        rows.append([name] + [c + comm_fn(env_at(bw)) for bw in BANDWIDTHS])
+    return fmt_table(
+        "Table 7: Llama-3-8B prefill latency (s), 4 devices, 1024 tokens",
+        ["method"] + [f"{bw}Mbps" for bw in BANDWIDTHS], rows)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,70 @@
+"""ASTRA's distributed runtime on (forced) host devices.
+
+Runs the REAL shard_map execution path — sequence-sharded tokens, VQ-code
+all-gather, per-device mixed-precision attention — on 4 forced host CPU
+devices, and checks it against the single-process simulated view.  The same
+code drives the 256-chip production mesh (see repro/launch/dryrun.py).
+
+Run:  PYTHONPATH=src python examples/multidevice_astra.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.comm_model import bits_astra, bits_sequence_parallel, CommEnv
+from repro.core.sequence_parallel import MeshContext
+from repro.models import model_factory as mf
+from repro.models.context import StepCtx
+
+
+def main() -> None:
+    print(f"devices: {jax.devices()}")
+    cfg = get_config("starcoder2-3b").reduced()
+    cfg = dataclasses.replace(
+        cfg, astra=dataclasses.replace(cfg.astra, noise_lambda=0.0))
+    params = mf.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                                cfg.vocab_size, jnp.int32)
+
+    mesh = jax.make_mesh((4,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    mctx = MeshContext(mesh=mesh, batch_axes=(), seq_axis="model")
+
+    # the distributed path: shard_map over the sequence axis
+    ctx_spmd = StepCtx(cfg=cfg, mesh=mctx, mode="prefill",
+                       astra_mode="spmd")
+    fwd = jax.jit(lambda p, t: mf.forward(p, {"tokens": t},
+                                          ctx=ctx_spmd)[0])
+    t0 = time.time()
+    logits_spmd = fwd(params, tokens)
+    print(f"spmd forward: {logits_spmd.shape} in {time.time()-t0:.2f}s "
+          f"(compile incl.)")
+
+    # reference: the simulated global view used in training
+    ctx_sim = StepCtx(cfg=cfg, mode="prefill", astra_mode="sim",
+                      num_sim_shards=4)
+    logits_sim, _, _ = mf.forward(params, {"tokens": tokens}, ctx=ctx_sim)
+    err = float(jnp.max(jnp.abs(logits_spmd - logits_sim)))
+    print(f"parity vs simulated view: max|diff| = {err:.2e}")
+    assert err < 5e-3
+
+    # what actually crossed the wire
+    env = CommEnv(bandwidth_mbps=1, num_devices=4, seq_len=64,
+                  d_model=cfg.d_model, num_layers=cfg.num_layers)
+    astra_bits = bits_astra(env, cfg.astra.groups, cfg.astra.codebook_size,
+                            2)
+    sp_bits = bits_sequence_parallel(env)
+    print(f"wire bits/device: ASTRA {astra_bits:,.0f} vs SP {sp_bits:,.0f} "
+          f"({sp_bits/astra_bits:.1f}x reduction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-param GPT2-Small WITH ASTRA for a few
+hundred steps on the synthetic corpus, tracking the paper's loss terms
+(task + commitment), NAVQ residual statistics, and eval perplexity; saves a
+checkpoint and compares against the no-ASTRA baseline (paper Table 3 trend).
+
+This is the paper's fine-tuning recipe end to end — at a reduced model scale
+chosen to run on CPU in a few minutes.  Pass --full-width to train the real
+GPT2-Small width (slow on CPU).
+
+Run:  PYTHONPATH=src python examples/train_astra_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import math
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data import pipeline
+from repro.training import checkpoint
+from repro.training.trainer import Trainer
+
+
+def run(cfg, steps, tag, seq_len, batch):
+    tr = Trainer(cfg, num_devices_sim=4,
+                 astra_mode="sim" if cfg.astra.enabled else "off")
+    data = pipeline.lm_batches(pipeline.LMDataConfig(
+        batch_size=batch, seq_len=seq_len, seed=0))
+    t0 = time.time()
+    hist = tr.fit(data, steps=steps, log_every=max(steps // 10, 1))
+    val = tr.eval_loss(pipeline.lm_batches(pipeline.LMDataConfig(
+        batch_size=batch, seq_len=seq_len, seed=1234)), batches=8)
+    print(f"[{tag}] val loss {val:.4f}  ppl {math.exp(min(val, 20)):.2f}  "
+          f"({time.time()-t0:.0f}s)")
+    return tr, val
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--full-width", action="store_true")
+    ap.add_argument("--checkpoint", default="/tmp/astra_gpt2.npz")
+    args = ap.parse_args()
+
+    base = get_config("gpt2-small")
+    cfg = base if args.full_width else base.reduced()
+    # give the reduced model a little more capacity for a real training run
+    if not args.full_width:
+        cfg = dataclasses.replace(cfg, num_layers=2, d_model=256,
+                                  num_heads=8, num_kv_heads=8, head_dim=32,
+                                  d_ff=1024)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps, ASTRA G={cfg.astra.groups}")
+
+    tr, val_astra = run(cfg, args.steps, "ASTRA", args.seq_len, args.batch)
+    checkpoint.save(args.checkpoint, tr.state.params,
+                    {"arch": cfg.name, "steps": args.steps,
+                     "val_loss": val_astra})
+    print(f"checkpoint -> {args.checkpoint}")
+
+    cfg_off = dataclasses.replace(
+        cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+    _, val_base = run(cfg_off, args.steps, "baseline", args.seq_len,
+                      args.batch)
+    gap = val_astra - val_base
+    print(f"\nASTRA vs baseline loss gap: {gap:+.4f} "
+          f"(paper: small positive gap that shrinks with more groups)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Generate the §Dry-run / §Roofline markdown tables from results/dryrun."""
+import glob
+import json
+import os
+import sys
+
+RES = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+ARCH_ORDER = ["dbrx-132b", "llama4-scout-17b-a16e", "starcoder2-3b",
+              "gemma2-27b", "llama3-405b", "codeqwen1.5-7b",
+              "seamless-m4t-large-v2", "internvl2-26b", "mamba2-130m",
+              "recurrentgemma-9b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    recs = {}
+    for f in glob.glob(os.path.join(RES, "*.json")):
+        r = json.load(open(f))
+        if r.get("tag"):
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"], r["mode"])] = r
+    return recs
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 0.01:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.3g}s"
+
+
+def dryrun_table(recs):
+    out = ["| arch | shape | 16x16 | 2x16x16 | bytes/dev (GiB) | "
+           "weighted collectives (ag/ar/rs/a2a/cp) | compile |",
+           "|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r1 = recs.get((a, s, "pod16x16", "astra"))
+            r2 = recs.get((a, s, "pod2x16x16", "astra"))
+            if r1 is None:
+                continue
+            if r1["status"] == "skipped":
+                out.append(f"| {a} | {s} | skip | skip | — | — | "
+                           f"{r1['reason'][:40]}… |")
+                continue
+            st1 = "ok" if r1["status"] == "ok" else "ERR"
+            st2 = ("ok" if r2 and r2["status"] == "ok"
+                   else ("ERR" if r2 else "—"))
+            mem = r1.get("memory", {}).get("peak_bytes_per_device", 0) / 2**30
+            w = r1.get("collective_counts_weighted", {})
+            ws = "/".join(str(int(w.get(k, 0))) for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+            out.append(f"| {a} | {s} | {st1} | {st2} | {mem:.1f} | {ws} | "
+                       f"{r1.get('compile_s', 0):.0f}s |")
+    return "\n".join(out)
+
+
+def roofline_table(recs):
+    out = ["| arch | shape | bottleneck | compute | memory | collective | "
+           "cfrac | useful | ASTRA vs SP wire |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "pod16x16", "astra"))
+            if r is None or r["status"] != "ok":
+                if r is not None and r["status"] == "skipped":
+                    out.append(f"| {a} | {s} | — skipped (no sub-quadratic "
+                               f"path) | | | | | | |")
+                continue
+            t = r["roofline"]
+            sp = recs.get((a, s, "pod16x16", "sp"))
+            if sp is not None and sp.get("status") == "ok" and \
+                    r.get("wire_bytes_per_device"):
+                ratio = (sp["wire_bytes_per_device"]
+                         / max(r["wire_bytes_per_device"], 1))
+                spw = f"{ratio:.2f}x"
+            else:
+                spw = "—"
+            out.append(
+                f"| {a} | {s} | **{t['bottleneck']}** | "
+                f"{fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} | "
+                f"{fmt_s(t['collective_s'])} | "
+                f"{t['compute_fraction_of_roofline']:.3f} | "
+                f"{r.get('useful_flops_fraction', 0):.2f} | {spw} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    recs = load()
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table(recs))
+    if which in ("all", "roofline"):
+        print("\n### Roofline (single-pod 16x16, astra mode)\n")
+        print(roofline_table(recs))

@@ -1,0 +1,123 @@
+"""Dry-run profiler: dump one combo's optimized HLO and print the top
+byte/flop/collective contributors, trip-weighted (the §Perf 'profile').
+
+Usage:
+  PYTHONPATH=src python scripts/hlo_top.py --arch recurrentgemma-9b \
+      --shape decode_32k [--fsdp model] [--mode astra] [--top 15]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.roofline import hlo_analysis as H
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mode", default="astra")
+    ap.add_argument("--cache-mode", default="fp")
+    ap.add_argument("--fsdp", default="2d")
+    ap.add_argument("--last-only", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--dump", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPE_BY_NAME[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    bundle = build_step(cfg, shape, mesh, mode=args.mode,
+                        cache_mode=args.cache_mode, fsdp=args.fsdp,
+                        last_only=args.last_only, attn_chunk=args.attn_chunk)
+    with mesh:
+        compiled = jax.jit(
+            bundle.fn, in_shardings=bundle.in_shardings,
+            donate_argnums=bundle.donate_argnums,
+        ).lower(*bundle.abstract_args).compile()
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(text)
+
+    comps, entry = H.parse(text)
+
+    # compute each computation's multiplicity (trips product along the call
+    # graph from the entry)
+    mult = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    for name in order:
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            import re
+            if ins.opcode == "while":
+                mt = H._TRIP_RE.search(ins.attrs)
+                trip = float(mt.group(1)) if mt else 1.0
+                for pat in (r"body=%?([\w\.\-]+)", r"condition=%?([\w\.\-]+)"):
+                    m = re.search(pat, ins.attrs)
+                    if m:
+                        callee = m.group(1)
+                        mult[callee] = mult.get(callee, 0.0) + \
+                            mult[name] * trip
+                        if callee not in seen:
+                            seen.add(callee)
+                            order.append(callee)
+            elif ins.opcode in ("fusion", "call", "custom-call",
+                                "conditional"):
+                import re
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.attrs)
+                if m:
+                    callee = m.group(1)
+                    mult[callee] = mult.get(callee, 0.0) + mult[name]
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+
+    rows = []
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in H._FREE_OPS:
+                continue
+            b = comp.shapes.get(ins.name, 0)
+            for o in ins.operands:
+                b += comp.shapes.get(o, 0)
+            rows.append((b * m, m, name, ins.opcode,
+                         ins.result_seg.strip()[:48],
+                         ins.body[:60]))
+    rows.sort(reverse=True)
+    print(f"\nTOP {args.top} byte contributors (trip-weighted):")
+    for b, m, comp, op, res, body in rows[:args.top]:
+        print(f"  {b/2**30:9.2f} GiB x{m:5.0f}  {op:16s} {res:48s} [{comp[:40]}]")
+
+    crow = [(r[0], r[3], r[4]) for r in rows
+            if any(r[3].startswith(c) for c in H._COLLECTIVES)]
+    print(f"\nCollectives (trip-weighted bytes):")
+    for b, op, res in crow[:args.top]:
+        print(f"  {b/2**30:9.2f} GiB  {op:20s} {res}")
+
+    tot = H.analyze(text)
+    print(f"\ntotals: flops={tot['flops']/1e12:.2f}T "
+          f"bytes={tot['bytes']/2**30:.1f}GiB "
+          f"wire={tot['wire_bytes']/2**30:.2f}GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""SPMD parity checks on 4 forced host devices (run via subprocess from
+tests/test_distributed.py so the main pytest process keeps 1 device).
+
+Each check compares the shard_map runtime path against the single-process
+simulated/global reference.  Exits nonzero on any mismatch.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.configs.base import ASTRAConfig, ShapeSpec
+from repro.core import vq
+from repro.core.astra_block import (
+    astra_kv_attention_sim,
+    astra_kv_attention_spmd,
+    sp_full_attention_spmd,
+)
+from repro.core.mixed_attention import full_attention
+from repro.core.sequence_parallel import MeshContext
+from repro.models import mamba2, model_factory as mf
+from repro.models import transformer as tlm
+from repro.models.context import StepCtx
+
+PASS = []
+
+
+def check(name, a, b, tol=2e-4):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    err = float(np.max(np.abs(a - b)))
+    ok = err <= tol
+    print(f"{'PASS' if ok else 'FAIL'} {name}: max_err={err:.2e}")
+    PASS.append(ok)
+
+
+def mesh_ctx():
+    mesh = jax.make_mesh((4,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    return MeshContext(mesh=mesh, batch_axes=(), seq_axis="model")
+
+
+def check_astra_attention_parity():
+    B, T, H, HKV, HD = 2, 32, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    q = jax.random.normal(ks[0], (B, T, H, HD))
+    k = jax.random.normal(ks[1], (B, T, HKV, HD))
+    v = jax.random.normal(ks[2], (B, T, HKV, HD))
+    astra = ASTRAConfig(groups=4, codebook_size=16, noise_lambda=0.0)
+    spec = vq.VQSpec(HKV * HD, astra.groups, astra.codebook_size)
+    pk, pv = vq.init(ks[3], spec), vq.init(ks[4], spec)
+    sim, _ = astra_kv_attention_sim(q, k, v, pk, pv, astra, num_shards=4,
+                                    causal=True)
+    spmd = astra_kv_attention_spmd(mesh_ctx(), q, k, v, pk["codebook"],
+                                   pv["codebook"], astra, causal=True)
+    check("astra sim vs spmd", sim, spmd)
+
+
+def check_sp_baseline_parity():
+    B, T, H, HKV, HD = 2, 32, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, T, H, HD))
+    k = jax.random.normal(ks[1], (B, T, HKV, HD))
+    v = jax.random.normal(ks[2], (B, T, HKV, HD))
+    pos = jnp.arange(T)
+    ref = full_attention(q, k, v, q_pos=pos, k_pos=pos, causal=True)
+    spmd = sp_full_attention_spmd(mesh_ctx(), q, k, v, causal=True)
+    check("SP baseline vs full attention", ref, spmd)
+
+
+def check_mamba_sharded_scan():
+    cfg = get_config("mamba2-130m").reduced()
+    p = mamba2.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    ctx_local = StepCtx(cfg=cfg, mode="prefill", astra_mode="off")
+    y_ref, _ = mamba2.mamba_forward(p, x, ctx=ctx_local)
+    ctx_spmd = StepCtx(cfg=cfg, mesh=mesh_ctx(), mode="prefill",
+                       astra_mode="off")
+    y_spmd, _ = mamba2.mamba_forward(p, x, ctx=ctx_spmd)
+    check("mamba2 sharded SSD scan", y_ref, y_spmd, tol=5e-4)
+
+
+def check_full_model_spmd():
+    cfg = get_config("starcoder2-3b").reduced()
+    cfg = dataclasses.replace(
+        cfg, astra=dataclasses.replace(cfg.astra, noise_lambda=0.0))
+    params = mf.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg.vocab_size, jnp.int32)
+    ctx_sim = StepCtx(cfg=cfg, mode="prefill", astra_mode="sim",
+                      num_sim_shards=4)
+    logits_sim, _, _ = mf.forward(params, {"tokens": tokens}, ctx=ctx_sim)
+    ctx_spmd = StepCtx(cfg=cfg, mesh=mesh_ctx(), mode="prefill",
+                       astra_mode="spmd")
+    logits_spmd, _, _ = mf.forward(params, {"tokens": tokens}, ctx=ctx_spmd)
+    check("full model sim vs spmd (starcoder2 reduced)", logits_sim,
+          logits_spmd, tol=5e-3)
+
+
+def check_sharded_decode():
+    cfg = get_config("codeqwen1.5-7b").reduced()
+    cfg = dataclasses.replace(
+        cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+    params = mf.init_params(jax.random.PRNGKey(0), cfg)
+    B, max_len = 2, 64
+    ctx_plain = StepCtx(cfg=cfg, mode="decode", astra_mode="off")
+    ctx_shard = StepCtx(cfg=cfg, mesh=mesh_ctx(), mode="decode",
+                        astra_mode="off")
+    token = jnp.asarray([[5], [9]], jnp.int32)
+    lengths = jnp.asarray([3, 17], jnp.int32)
+    caches_a = mf.init_cache(params, cfg, B, max_len, ctx_plain,
+                             dtype=jnp.float32)
+    caches_b = mf.init_cache(params, cfg, B, max_len, ctx_shard,
+                             dtype=jnp.float32)
+    # seed both caches with identical pseudo-random prefill K/V (keyed by
+    # tree path so the two identical structures get identical contents)
+    def seed(caches):
+        def one(path, leaf):
+            if leaf.ndim == 5:  # (R, B, S, H, hd)
+                p = sum(ord(c) for c in jax.tree_util.keystr(path))
+                return jax.random.normal(jax.random.PRNGKey(p), leaf.shape
+                                         ).astype(leaf.dtype)
+            return leaf
+        return jax.tree_util.tree_map_with_path(one, caches)
+
+    caches_a = seed(caches_a)
+    caches_b = seed(caches_b)
+    la, _ = mf.decode_step(params, token, caches_a, lengths, ctx=ctx_plain)
+    lb, _ = mf.decode_step(params, token, caches_b, lengths, ctx=ctx_shard)
+    check("sharded flash-decode merge vs plain decode", la, lb, tol=5e-3)
+
+
+def check_vq_cache_decode_parity():
+    """Sharded + vq cache runs and matches the plain vq-cache decode."""
+    cfg = get_config("llama3-8b").reduced()
+    params = mf.init_params(jax.random.PRNGKey(0), cfg)
+    B, max_len = 2, 64
+    ctx_plain = StepCtx(cfg=cfg, mode="decode", astra_mode="off",
+                        cache_mode="vq")
+    ctx_shard = StepCtx(cfg=cfg, mesh=mesh_ctx(), mode="decode",
+                        astra_mode="off", cache_mode="vq")
+    token = jnp.asarray([[5], [9]], jnp.int32)
+    lengths = jnp.asarray([3, 17], jnp.int32)
+    caches_a = mf.init_cache(params, cfg, B, max_len, ctx_plain,
+                             dtype=jnp.float32)
+    la, _ = mf.decode_step(params, token, caches_a, lengths, ctx=ctx_plain)
+    caches_b = mf.init_cache(params, cfg, B, max_len, ctx_shard,
+                             dtype=jnp.float32)
+    lb, _ = mf.decode_step(params, token, caches_b, lengths, ctx=ctx_shard)
+    check("vq-cache decode plain vs sharded", la, lb, tol=5e-3)
+
+
+def check_moe_shard_map_parity():
+    """Expert-parallel shard_map MoE == local dispatch (same capacity)."""
+    from repro.models import moe as moe_mod
+
+    cfg = get_config("dbrx-132b").reduced()
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    b, t = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, cfg.d_model))
+    y_ref, aux_ref = moe_mod.apply_moe(p, x, cfg, None)
+    ctx = StepCtx(cfg=cfg, mesh=mesh_ctx(), mode="prefill", astra_mode="off")
+    y_spmd, aux_spmd = moe_mod.apply_moe(p, x, cfg, ctx)
+    # capacity semantics differ (global vs per-device), so compare where
+    # no token was dropped: use ample capacity via config override
+    import dataclasses as dc
+
+    cfg2 = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=8.0))
+    y_ref2, _ = moe_mod.apply_moe(p, x, cfg2, None)
+    ctx2 = StepCtx(cfg=cfg2, mesh=mesh_ctx(), mode="prefill",
+                   astra_mode="off")
+    y_spmd2, _ = moe_mod.apply_moe(p, x, cfg2, ctx2)
+    check("moe shard_map vs local (ample capacity)", y_ref2, y_spmd2,
+          tol=5e-4)
+    check("moe aux loss parity", aux_ref, aux_spmd, tol=1e-5)
+
+
+def check_pallas_decode_kernel_parity():
+    """Sharded vq-cache decode via the Pallas flash-decode kernel == the
+    dequantize-everything reference path."""
+    import dataclasses as dc
+
+    cfg = get_config("llama3-8b").reduced()
+    cfg = dataclasses.replace(  # kernel needs groups % kv_heads == 0
+        cfg, astra=dataclasses.replace(cfg.astra, groups=cfg.num_kv_heads))
+    params = mf.init_params(jax.random.PRNGKey(0), cfg)
+    B, max_len = 2, 64
+    token = jnp.asarray([[5], [9]], jnp.int32)
+    lengths = jnp.asarray([3, 17], jnp.int32)
+    outs = {}
+    for use_pallas in (False, True):
+        ctx = StepCtx(cfg=cfg, mesh=mesh_ctx(), mode="decode",
+                      astra_mode="off", cache_mode="vq",
+                      use_pallas_decode=use_pallas)
+        caches = mf.init_cache(params, cfg, B, max_len, ctx,
+                               dtype=jnp.float32)
+        outs[use_pallas], _ = mf.decode_step(params, token, caches, lengths,
+                                             ctx=ctx)
+    check("pallas flash-decode kernel vs vq reference", outs[False],
+          outs[True], tol=5e-4)
+
+
+if __name__ == "__main__":
+    assert len(jax.devices()) == 4, jax.devices()
+    check_pallas_decode_kernel_parity()
+    check_moe_shard_map_parity()
+    check_astra_attention_parity()
+    check_sp_baseline_parity()
+    check_mamba_sharded_scan()
+    check_full_model_spmd()
+    check_sharded_decode()
+    check_vq_cache_decode_parity()
+    if not all(PASS):
+        sys.exit(1)
+    print("ALL SPMD CHECKS OK")

@@ -1,0 +1,46 @@
+"""Config registry: ``get_config("dbrx-132b")`` etc."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    ASTRAConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeSpec,
+    SHAPES,
+    SHAPE_BY_NAME,
+)
+
+_MODULES = {
+    "dbrx-132b": "dbrx_132b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "starcoder2-3b": "starcoder2_3b",
+    "gemma2-27b": "gemma2_27b",
+    "llama3-405b": "llama3_405b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "internvl2-26b": "internvl2_26b",
+    "mamba2-130m": "mamba2_130m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    # the paper's own models
+    "vit-base": "vit_base",
+    "gpt2-small": "gpt2_small",
+    "gpt2-medium": "gpt2_medium",
+    "llama3-8b": "llama3_8b",
+}
+
+ASSIGNED: List[str] = list(_MODULES)[:10]
+PAPER_MODELS: List[str] = list(_MODULES)[10:]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in _MODULES}

@@ -1,0 +1,238 @@
+"""Config system: model/architecture configs, ASTRA settings, shape specs.
+
+Every assigned architecture gets one module in ``repro.configs`` exporting a
+``CONFIG`` built from these dataclasses.  ``reduced()`` produces the smoke-test
+variant (<=2 layers, d_model<=512, <=4 experts) of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# ASTRA (the paper's technique)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ASTRAConfig:
+    """Settings for ASTRA mixed-precision sequence-parallel attention.
+
+    Paper defaults: codebook_size K=1024 (10 bits/code), groups G in {1,16,32},
+    noise magnitude lambda=1.0, commitment loss beta in {1e-4, 2e-4, 5e-4}.
+    """
+
+    enabled: bool = True
+    groups: int = 1
+    codebook_size: int = 1024
+    noise_lambda: float = 1.0
+    commit_beta: float = 5e-4
+    # "kv": quantize K and V separately (2 codebooks/layer; Llama-3 setting,
+    #       Appendix G uses C=2).  "input": quantize the block input X once and
+    #       derive K-hat/V-hat by projection (ViT / GPT2 setting).
+    quantize_mode: str = "kv"
+    distributed_cls: bool = True
+    ema_decay: float = 0.99
+    # Beyond-paper: pack codes into the narrowest integer dtype that holds
+    # log2(K) bits before the all-gather (int32 -> uint8/uint16).
+    pack_codes: bool = True
+
+    @property
+    def bits_per_code(self) -> int:
+        k, b = self.codebook_size, 0
+        while (1 << b) < k:
+            b += 1
+        return b
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    num_shared_experts: int = 0  # llama4-style always-on shared expert
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    # dense | moe | ssm | hybrid | encdec | vlm | vit
+    arch_type: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    citation: str = ""
+
+    moe: Optional[MoEConfig] = None
+
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_width: int = 4
+
+    # attention pattern
+    window_size: int = 0  # 0 => global attention
+    #   global        : every layer global attention
+    #   local_global  : alternate SWA / global (gemma2)
+    #   rg            : (rec, rec, local-attn) repeating (recurrentgemma)
+    #   nope_interval : drop RoPE every k-th layer (llama4 iRoPE); int stored
+    layer_pattern: str = "global"
+    nope_interval: int = 0
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    rope_theta: float = 10000.0
+    use_cls_token: bool = False
+    num_classes: int = 0  # classification head (ViT)
+    tie_embeddings: bool = False
+
+    # encoder-decoder (seamless): encoder layer count; decoder uses num_layers
+    encoder_layers: int = 0
+    # modality frontend stub: "" | "audio" | "vision"
+    frontend: str = ""
+    frontend_dim: int = 0  # embedding dim produced by the (stubbed) frontend
+    frontend_tokens_ratio: float = 0.0  # frontend tokens per text token of seq
+
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    activation: str = "swiglu"  # swiglu | geglu | gelu
+    post_norm: bool = False  # gemma2 pre+post sandwich norms
+    qk_norm: bool = False
+
+    astra: ASTRAConfig = dataclasses.field(default_factory=ASTRAConfig)
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    # whether long_500k decode is runnable (sub-quadratic path exists)
+    supports_long_context: bool = False
+    max_seq_len: int = 1 << 20
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def d_kv(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Rough parameter count (embeddings + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.arch_type == "ssm":
+            d_in = self.ssm_expand * d
+            nh = d_in // self.ssm_head_dim
+            per = (
+                d * (2 * d_in + 2 * self.ssm_state * (d_in // self.ssm_head_dim and 1) * 0 + nh)
+                + d * 2 * d_in  # in_proj x/z
+                + d_in * d  # out_proj
+                + 2 * d * self.ssm_state  # B, C projections (grouped, approx)
+            )
+            return emb + self.num_layers * per
+        attn = d * (self.num_heads * self.head_dim) + 2 * d * self.d_kv + self.num_heads * self.head_dim * d
+        if self.activation in ("swiglu", "geglu"):
+            mlp_dense = 3 * d * f
+        else:
+            mlp_dense = 2 * d * f
+        if self.moe is not None:
+            mlp = self.moe.num_experts * mlp_dense + d * self.moe.num_experts
+            mlp += self.moe.num_shared_experts * mlp_dense
+        else:
+            mlp = mlp_dense
+        layers = self.num_layers + self.encoder_layers
+        per = attn + mlp + 4 * d
+        total = emb + layers * per
+        if self.encoder_layers:
+            total += self.num_layers * (attn + 2 * d)  # cross-attention
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        mlp_dense = (3 if self.activation in ("swiglu", "geglu") else 2) * d * f
+        dense_like = self.param_count() - self.num_layers * (
+            self.moe.num_experts - self.moe.top_k - self.moe.num_shared_experts
+        ) * mlp_dense
+        return dense_like
+
+    # -- smoke-test variant --------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """<=2 layers, d_model<=512, <=4 experts: same family, CPU-runnable."""
+        d = min(self.d_model, 128)
+        heads = min(self.num_heads, 4)
+        if heads:
+            kv = max(1, min(self.num_kv_heads, heads))
+            while heads % kv:
+                kv -= 1
+            hd = max(8, d // heads)
+        else:  # attention-free (ssm)
+            kv, hd = 0, 0
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe,
+                num_experts=min(4, self.moe.num_experts),
+                top_k=min(2, self.moe.top_k),
+                num_shared_experts=min(1, self.moe.num_shared_experts),
+            )
+        astra = dataclasses.replace(
+            self.astra, groups=min(4, self.astra.groups), codebook_size=64
+        )
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=2,
+            encoder_layers=min(2, self.encoder_layers),
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 4 * d) or 0,
+            vocab_size=min(self.vocab_size, 512),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_chunk=32,
+            nope_interval=min(2, self.nope_interval),
+            window_size=min(self.window_size, 64) if self.window_size else 0,
+            frontend_dim=min(self.frontend_dim, 64) if self.frontend_dim else 0,
+            moe=moe,
+            astra=astra,
+            num_classes=min(self.num_classes, 10) if self.num_classes else 0,
+            dtype="float32",
+            max_seq_len=4096,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_4k", 4_096, 256, "train"),
+    ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    ShapeSpec("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}

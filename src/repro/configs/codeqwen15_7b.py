@@ -1,0 +1,19 @@
+"""CodeQwen1.5-7B: qwen1.5 arch (MHA kv=32, bias-in-qkv). [hf:Qwen/CodeQwen1.5-7B]"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=13440,
+    vocab_size=92416,
+    citation="hf:Qwen/CodeQwen1.5-7B",
+    rope_theta=1000000.0,
+    norm="rmsnorm",
+    activation="swiglu",
+    astra=ASTRAConfig(enabled=True, groups=16, quantize_mode="kv"),
+    supports_long_context=False,
+)

@@ -1,0 +1,20 @@
+"""DBRX-132B: fine-grained MoE, 16 experts top-4. [hf:databricks/dbrx-base]"""
+from repro.configs.base import ASTRAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    arch_type="moe",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    citation="hf:databricks/dbrx-base",
+    moe=MoEConfig(num_experts=16, top_k=4),
+    rope_theta=500000.0,
+    norm="layernorm",
+    activation="swiglu",
+    astra=ASTRAConfig(enabled=True, groups=16, quantize_mode="kv"),
+    supports_long_context=False,  # full attention; long_500k skipped (DESIGN.md)
+)

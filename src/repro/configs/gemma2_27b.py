@@ -1,0 +1,28 @@
+"""Gemma2-27B: alternating local(SWA 4096)/global attention, logit softcaps.
+[arXiv:2408.00118]"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    arch_type="dense",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    d_ff=36864,
+    vocab_size=256000,
+    head_dim=128,
+    citation="arXiv:2408.00118",
+    window_size=4096,
+    layer_pattern="local_global",
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    norm="rmsnorm",
+    activation="geglu",
+    post_norm=True,
+    tie_embeddings=True,
+    astra=ASTRAConfig(enabled=True, groups=16, quantize_mode="kv"),
+    # half the layers are SWA; global layers decode linearly against a
+    # sequence-sharded cache => long_500k is runnable (DESIGN.md §6).
+    supports_long_context=True,
+)

@@ -1,0 +1,21 @@
+"""GPT2-Medium (paper's own): 24L d=1024 16H. [Radford et al. 2019]"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gpt2-medium",
+    arch_type="dense",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=50257,
+    citation="Radford et al. 2019",
+    rope_theta=0.0,
+    norm="layernorm",
+    activation="gelu",
+    tie_embeddings=True,
+    astra=ASTRAConfig(enabled=True, groups=1, quantize_mode="input"),
+    supports_long_context=False,
+    max_seq_len=4096,
+)

@@ -1,0 +1,21 @@
+"""GPT2-Small (paper's own decoder model): 12L d=768 12H. [Radford et al. 2019]"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gpt2-small",
+    arch_type="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=50257,
+    citation="Radford et al. 2019",
+    rope_theta=0.0,  # learned absolute positions in GPT2; we use RoPE-off + abs emb
+    norm="layernorm",
+    activation="gelu",
+    tie_embeddings=True,
+    astra=ASTRAConfig(enabled=True, groups=1, quantize_mode="input"),
+    supports_long_context=False,
+    max_seq_len=4096,
+)

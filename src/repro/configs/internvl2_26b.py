@@ -1,0 +1,28 @@
+"""InternVL2-26B: InternViT-6B (stubbed) + InternLM2-20B backbone.
+[arXiv:2404.16821]
+
+Vision frontend is a stub per the carve-out: ``input_specs()`` provides
+precomputed patch embeddings (batch, n_patches, frontend_dim); we implement
+the projector MLP + the language transformer.
+"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    arch_type="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    citation="arXiv:2404.16821",
+    frontend="vision",
+    frontend_dim=3200,  # InternViT-6B hidden size
+    frontend_tokens_ratio=0.0625,  # 256 vision tokens per 4096-token window
+    rope_theta=1000000.0,
+    norm="rmsnorm",
+    activation="swiglu",
+    astra=ASTRAConfig(enabled=True, groups=16, quantize_mode="kv"),
+    supports_long_context=False,
+)

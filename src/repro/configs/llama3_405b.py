@@ -1,0 +1,19 @@
+"""Llama-3-405B: dense GQA(kv=8), 128k vocab. [arXiv:2407.21783]"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    arch_type="dense",
+    num_layers=126,
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    citation="arXiv:2407.21783",
+    rope_theta=500000.0,
+    norm="rmsnorm",
+    activation="swiglu",
+    astra=ASTRAConfig(enabled=True, groups=32, quantize_mode="kv"),
+    supports_long_context=False,
+)

@@ -1,0 +1,20 @@
+"""Llama-3-8B (paper §4.5 scalability model). [arXiv:2407.21783]"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    citation="arXiv:2407.21783",
+    rope_theta=500000.0,
+    norm="rmsnorm",
+    activation="swiglu",
+    # paper Appendix G: C=2 codebooks/layer (K and V quantized separately)
+    astra=ASTRAConfig(enabled=True, groups=1, quantize_mode="kv"),
+    supports_long_context=False,
+)

@@ -1,0 +1,23 @@
+"""Llama-4-Scout 17B-A16E: MoE 16 experts top-1 + shared expert, iRoPE.
+[hf:meta-llama/Llama-4-Scout-17B-16E]"""
+from repro.configs.base import ASTRAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    arch_type="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    citation="hf:meta-llama/Llama-4-Scout-17B-16E",
+    moe=MoEConfig(num_experts=16, top_k=1, num_shared_experts=1),
+    rope_theta=500000.0,
+    nope_interval=4,  # iRoPE: every 4th layer attends without RoPE
+    norm="rmsnorm",
+    activation="swiglu",
+    qk_norm=True,
+    astra=ASTRAConfig(enabled=True, groups=16, quantize_mode="kv"),
+    supports_long_context=False,  # full attention here; long_500k skipped
+)

@@ -1,0 +1,29 @@
+"""Mamba2-130M: attention-free SSD (state-space duality). [arXiv:2405.21060]
+
+ASTRA's mixed-precision attention is inapplicable (no K/V exchange exists);
+implemented WITHOUT the technique — see DESIGN.md §Arch-applicability.
+Sequence parallelism for prefill uses a cross-device associative scan on the
+SSD chunk carries.
+"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    arch_type="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,  # attention-free
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    citation="arXiv:2405.21060",
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    conv_width=4,
+    norm="rmsnorm",
+    tie_embeddings=True,
+    astra=ASTRAConfig(enabled=False),  # inapplicable: attention-free
+    supports_long_context=True,  # O(1) decode state
+)

@@ -1,0 +1,32 @@
+"""RecurrentGemma-9B: RG-LRU + local attention, 2:1 pattern. [arXiv:2402.19427]
+
+Pattern: (recurrent, recurrent, local-attention) repeating.  The local
+attention window (2048) never crosses a sequence shard at the production
+shapes, so no cross-device K/V exchange exists and ASTRA's mixed-precision
+attention has nothing to compress (DESIGN.md §Arch-applicability); the ASTRA
+machinery is available for the attention layers but defaults off.
+"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    arch_type="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,  # MQA
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    citation="arXiv:2402.19427",
+    window_size=2048,
+    layer_pattern="rg",
+    ssm_state=0,
+    ssm_expand=1,  # RG-LRU width = d_model (lru_width 4096)
+    conv_width=4,
+    norm="rmsnorm",
+    activation="geglu",
+    tie_embeddings=True,
+    astra=ASTRAConfig(enabled=False, groups=16, quantize_mode="kv"),
+    supports_long_context=True,  # window cache + O(1) recurrent state
+)

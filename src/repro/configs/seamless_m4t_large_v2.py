@@ -1,0 +1,29 @@
+"""SeamlessM4T-Large-v2: enc-dec multimodal backbone (audio frontend stubbed).
+[arXiv:2308.11596]
+
+Per the carve-out, the mel-spectrogram + conv feature extractor is a stub:
+``input_specs()`` provides precomputed frame embeddings of shape
+(batch, seq//8, d_model) for the encoder; we implement the enc-dec transformer.
+"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    arch_type="encdec",
+    num_layers=24,  # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    citation="arXiv:2308.11596",
+    frontend="audio",
+    frontend_dim=1024,
+    frontend_tokens_ratio=0.125,  # conv frontend downsamples ~8x
+    norm="layernorm",
+    activation="gelu",
+    rope_theta=10000.0,
+    astra=ASTRAConfig(enabled=True, groups=16, quantize_mode="kv"),
+    supports_long_context=False,
+)

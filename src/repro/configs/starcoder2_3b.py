@@ -1,0 +1,20 @@
+"""StarCoder2-3B: dense GQA(kv=2) decoder with RoPE. [arXiv:2402.19173]"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    arch_type="dense",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    d_ff=12288,
+    vocab_size=49152,
+    citation="arXiv:2402.19173",
+    rope_theta=999999.0,
+    norm="layernorm",
+    activation="gelu",
+    tie_embeddings=True,
+    astra=ASTRAConfig(enabled=True, groups=1, quantize_mode="kv"),
+    supports_long_context=False,
+)

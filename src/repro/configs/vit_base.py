@@ -1,0 +1,25 @@
+"""ViT-Base (the paper's own encoder model): 12L d=768 12H, class token.
+[arXiv:2010.11929; paper Table 1]"""
+from repro.configs.base import ASTRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="vit-base",
+    arch_type="vit",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=0,
+    num_classes=1000,
+    citation="arXiv:2010.11929",
+    use_cls_token=True,
+    frontend="vision",
+    frontend_dim=768,
+    norm="layernorm",
+    activation="gelu",
+    # the paper's ViT/GPT2 setting quantizes the block INPUT once (C=1)
+    astra=ASTRAConfig(enabled=True, groups=1, quantize_mode="input",
+                      distributed_cls=True),
+    supports_long_context=False,
+)

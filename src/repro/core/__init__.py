@@ -1,0 +1,11 @@
+"""ASTRA core: VQ, NAVQ, mixed-precision attention, distributed class tokens,
+sequence-parallel exchange, analytic communication model."""
+from repro.core import (  # noqa: F401
+    astra_block,
+    class_token,
+    comm_model,
+    mixed_attention,
+    navq,
+    sequence_parallel,
+    vq,
+)

@@ -1,0 +1,213 @@
+"""ASTRA attention integration: sim (training) and SPMD (runtime) paths.
+
+``quantize_mode="kv"`` (Llama setting, Appendix G C=2): K and V are
+quantized separately after RoPE; receivers need only the two codebooks.
+``quantize_mode="input"`` (ViT/GPT2 setting, C=1): the block input X is
+quantized once and K-hat/V-hat derived by projection — handled in the model
+block via ``quantize_with_navq`` since it needs the projection weights.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ASTRAConfig
+from repro.core import navq, vq
+from repro.core.mixed_attention import (
+    blocked_device_mixed_attention,
+    device_mixed_attention,
+    full_attention,
+    mixed_attention_sim,
+)
+from repro.core.sequence_parallel import MeshContext, exchange_codes, shard_offset
+
+
+# ---------------------------------------------------------------------------
+# Shared helper: quantize + straight-through + NAVQ noise
+# ---------------------------------------------------------------------------
+
+
+def quantize_with_navq(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    spec: vq.VQSpec,
+    *,
+    noise_lambda: float = 0.0,
+    train: bool = False,
+    rng: Optional[jax.Array] = None,
+    stats: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (x_hat, codes, commit_sum).  In training, x_hat carries the
+    straight-through gradient and NAVQ noise; at inference it is the plain
+    deterministic dequantization (paper §3.3)."""
+    x_hat, codes, commit = vq.quantize_st(params, x, spec)
+    if train and noise_lambda > 0.0 and rng is not None and stats is not None:
+        x_hat = navq.add_noise(rng, x_hat, stats, noise_lambda)
+    return x_hat, codes, commit
+
+
+# ---------------------------------------------------------------------------
+# Sim path (global view; used by the trainer and smoke tests)
+# ---------------------------------------------------------------------------
+
+
+def astra_kv_attention_sim(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    vq_params_k: Dict[str, jax.Array],
+    vq_params_v: Dict[str, jax.Array],
+    astra: ASTRAConfig,
+    *,
+    num_shards: int,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    train: bool = False,
+    rng: Optional[jax.Array] = None,
+    navq_stats_k: Optional[Dict[str, jax.Array]] = None,
+    navq_stats_v: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mixed-precision attention, quantize_mode="kv", global simulated view."""
+    b, t, hkv, hd = k.shape
+    spec = vq.VQSpec(hkv * hd, astra.groups, astra.codebook_size)
+    rk, rv = (jax.random.split(rng) if rng is not None else (None, None))
+
+    k_flat, v_flat = k.reshape(b, t, -1), v.reshape(b, t, -1)
+    k_hat_f, k_codes, commit_k = quantize_with_navq(
+        vq_params_k, k_flat, spec, noise_lambda=astra.noise_lambda,
+        train=train, rng=rk, stats=navq_stats_k)
+    v_hat_f, v_codes, commit_v = quantize_with_navq(
+        vq_params_v, v_flat, spec, noise_lambda=astra.noise_lambda,
+        train=train, rng=rv, stats=navq_stats_v)
+    k_hat = k_hat_f.reshape(b, t, hkv, hd)
+    v_hat = v_hat_f.reshape(b, t, hkv, hd)
+
+    out = mixed_attention_sim(
+        q, k, v, k_hat, v_hat, num_shards=num_shards,
+        causal=causal, window=window, softcap=softcap)
+    aux = {
+        "commit": commit_k + commit_v,
+        "k_codes": k_codes,
+        "v_codes": v_codes,
+        # residuals for the NAVQ EMA statistics (stop-grad views)
+        "k_pair": (jax.lax.stop_gradient(k_flat), jax.lax.stop_gradient(k_hat_f)),
+        "v_pair": (jax.lax.stop_gradient(v_flat), jax.lax.stop_gradient(v_hat_f)),
+    }
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# SPMD path (inside pjit; shard_map over the sequence axis)
+# ---------------------------------------------------------------------------
+
+
+def astra_kv_attention_spmd(
+    ctx: MeshContext,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    codebook_k: jax.Array,
+    codebook_v: jax.Array,
+    astra: ASTRAConfig,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    neighbor_window_exchange: bool = False,
+    chunk: int = 0,
+) -> jax.Array:
+    """Runtime mixed-precision attention over a sequence-sharded mesh axis.
+
+    q/k/v are global (pjit-view) arrays of shape (B, T, H(.kv), hd) sharded
+    P(batch_axes, seq_axis, None, None).  The only cross-device traffic is
+    the all-gather of packed VQ codes (plus, for SWA layers with
+    ``neighbor_window_exchange``, a ring exchange limited to the shards the
+    window can reach — a beyond-paper collective-schedule optimisation).
+    """
+    if ctx.seq_axis is None or ctx.mesh is None:
+        raise ValueError("SPMD path requires a sequence-sharded MeshContext")
+    b, t, hkv, hd = k.shape
+    spec = vq.VQSpec(hkv * hd, astra.groups, astra.codebook_size)
+    axis = ctx.seq_axis
+    bspec = ctx.batch_axes if ctx.batch_axes else None
+
+    def body(q_l, k_l, v_l, cb_k, cb_v):
+        bl, tl = k_l.shape[0], k_l.shape[1]
+        pk, pv = {"codebook": cb_k}, {"codebook": cb_v}
+        k_codes = vq.encode(pk, k_l.reshape(bl, tl, -1), spec)
+        v_codes = vq.encode(pv, v_l.reshape(bl, tl, -1), spec)
+        if astra.pack_codes:
+            k_codes = vq.pack_codes(k_codes, spec)
+            v_codes = vq.pack_codes(v_codes, spec)
+        kc = vq.unpack_codes(exchange_codes(k_codes, axis))
+        vc = vq.unpack_codes(exchange_codes(v_codes, axis))
+        k_hat = vq.decode(pk, kc, spec).reshape(bl, t, hkv, hd)
+        v_hat = vq.decode(pv, vc, spec).reshape(bl, t, hkv, hd)
+        off = shard_offset(axis, tl)
+        if chunk:
+            return blocked_device_mixed_attention(
+                q_l, k_l, v_l, k_hat, v_hat, off, chunk=chunk,
+                causal=causal, window=window, softcap=softcap)
+        return device_mixed_attention(
+            q_l, k_l, v_l, k_hat, v_hat, off,
+            causal=causal, window=window, softcap=softcap)
+
+    qspec = P(bspec, axis, None, None)
+    return jax.shard_map(
+        body,
+        mesh=ctx.mesh,
+        in_specs=(qspec, qspec, qspec, P(), P()),
+        out_specs=qspec,
+        check_vma=False,
+    )(q, k, v, codebook_k, codebook_v)
+
+
+def sp_full_attention_spmd(
+    ctx: MeshContext,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    chunk: int = 0,
+) -> jax.Array:
+    """Baseline sequence parallelism (Voltage-style): all-gather the
+    FULL-PRECISION K/V over the sequence axis.  Numerically exact; used when
+    ASTRA is disabled and as the paper's SP baseline for roofline
+    comparisons."""
+    if ctx.seq_axis is None or ctx.mesh is None:
+        raise ValueError("SPMD path requires a sequence-sharded MeshContext")
+    t = k.shape[1]
+    axis = ctx.seq_axis
+    bspec = ctx.batch_axes if ctx.batch_axes else None
+
+    def body(q_l, k_l, v_l):
+        tl = q_l.shape[1]
+        k_full = jax.lax.all_gather(k_l, axis, axis=1, tiled=True)
+        v_full = jax.lax.all_gather(v_l, axis, axis=1, tiled=True)
+        off = shard_offset(axis, tl)
+        if chunk:
+            # blocked path: splice is a no-op (k_full already exact)
+            return blocked_device_mixed_attention(
+                q_l, k_l, v_l, k_full, v_full, off, chunk=chunk,
+                causal=causal, window=window, softcap=softcap)
+        q_pos = off + jnp.arange(tl)
+        k_pos = jnp.arange(t)
+        return full_attention(
+            q_l, k_full, v_full, q_pos=q_pos, k_pos=k_pos,
+            causal=causal, window=window, softcap=softcap)
+
+    qspec = P(bspec, axis, None, None)
+    return jax.shard_map(
+        body,
+        mesh=ctx.mesh,
+        in_specs=(qspec, qspec, qspec),
+        out_specs=qspec,
+        check_vma=False,
+    )(q, k, v)

@@ -1,0 +1,68 @@
+"""Distributed Class Tokens (paper §3.3, Theorem 3.2).
+
+Each device holds its own CLS copy which attends to (its own CLS, local
+full-precision tokens, vector-quantized remote tokens); content tokens on a
+device likewise see their local CLS in full precision.  At the end of the
+network the N CLS outputs are mean-pooled (1/N variance reduction).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mixed_attention import device_mixed_attention
+
+
+def vit_mixed_attention_sim(
+    cls_q: jax.Array,
+    cls_k: jax.Array,
+    cls_v: jax.Array,
+    q: jax.Array,
+    k_fp: jax.Array,
+    v_fp: jax.Array,
+    k_hat: jax.Array,
+    v_hat: jax.Array,
+    *,
+    num_shards: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Bidirectional ViT mixed attention with distributed class tokens.
+
+    cls_*: (B, N, H, hd) — per-device class-token projections.
+    q/k/v/k_hat/v_hat: (B, T, H, hd) content-token projections (global order).
+    Returns (cls_out (B, N, H, hd), content_out (B, T, H, hd)).
+    Simulates the N devices with a vmap over shards.
+    """
+    b, t, h, hd = q.shape
+    n = num_shards
+    tl = t // n
+    offs = jnp.arange(n) * tl
+
+    def shard_reshape(x):
+        return x.reshape(b, n, tl, h, hd).swapaxes(0, 1)  # (N, B, tl, H, hd)
+
+    q_s, k_s, v_s = map(shard_reshape, (q, k_fp, v_fp))
+    cls_q_s = cls_q.swapaxes(0, 1)[:, :, None]  # (N, B, 1, H, hd)
+    cls_k_s = cls_k.swapaxes(0, 1)[:, :, None]
+    cls_v_s = cls_v.swapaxes(0, 1)[:, :, None]
+
+    def per_device(q_i, k_i, v_i, cq_i, ck_i, cv_i, off):
+        q_all = jnp.concatenate([cq_i, q_i], axis=1)  # (B, 1+tl, H, hd)
+        out = device_mixed_attention(
+            q_all, k_i, v_i, k_hat, v_hat, off,
+            causal=False, extra_kv=(ck_i, cv_i))
+        return out[:, :1], out[:, 1:]
+
+    cls_out, content_out = jax.vmap(per_device, in_axes=(0, 0, 0, 0, 0, 0, 0))(
+        q_s, k_s, v_s, cls_q_s, cls_k_s, cls_v_s, offs
+    )
+    cls_out = cls_out[:, :, 0].swapaxes(0, 1)  # (B, N, H, hd)
+    content_out = content_out.swapaxes(0, 1).reshape(b, t, h, hd)
+    return cls_out, content_out
+
+
+def pool_class_tokens(cls_emb: jax.Array) -> jax.Array:
+    """Aggregate the N distributed class-token outputs (B, N, D) -> (B, D)
+    by mean pooling (paper §3.1)."""
+    return jnp.mean(cls_emb, axis=1)

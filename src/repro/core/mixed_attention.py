@@ -1,0 +1,317 @@
+"""Mixed-Precision Attention (paper §3.2, eq. 1).
+
+Each query attends to a hybrid key/value set: full-precision K/V for tokens
+local to the query's device, vector-quantized K-hat/V-hat for non-local
+tokens.  Two equivalent formulations are provided:
+
+* ``mixed_attention_sim`` — the *global simulated* view used for training and
+  single-process evaluation (this is exactly how the paper trains in
+  PyTorch): both score matrices are computed and combined with the
+  block-diagonal locality mask M of eq. (1).  Differentiable.
+
+* ``device_mixed_attention`` — the *per-device* runtime view used inside
+  ``shard_map``: the device assembles K_eff by splicing its local FP K into
+  the globally dequantized K-hat and runs one attention.  Mathematically
+  identical (tests assert parity), but with a single score matmul.
+
+Supports GQA, causal masks on global positions, sliding windows, gemma2-style
+logit soft-capping, and extra full-precision tokens (distributed class
+tokens prepend one FP row/col per device).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, scale: float) -> jax.Array:
+    """q: (B, Tq, H, hd), k: (B, Tk, Hkv, hd) -> (B, H, Tq, Tk).
+
+    Operands stay in their storage dtype (bf16 on the pod) with fp32
+    accumulation via ``preferred_element_type`` — exactly what the MXU does
+    natively.  Casting the operands to fp32 first would materialise a full
+    fp32 copy of the KV cache in HBM every step (§Perf pair-B iteration 2:
+    -40%% decode memory term)."""
+    b, tq, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, tq, hkv, rep, hd)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    return (s * scale).reshape(b, h, tq, k.shape[1])
+
+
+def _gqa_combine(w: jax.Array, v: jax.Array) -> jax.Array:
+    """w: (B, H, Tq, Tk) fp32, v: (B, Tk, Hkv, hd) -> (B, Tq, H, hd)."""
+    b, h, tq, tk = w.shape
+    hkv = v.shape[2]
+    rep = h // hkv
+    wg = w.reshape(b, hkv, rep, tq, tk)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", wg.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, tq, h, v.shape[-1])
+
+
+def make_mask(
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    k_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Boolean (.., Tq, Tk) mask of allowed attention edges."""
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window and window > 0:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    if k_valid is not None:
+        m &= k_valid[None, :]
+    return m
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    k_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reference full-precision attention (the non-ASTRA baseline)."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s = _softcap(_gqa_scores(q, k, scale), softcap)
+    mask = make_mask(q_pos, k_pos, causal=causal, window=window, k_valid=k_valid)
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return _gqa_combine(w, v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Global simulated view (training)
+# ---------------------------------------------------------------------------
+
+
+def mixed_attention_sim(
+    q: jax.Array,
+    k_fp: jax.Array,
+    v_fp: jax.Array,
+    k_hat: jax.Array,
+    v_hat: jax.Array,
+    *,
+    num_shards: int,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    shard_bounds: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Eq. (1) with the locality mask M.
+
+    q/k/v: (B, T, H(.kv), hd) in the *global* token order; queries in shard i
+    use full-precision scores/values against keys in shard i and quantized
+    ones elsewhere.  ``shard_bounds`` optionally gives uneven shard start
+    offsets (heterogeneous devices, Appendix D), shape (num_shards + 1,).
+    """
+    t = q.shape[1]
+    t_k = k_fp.shape[1]
+    pos = jnp.arange(t)
+    pos_k = jnp.arange(t_k)
+    if shard_bounds is None:
+        shard_q = pos * num_shards // t
+        shard_k = pos_k * num_shards // t_k  # cross-attn: co-resident shards
+    else:
+        shard_q = jnp.searchsorted(shard_bounds, pos, side="right") - 1
+        shard_k = shard_q if t == t_k else pos_k * num_shards // t_k
+    local = shard_q[:, None] == shard_k[None, :]  # same-device mask M
+
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s_fp = _softcap(_gqa_scores(q, k_fp, scale), softcap)
+    s_hat = _softcap(_gqa_scores(q, k_hat, scale), softcap)
+    s = jnp.where(local, s_fp, s_hat)
+    mask = make_mask(pos, pos_k, causal=causal and t == t_k, window=window)
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = _gqa_combine(jnp.where(local, w, 0.0), v_fp) + _gqa_combine(
+        jnp.where(local, 0.0, w), v_hat
+    )
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-device runtime view (shard_map body)
+# ---------------------------------------------------------------------------
+
+
+def splice_local(
+    x_hat_full: jax.Array, x_local: jax.Array, offset: jax.Array
+) -> jax.Array:
+    """Replace the [offset : offset+T_loc] slice of the dequantized global
+    tensor with the device's full-precision local tensor (axis 1)."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        x_hat_full, x_local.astype(x_hat_full.dtype), offset, axis=1
+    )
+
+
+def device_mixed_attention(
+    q_local: jax.Array,
+    k_local: jax.Array,
+    v_local: jax.Array,
+    k_hat_full: jax.Array,
+    v_hat_full: jax.Array,
+    offset: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    extra_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> jax.Array:
+    """One device's mixed-precision attention.
+
+    q_local/k_local/v_local: (B, T_loc, ...) for this shard;
+    k_hat_full/v_hat_full: (B, T, ...) dequantized for the whole sequence;
+    offset: this shard's global start position.
+    extra_kv: optional (k, v) of full-precision prefix tokens (distributed
+    class token) prepended outside the positional masking.
+    """
+    t = k_hat_full.shape[1]
+    t_loc = q_local.shape[1]
+    k_eff = splice_local(k_hat_full, k_local, offset)
+    v_eff = splice_local(v_hat_full, v_local, offset)
+    q_pos = offset + jnp.arange(t_loc)
+    k_pos = jnp.arange(t)
+
+    if extra_kv is not None:
+        ek, ev = extra_kv
+        n_extra = ek.shape[1]
+        k_eff = jnp.concatenate([ek.astype(k_eff.dtype), k_eff], axis=1)
+        v_eff = jnp.concatenate([ev.astype(v_eff.dtype), v_eff], axis=1)
+        # extra tokens sit "before" every position and are never masked out
+        k_pos = jnp.concatenate([jnp.full((n_extra,), -1), k_pos])
+
+    scale = 1.0 / jnp.sqrt(q_local.shape[-1]).astype(jnp.float32)
+    s = _softcap(_gqa_scores(q_local, k_eff, scale), softcap)
+    mask = make_mask(q_pos, k_pos, causal=causal, window=window)
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return _gqa_combine(w, v_eff).astype(q_local.dtype)
+
+
+def blocked_device_mixed_attention(
+    q_local: jax.Array,
+    k_local: jax.Array,
+    v_local: jax.Array,
+    k_hat_full: jax.Array,
+    v_hat_full: jax.Array,
+    offset: jax.Array,
+    *,
+    chunk: int,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Flash-style blocked version of ``device_mixed_attention`` (§Perf).
+
+    The unblocked path materialises the (B, H, T_loc, T) fp32 score matrix
+    through a ~6-op masked-softmax chain — the dominant HBM term for every
+    attention arch at 32k context.  This version scans KV chunks with an
+    online softmax so only (B, H, T_loc, chunk) is ever live; it is the
+    pure-JAX mirror of the Pallas ``mixed_flash_attention`` kernel (which
+    additionally dequantizes VQ codes in VMEM on the TPU target).
+    """
+    t = k_hat_full.shape[1]
+    t_loc = q_local.shape[1]
+    b, _, h, hd = q_local.shape
+    hkv = k_local.shape[2]
+    c = min(chunk, t)
+    if t % c:
+        return device_mixed_attention(
+            q_local, k_local, v_local, k_hat_full, v_hat_full, offset,
+            causal=causal, window=window, softcap=softcap)
+    nc = t // c
+
+    k_eff = splice_local(k_hat_full, k_local, offset)
+    v_eff = splice_local(v_hat_full, v_local, offset)
+    kc = jnp.moveaxis(k_eff.reshape(b, nc, c, hkv, hd), 1, 0)
+    vc = jnp.moveaxis(v_eff.reshape(b, nc, c, hkv, hd), 1, 0)
+    q_pos = offset + jnp.arange(t_loc)
+    scale = 1.0 / jnp.sqrt(q_local.shape[-1]).astype(jnp.float32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, ci = xs
+        s = _softcap(_gqa_scores(q_local, k_i, scale), softcap)
+        k_pos = ci * c + jnp.arange(c)
+        mask = make_mask(q_pos, k_pos, causal=causal, window=window)
+        s = jnp.where(mask, s, NEG_INF)  # (B, H, T_loc, c)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * jnp.moveaxis(corr, 1, 2)[..., None] + _gqa_combine(p, v_i)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, t_loc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, t_loc), jnp.float32)
+    a0 = jnp.zeros((b, t_loc, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(nc)))
+    out = acc / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
+    return out.astype(q_local.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode: distributed partial-softmax merge (beyond-paper, DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def partial_attention_stats(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    k_valid: jax.Array,
+    softcap: float = 0.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard flash-decoding statistics.
+
+    q: (B, 1, H, hd); k/v: (B, T_loc, Hkv, hd); k_valid: (B, T_loc) bool.
+    Returns (m, l, o): running max (B, H, 1), sum-exp (B, H, 1) and the
+    un-normalised weighted value (B, 1, H, hd).  Merging across shards:
+    m* = max_i m_i; l* = sum_i l_i exp(m_i - m*); out = sum_i o_i exp(m_i-m*) / l*.
+    """
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s = _softcap(_gqa_scores(q, k, scale), softcap)  # (B, H, 1, T)
+    s = jnp.where(k_valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # (B, H, 1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(k_valid[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)  # (B, H, 1)
+    o = _gqa_combine(p, v)  # (B, 1, H, hd) un-normalised
+    return m, l, o
+
+
+def merge_partial_stats(
+    m: jax.Array, l: jax.Array, o: jax.Array, axis_name: str
+) -> jax.Array:
+    """Merge flash-decoding partials across a mesh axis (inside shard_map)."""
+    m_star = jax.lax.pmax(m, axis_name)  # (B, H, 1)
+    corr = jnp.exp(m - m_star)
+    l_star = jax.lax.psum(l * corr, axis_name)
+    o_corr = o * jnp.moveaxis(corr, 1, 2)[..., None]  # (B,1,H,1) broadcast
+    o_star = jax.lax.psum(o_corr, axis_name)
+    return o_star / jnp.maximum(jnp.moveaxis(l_star, 1, 2)[..., None], 1e-30)

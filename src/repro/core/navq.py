@@ -1,0 +1,87 @@
+"""Noise-Augmented Vector Quantization (paper §3.3, Theorem 3.1).
+
+During fine-tuning, instead of the deterministic quantized embedding x_hat we
+use x_tilde = x_hat + lambda * xi, xi ~ N(mu, Sigma) where (mu, Sigma) are the
+empirical statistics of the quantization residual eps = x - x_hat, tracked
+with an EMA over training batches (diagonal Sigma, matching the i.i.d.
+assumption the paper's proof uses).  At inference the noise is omitted.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual_stats(dim: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return {
+        "mean": jnp.zeros((dim,), dtype),
+        "var": jnp.ones((dim,), dtype),
+        "count": jnp.zeros((), dtype),
+    }
+
+
+def update_residual_stats(
+    stats: Dict[str, jax.Array],
+    x: jax.Array,
+    x_hat: jax.Array,
+    decay: float = 0.99,
+) -> Dict[str, jax.Array]:
+    """EMA update of residual mean/var from a batch.  x, x_hat: (..., D)."""
+    res = (x - x_hat).astype(jnp.float32).reshape(-1, x.shape[-1])
+    m = jnp.mean(res, axis=0)
+    v = jnp.var(res, axis=0)
+    # warmup: on the first batches, lean fully on the batch statistics
+    alpha = jnp.where(stats["count"] < 1, 0.0, decay)
+    return {
+        "mean": alpha * stats["mean"] + (1 - alpha) * m,
+        "var": alpha * stats["var"] + (1 - alpha) * v,
+        "count": stats["count"] + 1,
+    }
+
+
+def add_noise(
+    key: jax.Array,
+    x_hat: jax.Array,
+    stats: Dict[str, jax.Array],
+    noise_lambda: float,
+) -> jax.Array:
+    """x_tilde = x_hat + lambda * xi, xi ~ N(mu, diag(var))."""
+    if noise_lambda <= 0.0:
+        return x_hat
+    xi = stats["mean"] + jnp.sqrt(jnp.maximum(stats["var"], 0.0)) * jax.random.normal(
+        key, x_hat.shape, dtype=jnp.float32
+    )
+    return (x_hat.astype(jnp.float32) + noise_lambda * xi).astype(x_hat.dtype)
+
+
+def wasserstein2_gaussian_sq(
+    m1: jax.Array, v1: jax.Array, m2: jax.Array, v2: jax.Array
+) -> jax.Array:
+    """W2^2 between diagonal Gaussians (used by tests to check Theorem 3.1)."""
+    mean_term = jnp.sum(jnp.square(m1 - m2))
+    bures = jnp.sum(jnp.square(jnp.sqrt(v1) - jnp.sqrt(v2)))
+    return mean_term + bures
+
+
+def theorem31_gap(
+    m_hat: jax.Array,
+    v_hat: jax.Array,
+    mu: jax.Array,
+    var: jax.Array,
+    noise_lambda: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Analytic W2^2(P_X, P_Xhat) and W2^2(P_X, P_Xtilde) under the paper's
+    Gaussian model (Appendix B): X-hat ~ N(m_hat, diag(v_hat)), residual
+    eps ~ N(mu, diag(var)) independent, so X ~ N(m_hat+mu, v_hat+var) and
+    X-tilde ~ N(m_hat + l*mu, v_hat + l^2*var).  Theorem 3.1 asserts the
+    second return is strictly smaller for l in (0, 1], mu != 0.
+    """
+    lam = noise_lambda
+    m_x, v_x = m_hat + mu, v_hat + var
+    w2_hat = wasserstein2_gaussian_sq(m_x, v_x, m_hat, v_hat)
+    w2_tilde = wasserstein2_gaussian_sq(
+        m_x, v_x, m_hat + lam * mu, v_hat + lam * lam * var
+    )
+    return w2_hat, w2_tilde

@@ -1,0 +1,138 @@
+"""Sequence-parallel plumbing: mesh context, code exchange, carry exchange.
+
+ASTRA's wire protocol per Transformer block is a single all-gather of int
+VQ codes over the sequence ("model") mesh axis — `exchange_codes`.  For
+attention-free layers (SSD / RG-LRU) the inter-device object is the linear
+recurrence carry, exchanged with `distributed_carry` (a prefix-combine over
+the per-device (decay, state) pairs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """Names of the mesh axes a model step runs under.
+
+    batch_axes: axes the global batch is sharded over (('pod','data') or
+    ('data',)).  seq_axis: axis the sequence dim is sharded over ('model'),
+    or None when running without sequence parallelism (smoke tests).
+    """
+
+    mesh: Optional[object] = None  # jax.sharding.Mesh
+    batch_axes: Tuple[str, ...] = ()
+    seq_axis: Optional[str] = None
+
+    @property
+    def num_seq_shards(self) -> int:
+        if self.mesh is None or self.seq_axis is None:
+            return 1
+        return self.mesh.shape[self.seq_axis]
+
+    def batch_spec(self) -> P:
+        return P(self.batch_axes if self.batch_axes else None)
+
+
+# single-device context used by smoke tests / the trainer's simulated mode
+LOCAL = MeshContext()
+
+
+def constrain_seq_sharded(x: jax.Array, ctx: "MeshContext") -> jax.Array:
+    """Pin an activation to P(batch_axes, seq_axis, None...) sharding.
+
+    Without this, XLA SPMD propagates FSDP *weight* shardings into the
+    activations of the layer scan body (e.g. d_ff or vocab split over all
+    chips), then emits 'involuntary full rematerialization' all-gathers of
+    the full global activation inside the loop — a >100x collective-term
+    regression found via the dry-run roofline (EXPERIMENTS.md §Perf it.0).
+    Constraining the scan-body inputs keeps activations sequence-sharded and
+    makes the partitioner all-gather the (much smaller) weights instead.
+    """
+    if ctx is None or ctx.mesh is None or ctx.seq_axis is None:
+        return x
+    if x.ndim < 3 or x.shape[1] % ctx.mesh.shape[ctx.seq_axis]:
+        return x
+    from jax.sharding import NamedSharding
+
+    b = ctx.batch_axes if ctx.batch_axes else None
+    spec = P(*([b, ctx.seq_axis] + [None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def shard_offset(axis_name: str, t_loc: int) -> jax.Array:
+    """Global start position of this device's sequence shard (in shard_map)."""
+    return jax.lax.axis_index(axis_name) * t_loc
+
+
+def exchange_codes(codes_local: jax.Array, axis_name: str) -> jax.Array:
+    """All-gather VQ codes along the sequence axis (inside shard_map).
+
+    codes_local: (B, T_loc, ...) int -> (B, T, ...).  This is ASTRA's entire
+    per-block communication: log2(K)-bit codes instead of D*r-bit embeddings.
+    """
+    return jax.lax.all_gather(codes_local, axis_name, axis=1, tiled=True)
+
+
+def distributed_carry(
+    a_local: jax.Array, b_local: jax.Array, axis_name: str
+) -> Tuple[jax.Array, jax.Array]:
+    """Incoming carry for a device-sharded linear recurrence.
+
+    The recurrence h_t = a_t * h_{t-1} + b_t composed over a device's whole
+    shard yields the pair (A_i, B_i) with h_out = A_i * h_in + B_i.  Given
+    each device's local pair, returns (A_prefix, B_prefix) such that this
+    device's incoming carry is h_in = A_prefix * h0 + B_prefix (h0 = 0 at
+    sequence start).  Exchange volume: one (a, b) pair per device — tiny.
+    """
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    a_all = jax.lax.all_gather(a_local, axis_name)  # (N, ...)
+    b_all = jax.lax.all_gather(b_local, axis_name)
+
+    def combine(carry, ab):
+        a_c, b_c = carry
+        a_i, b_i = ab
+        return (a_i * a_c, a_i * b_c + b_i), None
+
+    def fold(i, carry):
+        a_c, b_c = carry
+        take = i < idx
+        a_i = jnp.where(take, a_all[i], jnp.ones_like(a_local))
+        b_i = jnp.where(take, b_all[i], jnp.zeros_like(b_local))
+        return (a_i * a_c, a_i * b_c + b_i)
+
+    del combine
+    init = (jnp.ones_like(a_local), jnp.zeros_like(b_local))
+    a_p, b_p = jax.lax.fori_loop(0, n, fold, init)
+    return a_p, b_p
+
+
+def fpar(shard_sizes: jax.Array) -> jax.Array:
+    """Full-Precision Attention Rate (Appendix D, eq. 35):
+    FPAR = sum_k n_k^2 / N^2."""
+    n = jnp.sum(shard_sizes)
+    return jnp.sum(jnp.square(shard_sizes.astype(jnp.float32))) / jnp.square(
+        n.astype(jnp.float32)
+    )
+
+
+def partition_tokens(t: int, num_shards: int, weights=None):
+    """Token partition bounds across devices.  Uniform unless ``weights``
+    (relative device capacities, Appendix D heterogeneous setting) given.
+    Returns an int array of shard start offsets, length num_shards+1."""
+    import numpy as np
+
+    if weights is None:
+        step = t // num_shards
+        bounds = np.arange(num_shards + 1) * step
+        bounds[-1] = t
+        return bounds
+    w = np.asarray(weights, dtype=np.float64)
+    cuts = np.round(np.cumsum(w) / w.sum() * t).astype(np.int64)
+    return np.concatenate([[0], cuts])

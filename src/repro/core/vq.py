@@ -1,0 +1,227 @@
+"""Grouped vector quantization (paper §2, §3.2).
+
+A ``GroupedVQ`` over dimension D with G groups holds a codebook of shape
+(G, K, D/G).  ``encode`` maps x -> int32 codes (..., G) by nearest-centroid
+lookup per group; ``decode`` reconstructs x-hat by table lookup.  Vanilla VQ
+is G=1.  Training uses the straight-through estimator, the VQ-VAE commitment
+loss ``beta * ||x - sg(x_hat)||^2`` and EMA codebook updates; codebooks are
+k-means initialised from pretrained activations (paper §3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VQSpec:
+    dim: int
+    groups: int = 1
+    codebook_size: int = 1024
+
+    def __post_init__(self):
+        if self.dim % self.groups:
+            raise ValueError(f"dim {self.dim} not divisible by groups {self.groups}")
+
+    @property
+    def group_dim(self) -> int:
+        return self.dim // self.groups
+
+    @property
+    def bits_per_token(self) -> int:
+        """Wire bits for one token's codes (paper: G * log2 K)."""
+        return self.groups * (self.codebook_size - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Params / state
+# ---------------------------------------------------------------------------
+
+
+def init(key: jax.Array, spec: VQSpec, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Random-normal init; real deployments call ``kmeans_init`` afterwards."""
+    cb = jax.random.normal(key, (spec.groups, spec.codebook_size, spec.group_dim), dtype)
+    return {"codebook": cb}
+
+
+def init_ema_state(spec: VQSpec, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return {
+        "cluster_size": jnp.zeros((spec.groups, spec.codebook_size), dtype),
+        "cluster_sum": jnp.zeros((spec.groups, spec.codebook_size, spec.group_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encode / decode
+# ---------------------------------------------------------------------------
+
+
+def _grouped(x: jax.Array, spec: VQSpec) -> jax.Array:
+    """(..., D) -> (..., G, D/G)."""
+    return x.reshape(*x.shape[:-1], spec.groups, spec.group_dim)
+
+
+def _flat(xg: jax.Array) -> jax.Array:
+    return xg.reshape(*xg.shape[:-2], -1)
+
+
+def encode(params: Dict[str, jax.Array], x: jax.Array, spec: VQSpec) -> jax.Array:
+    """Nearest-centroid codes.  x: (..., D) -> codes: (..., G) int32.
+
+    Uses ||x-e||^2 = ||x||^2 - 2 x.e + ||e||^2; the ||x||^2 term is constant
+    per row and dropped.  The 2x.e term is an MXU matmul — this is the
+    compute hot-spot mirrored by the Pallas ``vq_assign`` kernel.
+    """
+    cb = params["codebook"].astype(jnp.float32)  # (G, K, dg)
+    xg = _grouped(x, spec).astype(jnp.float32)  # (..., G, dg)
+    # scores: (..., G, K)
+    dots = jnp.einsum("...gd,gkd->...gk", xg, cb)
+    e_sq = jnp.sum(cb * cb, axis=-1)  # (G, K)
+    dist = e_sq - 2.0 * dots
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def decode(params: Dict[str, jax.Array], codes: jax.Array, spec: VQSpec) -> jax.Array:
+    """codes: (..., G) int32 -> x_hat: (..., D)."""
+    cb = params["codebook"]  # (G, K, dg)
+    # take along the K axis per group
+    g_idx = jnp.arange(spec.groups)
+    xg = cb[g_idx, codes]  # (..., G, dg) via advanced indexing
+    return _flat(xg).astype(cb.dtype)
+
+
+def quantize_st(
+    params: Dict[str, jax.Array], x: jax.Array, spec: VQSpec
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Straight-through quantization.
+
+    Returns (x_hat_ste, codes, commit_loss_per_elt_sum) where
+    x_hat_ste = x + sg(x_hat - x) so gradients flow to x, and
+    commit = ||x - sg(x_hat)||^2 summed over all elements (caller scales by
+    beta and averages as desired).
+    """
+    codes = encode(params, x, spec)
+    x_hat = decode(params, codes, spec).astype(x.dtype)
+    ste = x + jax.lax.stop_gradient(x_hat - x)
+    commit = jnp.sum(jnp.square(x.astype(jnp.float32) - jax.lax.stop_gradient(x_hat).astype(jnp.float32)))
+    return ste, codes, commit
+
+
+# ---------------------------------------------------------------------------
+# Code packing (beyond-paper wire-format optimisation)
+# ---------------------------------------------------------------------------
+
+
+def pack_codes(codes: jax.Array, spec: VQSpec) -> jax.Array:
+    """Narrow codes to the smallest dtype holding log2(K) bits before the
+    all-gather.  int32 -> uint8 (K<=256) / uint16 (K<=65536)."""
+    k = spec.codebook_size
+    if k <= 256:
+        return codes.astype(jnp.uint8)
+    if k <= 65536:
+        return codes.astype(jnp.uint16)
+    return codes
+
+
+def unpack_codes(packed: jax.Array) -> jax.Array:
+    return packed.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# K-means init (paper: codebook initialised by k-means over pretrained
+# intermediate embeddings)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("spec", "iters"))
+def kmeans_init(
+    key: jax.Array, samples: jax.Array, spec: VQSpec, iters: int = 10
+) -> Dict[str, jax.Array]:
+    """Lloyd's k-means per group over ``samples`` (N, D) -> codebook params."""
+    n = samples.shape[0]
+    xg = _grouped(samples, spec).astype(jnp.float32)  # (N, G, dg)
+    xg = jnp.swapaxes(xg, 0, 1)  # (G, N, dg)
+    k = spec.codebook_size
+    idx = jax.random.choice(key, n, (k,), replace=n < k)
+    cb0 = xg[:, idx, :]  # (G, K, dg)
+
+    def step(cb, _):
+        d = (
+            jnp.sum(cb * cb, axis=-1)[:, None, :]
+            - 2.0 * jnp.einsum("gnd,gkd->gnk", xg, cb)
+        )  # (G, N, K)
+        assign = jnp.argmin(d, axis=-1)  # (G, N)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # (G, N, K)
+        counts = jnp.sum(onehot, axis=1)  # (G, K)
+        sums = jnp.einsum("gnk,gnd->gkd", onehot, xg)
+        new = jnp.where(
+            counts[..., None] > 0, sums / jnp.maximum(counts[..., None], 1.0), cb
+        )
+        return new, None
+
+    cb, _ = jax.lax.scan(step, cb0, None, length=iters)
+    return {"codebook": cb}
+
+
+# ---------------------------------------------------------------------------
+# EMA codebook update (paper: codebook updated via exponential moving average
+# during fine-tuning, following VQ-VAE)
+# ---------------------------------------------------------------------------
+
+
+def ema_update(
+    params: Dict[str, jax.Array],
+    state: Dict[str, jax.Array],
+    x: jax.Array,
+    codes: jax.Array,
+    spec: VQSpec,
+    decay: float = 0.99,
+    eps: float = 1e-5,
+) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """One EMA step given a batch of vectors and their assigned codes."""
+    xg = _grouped(x, spec).astype(jnp.float32).reshape(-1, spec.groups, spec.group_dim)
+    cf = codes.reshape(-1, spec.groups)  # (N, G)
+    onehot = jax.nn.one_hot(cf, spec.codebook_size, dtype=jnp.float32)  # (N, G, K)
+    counts = jnp.sum(onehot, axis=0).astype(jnp.float32)  # (G, K)
+    sums = jnp.einsum("ngk,ngd->gkd", onehot, xg)  # (G, K, dg)
+
+    new_size = decay * state["cluster_size"] + (1 - decay) * counts
+    new_sum = decay * state["cluster_sum"] + (1 - decay) * sums
+    n = jnp.sum(new_size, axis=-1, keepdims=True)
+    stable = (new_size + eps) / (n + spec.codebook_size * eps) * n
+    new_cb = new_sum / stable[..., None]
+    # keep dead codes where they were
+    new_cb = jnp.where(new_size[..., None] > eps, new_cb, params["codebook"])
+    return {"codebook": new_cb.astype(params["codebook"].dtype)}, {
+        "cluster_size": new_size,
+        "cluster_sum": new_sum,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Projected codebooks (TPU adaptation, DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def project_codebook(params: Dict[str, jax.Array], w: jax.Array, spec: VQSpec) -> jax.Array:
+    """Fold a linear projection into the codebook.
+
+    decode(codes) @ W == sum_g Ep[g, codes[g], :] where
+    Ep[g,k,:] = codebook[g,k,:] @ W[g*dg:(g+1)*dg, :].
+    Lets receivers reconstruct *projected* K-hat/V-hat without materialising
+    X-hat when T >> G*K.  Returns (G, K, out_dim).
+    """
+    dg = spec.group_dim
+    wg = w.reshape(spec.groups, dg, -1)  # (G, dg, out)
+    return jnp.einsum("gkd,gdo->gko", params["codebook"].astype(w.dtype), wg)
+
+
+def decode_projected(proj_cb: jax.Array, codes: jax.Array, spec: VQSpec) -> jax.Array:
+    """codes (..., G) + projected codebook (G, K, out) -> (..., out)."""
+    g_idx = jnp.arange(spec.groups)
+    picked = proj_cb[g_idx, codes]  # (..., G, out)
+    return jnp.sum(picked, axis=-2)

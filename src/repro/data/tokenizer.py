@@ -1,0 +1,25 @@
+"""Byte-level tokenizer (vocab = 256 bytes + specials)."""
+from __future__ import annotations
+
+from typing import List
+
+PAD, BOS, EOS = 256, 257, 258
+VOCAB_SIZE = 259
+
+
+class ByteTokenizer:
+    pad_id, bos_id, eos_id = PAD, BOS, EOS
+    vocab_size = VOCAB_SIZE
+
+    def encode(self, text: str, add_bos: bool = True,
+               add_eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8"))
+        if add_bos:
+            ids = [BOS] + ids
+        if add_eos:
+            ids = ids + [EOS]
+        return ids
+
+    def decode(self, ids) -> str:
+        b = bytes(i for i in ids if i < 256)
+        return b.decode("utf-8", errors="replace")

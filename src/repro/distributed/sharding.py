@@ -1,0 +1,114 @@
+"""Sharding rules: parameter FSDP specs, batch specs, cache specs."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+# parameters smaller than this are replicated
+_REPLICATE_BELOW = 1 << 20
+
+
+def batch_axes_for(shape: ShapeSpec, mesh: Mesh) -> Tuple[str, ...]:
+    """Largest prefix of (pod, data) that divides the global batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    chosen = []
+    n = 1
+    for a in axes:
+        if shape.global_batch % (n * mesh.shape[a]) == 0:
+            chosen.append(a)
+            n *= mesh.shape[a]
+    # prefer ('pod','data') ordering but P() wants a tuple
+    return tuple(chosen)
+
+
+def param_pspec(leaf: jax.ShapeDtypeStruct, mesh: Mesh,
+                fsdp: str = "2d") -> P:
+    """FSDP rule: shard the largest dim divisible by the chosen axis group;
+    replicate small leaves.  Leading stacked-layer dims (dim 0 of >=2D
+    leaves) are skipped so lax.scan xs stay unsharded on the layer dim.
+
+    fsdp: "2d" (prefer (data, model)), "model", "data", or "none"
+    (fully replicated — the paper's per-device full-model assumption)."""
+    shape = leaf.shape
+    size = math.prod(shape) if shape else 0
+    if fsdp == "none" or size < _REPLICATE_BELOW or not shape:
+        return P()
+    groups = []
+    if fsdp == "2d" and "data" in mesh.shape and "model" in mesh.shape:
+        groups.append(("data", "model"))
+    if fsdp in ("2d", "model") and "model" in mesh.shape:
+        groups.append(("model",))
+    if fsdp in ("2d", "data") and "data" in mesh.shape:
+        groups.append(("data",))
+    start = 1 if len(shape) > 1 else 0
+    dims = sorted(range(start, len(shape)), key=lambda d: -shape[d])
+    for axes in groups:
+        n = math.prod(mesh.shape[a] for a in axes)
+        for d in dims:
+            if shape[d] % n == 0:
+                spec = [None] * len(shape)
+                spec[d] = axes if len(axes) > 1 else axes[0]
+                return P(*spec)
+    return P()
+
+
+def param_shardings(params_shapes, mesh: Mesh, fsdp: str = "2d"):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, param_pspec(l, mesh, fsdp)),
+        params_shapes)
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                 seq_axis: Optional[str] = "model"):
+    """PartitionSpecs for the input_specs() dict of this (cfg, shape)."""
+    b_axes = batch_axes_for(shape, mesh)
+    b = b_axes if b_axes else None
+    seq = seq_axis if seq_axis in mesh.shape else None
+
+    def spec_for(name: str, leaf) -> P:
+        nd = len(leaf.shape)
+        if name == "lengths":
+            return P(b)
+        if name == "token":
+            return P(b, None)
+        if name in ("tokens", "labels"):
+            return P(b, seq) if leaf.shape[1] % _axis(mesh, seq) == 0 else P(b, None)
+        if name in ("patch_embeds", "frame_embeds"):
+            s = seq if leaf.shape[1] % _axis(mesh, seq) == 0 else None
+            return P(b, s, None)
+        return P(*([b] + [None] * (nd - 1)))
+
+    return spec_for, b_axes
+
+
+def _axis(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None or name not in mesh.shape:
+        return 1 << 62  # force "not divisible" => replicated
+    return mesh.shape[name]
+
+
+def cache_pspecs(cache_shapes, max_len: int, mesh: Mesh,
+                 batch_axes: Tuple[str, ...], seq_axis: str = "model"):
+    """Specs for a stacked cache pytree.  Heuristic on leaf shapes:
+    (R, B, S, ...) with S == max_len -> sequence-sharded over seq_axis;
+    everything else replicated except the batch dim."""
+    b = batch_axes if batch_axes else None
+    n_seq = mesh.shape.get(seq_axis, 1)
+
+    def one(leaf):
+        shp = leaf.shape
+        spec = [None] * len(shp)
+        if len(shp) >= 2:
+            spec[1] = b
+        if len(shp) >= 3 and shp[2] == max_len and max_len % n_seq == 0:
+            spec[2] = seq_axis
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_shapes)

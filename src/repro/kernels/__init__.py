@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for ASTRA's compute hot-spots.
+
+vq_assign   — grouped nearest-centroid codebook search on the MXU
+mixed_attn  — flash attention with in-VMEM dequantization of VQ codes
+ops         — jit'd wrappers; ref — pure-jnp oracles
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.mixed_attn import mixed_flash_attention  # noqa: F401
+from repro.kernels.vq_assign import vq_assign  # noqa: F401

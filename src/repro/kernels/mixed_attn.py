@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: ASTRA mixed-precision flash attention.
+
+The TPU adaptation of the paper's Mixed-Precision Attention (DESIGN.md §2):
+instead of materialising the dequantized K-hat/V-hat (T x d_kv bf16) in HBM
+and then running attention over them, the kernel keeps VQ *codes* in HBM and
+dequantizes block-by-block in VMEM while running the online-softmax (flash)
+loop.  HBM traffic for the remote sequence drops from T*hd*2 bytes to
+T*gph*4 bytes per kv-head (~8-64x less), directly attacking the memory
+roofline term of the attention layer.
+
+Blocks entirely inside the device's local shard use the full-precision
+local K/V tile instead (eq. (1) splice); the caller guarantees the local
+range is block-aligned.
+
+Grid: (B, H, Tq/bq, T/bkv) with the kv dim innermost; (m, l, acc) scratch
+carries the flash state across kv blocks.  The shard offset arrives as a
+scalar-prefetch operand so the local-tile index_map can depend on it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(offset_ref, q_ref, kl_ref, vl_ref, kc_ref, vc_ref, cbk_ref,
+            cbv_ref, out_ref, m_s, l_s, acc_s, *, bq, bkv, nkb, gph, dg,
+            causal, softcap, tl):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+    offset = offset_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    # --- assemble the kv tile: dequantized codes or local FP --------------
+    codes_k = kc_ref[0]  # (bkv, gph) int32
+    codes_v = vc_ref[0]
+    hd = gph * dg
+
+    def dequant(cb_ref, codes):
+        parts = [
+            jnp.take(cb_ref[j], codes[:, j], axis=0)  # (bkv, dg)
+            for j in range(gph)
+        ]
+        return jnp.concatenate(parts, axis=-1)  # (bkv, hd)
+
+    k_hat = dequant(cbk_ref, codes_k)
+    v_hat = dequant(cbv_ref, codes_v)
+    k_loc = kl_ref[0, 0]  # (bkv, hd) — local tile (clamped index when remote)
+    v_loc = vl_ref[0, 0]
+    is_local = jnp.logical_and(ki * bkv >= offset, ki * bkv < offset + tl)
+    k_tile = jnp.where(is_local, k_loc.astype(jnp.float32),
+                       k_hat.astype(jnp.float32))
+    v_tile = jnp.where(is_local, v_loc.astype(jnp.float32),
+                       v_hat.astype(jnp.float32))
+
+    # --- flash update ------------------------------------------------------
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+    s = jax.lax.dot_general(q, k_tile, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        q_pos = offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1)
+    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+        p, v_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ki == nkb - 1)
+    def _emit():
+        out_ref[0, 0] = (acc_s[...] /
+                         jnp.maximum(l_s[...], 1e-30)[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "softcap", "block_q", "block_kv", "interpret"))
+def mixed_flash_attention(
+    q: jax.Array,  # (B, H, Tq, hd)
+    k_local: jax.Array,  # (B, Hkv, Tl, hd)
+    v_local: jax.Array,
+    k_codes: jax.Array,  # (B, T, G)
+    v_codes: jax.Array,
+    cb_k: jax.Array,  # (G, K, dg)
+    cb_v: jax.Array,
+    offset: jax.Array,  # () int32, multiple of block_kv
+    *,
+    causal: bool = True,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, tq, hd = q.shape
+    hkv, tl = k_local.shape[1], k_local.shape[2]
+    t, g = k_codes.shape[1], k_codes.shape[2]
+    k = cb_k.shape[1]
+    dg = cb_k.shape[2]
+    rep = h // hkv
+    gph = g // hkv
+    assert gph * dg == hd, (gph, dg, hd)
+    bq = min(block_q, tq)
+    bkv = min(block_kv, t)
+    assert tq % bq == 0 and t % bkv == 0 and tl % bkv == 0
+    nkb = t // bkv
+    nlb = tl // bkv
+
+    grid = (b, h, tq // bq, nkb)
+
+    def li(bi, hi, qi, ki, off_ref):
+        """local tile index, clamped into range when the kv block is remote"""
+        blk = ki - off_ref[0] // bkv
+        return (bi, hi // rep, jnp.clip(blk, 0, nlb - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki, o: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), li),
+            pl.BlockSpec((1, 1, bkv, hd), li),
+            pl.BlockSpec((1, bkv, gph), lambda bi, hi, qi, ki, o: (bi, ki, hi // rep)),
+            pl.BlockSpec((1, bkv, gph), lambda bi, hi, qi, ki, o: (bi, ki, hi // rep)),
+            pl.BlockSpec((gph, k, dg), lambda bi, hi, qi, ki, o: (hi // rep, 0, 0)),
+            pl.BlockSpec((gph, k, dg), lambda bi, hi, qi, ki, o: (hi // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda bi, hi, qi, ki, o: (bi, hi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(
+        _kernel, bq=bq, bkv=bkv, nkb=nkb, gph=gph, dg=dg, causal=causal,
+        softcap=softcap, tl=tl)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(offset, jnp.int32).reshape(1), q, k_local, v_local,
+      k_codes, v_codes, cb_k, cb_v)

@@ -1,0 +1,69 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs in Python), which is correct but slow — model code therefore
+defaults to the pure-jnp path and the kernels are exercised by the kernel
+test-suite and available for the TPU target via ``use_pallas=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.mixed_attn import mixed_flash_attention
+from repro.kernels.vq_assign import vq_assign
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "use_pallas"))
+def assign_codes(x: jax.Array, codebook: jax.Array, *, groups: int,
+                 use_pallas: bool = False) -> jax.Array:
+    """x: (..., D) -> codes (..., G) using the vq_assign kernel or oracle."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    dg = d // groups
+    xg = x.reshape(-1, groups, dg)
+    if use_pallas:
+        # pad token dim to a block multiple
+        t = xg.shape[0]
+        bt = 256 if t >= 256 else t
+        pad = (-t) % bt
+        if pad:
+            xg = jnp.concatenate([xg, jnp.zeros((pad, groups, dg), xg.dtype)], 0)
+        codes = vq_assign(xg, codebook, block_t=bt, interpret=not ON_TPU)
+        codes = codes[:t]
+    else:
+        codes = ref.vq_assign_ref(xg, codebook)
+    return codes.reshape(*lead, groups)
+
+
+def mixed_attention(q, k_local, v_local, k_codes, v_codes, cb_k, cb_v,
+                    offset, *, causal=True, softcap=0.0, use_pallas=False,
+                    block_q=128, block_kv=128):
+    """(B,H,Tq,hd) x local FP KV x global codes -> (B,H,Tq,hd)."""
+    if use_pallas:
+        return mixed_flash_attention(
+            q, k_local, v_local, k_codes, v_codes, cb_k, cb_v, offset,
+            causal=causal, softcap=softcap, block_q=block_q,
+            block_kv=block_kv, interpret=not ON_TPU)
+    return ref.mixed_flash_ref(q, k_local, v_local, k_codes, v_codes,
+                               cb_k, cb_v, offset, causal=causal,
+                               softcap=softcap)
+
+
+def decode_attention_partials(q, k_codes, v_codes, cb_k, cb_v, lengths, *,
+                              use_pallas: bool = False, block_kv: int = 128):
+    """Flash partials (m, l, acc) over a VQ-coded cache for one decode step.
+
+    q: (B, H, hd); codes: (B, S, G); lengths: (B,).  Merge across sequence
+    shards with ``core.mixed_attention.merge_partial_stats`` semantics."""
+    if use_pallas:
+        from repro.kernels.vq_decode_attn import vq_decode_attention
+
+        return vq_decode_attention(q, k_codes, v_codes, cb_k, cb_v, lengths,
+                                   block_kv=block_kv, interpret=not ON_TPU)
+    return ref.vq_decode_attn_ref(q, k_codes, v_codes, cb_k, cb_v, lengths)

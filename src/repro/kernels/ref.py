@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def vq_assign_ref(x: jax.Array, codebook: jax.Array) -> jax.Array:
+    """x: (T, G, dg); codebook: (G, K, dg) -> codes (T, G) int32.
+    argmin_k ||x - e_k||^2 per group (ties -> lowest index)."""
+    xf = x.astype(jnp.float32)
+    cb = codebook.astype(jnp.float32)
+    dots = jnp.einsum("tgd,gkd->tgk", xf, cb)
+    e_sq = jnp.sum(cb * cb, axis=-1)  # (G, K)
+    dist = e_sq[None] - 2.0 * dots
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def dequant_head(codes: jax.Array, codebook: jax.Array, kv_head: int,
+                 hd: int) -> jax.Array:
+    """codes: (T, G); codebook: (G, K, dg) -> this kv head's K-hat (T, hd).
+    Head ``kv_head``'s slice of the flattened d_kv vector is groups
+    [g0, g0+gph) concatenated, gph = hd // dg."""
+    g_total = codebook.shape[0]
+    dg = codebook.shape[-1]
+    gph = hd // dg
+    g0 = kv_head * gph
+    parts = [
+        jnp.take(codebook[g0 + j], codes[:, g0 + j], axis=0)
+        for j in range(gph)
+    ]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def mixed_flash_ref(
+    q: jax.Array,  # (B, H, Tq, hd) local queries
+    k_local: jax.Array,  # (B, Hkv, Tl, hd)
+    v_local: jax.Array,
+    k_codes: jax.Array,  # (B, T, G) global codes
+    v_codes: jax.Array,
+    cb_k: jax.Array,  # (G, K, dg)
+    cb_v: jax.Array,
+    offset: int,
+    *,
+    causal: bool = True,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Oracle for the mixed-precision flash kernel: dequantize the full
+    K-hat/V-hat, splice the local FP K/V, run exact softmax attention."""
+    b, h, tq, hd = q.shape
+    hkv = k_local.shape[1]
+    t = k_codes.shape[1]
+    rep = h // hkv
+
+    def one_bh(qb, klb, vlb, kcb, vcb, g):
+        khat = dequant_head(kcb, cb_k, g, hd)  # (T, hd)
+        vhat = dequant_head(vcb, cb_v, g, hd)
+        tl = klb.shape[0]
+        k_eff = jax.lax.dynamic_update_slice_in_dim(
+            khat, klb.astype(khat.dtype), offset, axis=0)
+        v_eff = jax.lax.dynamic_update_slice_in_dim(
+            vhat, vlb.astype(vhat.dtype), offset, axis=0)
+        s = (qb.astype(jnp.float32) @ k_eff.T) / jnp.sqrt(
+            jnp.asarray(hd, jnp.float32))
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        if causal:
+            qpos = offset + jnp.arange(tq)
+            kpos = jnp.arange(t)
+            s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        return (w @ v_eff.astype(jnp.float32)).astype(q.dtype)
+
+    out = jnp.zeros_like(q)
+    for bi in range(b):
+        for hi in range(h):
+            g = hi // rep
+            out = out.at[bi, hi].set(
+                one_bh(q[bi, hi], k_local[bi, g], v_local[bi, g],
+                       k_codes[bi], v_codes[bi], g))
+    return out
+
+
+def vq_decode_attn_ref(q, k_codes, v_codes, cb_k, cb_v, lengths):
+    """Oracle for vq_decode_attention: dequantize the full cache, one exact
+    masked softmax per (batch, head); returns the same (m, l, acc) partials.
+
+    q: (B, H, hd); codes: (B, S, G); cb: (G, K, dg); lengths: (B,)."""
+    b, h, hd = q.shape
+    s, g = k_codes.shape[1], k_codes.shape[2]
+    dg = cb_k.shape[-1]
+    hkv = (g * dg) // hd
+    rep = h // hkv
+    gph = g // hkv
+
+    m_o = jnp.zeros((b, h), jnp.float32)
+    l_o = jnp.zeros((b, h), jnp.float32)
+    a_o = jnp.zeros((b, h, hd), jnp.float32)
+    for bi in range(b):
+        for hi in range(h):
+            kv = hi // rep
+            khat = dequant_head(k_codes[bi], cb_k, kv, hd)  # (S, hd)
+            vhat = dequant_head(v_codes[bi], cb_v, kv, hd)
+            sc = (q[bi, hi].astype(jnp.float32) @ khat.T) / jnp.sqrt(
+                jnp.asarray(hd, jnp.float32))
+            valid = jnp.arange(s) <= lengths[bi]
+            sc = jnp.where(valid, sc, NEG_INF)
+            m = jnp.max(sc)
+            p = jnp.where(valid, jnp.exp(sc - m), 0.0)
+            l = jnp.sum(p)
+            acc = p @ vhat.astype(jnp.float32)
+            m_o = m_o.at[bi, hi].set(m)
+            l_o = l_o.at[bi, hi].set(l)
+            a_o = a_o.at[bi, hi].set(acc)
+    return m_o, l_o, a_o

@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: flash-decoding over a VQ-compressed KV cache.
+
+The Appendix-G runtime stores non-local KV as VQ codes (uint8/16 per group).
+At decode, the reference path dequantizes the WHOLE cache to bf16 in HBM
+(S x d_kv bytes) before attention; this kernel keeps codes in HBM and
+dequantizes block-by-block in VMEM while running the online-softmax loop —
+the decode-side sibling of ``mixed_attn.py`` (HBM traffic drops by the
+dequant ratio, ~12.8x for G=32/K=1024 vs bf16).
+
+Emits per-device flash partials (m, l, acc) so the sequence-sharded decode
+can merge across shards with ``merge_partial_stats`` (one tiny collective),
+exactly mirroring ``attention._decode_sharded``.
+
+Grid: (B, Hkv, S/bkv), kv innermost; scratch carries the flash state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(lengths_ref, q_ref, kc_ref, vc_ref, cbk_ref, cbv_ref,
+            m_ref, l_ref, acc_ref, m_s, l_s, acc_s, *,
+            bkv, nkb, gph, dg, rep):
+    ki = pl.program_id(2)
+    bi = pl.program_id(0)
+    length = lengths_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    hd = gph * dg
+    codes_k = kc_ref[0]  # (bkv, gph)
+    codes_v = vc_ref[0]
+
+    def dequant(cb_ref, codes):
+        parts = [jnp.take(cb_ref[j], codes[:, j], axis=0)
+                 for j in range(gph)]
+        return jnp.concatenate(parts, axis=-1)  # (bkv, hd)
+
+    k_tile = dequant(cbk_ref, codes_k).astype(jnp.float32)
+    v_tile = dequant(cbv_ref, codes_v).astype(jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (rep, hd) — queries of this kv head
+    s = jax.lax.dot_general(q, k_tile, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (rep, bkv), 1)
+    s = jnp.where(pos <= length, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(pos <= length, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1)
+    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+        p, v_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ki == nkb - 1)
+    def _emit():
+        m_ref[0, 0] = m_s[...]
+        l_ref[0, 0] = l_s[...]
+        acc_ref[0, 0] = acc_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def vq_decode_attention(
+    q: jax.Array,  # (B, H, hd) — one decode step's queries
+    k_codes: jax.Array,  # (B, S, G) int32
+    v_codes: jax.Array,
+    cb_k: jax.Array,  # (G, K, dg)
+    cb_v: jax.Array,
+    lengths: jax.Array,  # (B,) — positions <= lengths[b] are valid
+    *,
+    block_kv: int = 128,
+    interpret: bool = True,
+):
+    """Returns flash partials (m (B,H), l (B,H), acc (B,H,hd)) over the
+    coded cache.  out = acc / l; cross-shard merging follows
+    ``merge_partial_stats`` semantics."""
+    b, h, hd = q.shape
+    s, g = k_codes.shape[1], k_codes.shape[2]
+    k = cb_k.shape[1]
+    dg = cb_k.shape[2]
+    # infer kv-head grouping from the code groups: gph groups per kv head
+    hkv = (g * dg) // hd
+    rep = h // hkv
+    gph = g // hkv
+    assert gph * dg == hd, (gph, dg, hd)
+    bkv = min(block_kv, s)
+    assert s % bkv == 0
+    nkb = s // bkv
+
+    qg = q.reshape(b, hkv, rep, hd)
+    grid = (b, hkv, nkb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda bi, gi, ki, L: (bi, gi, 0, 0)),
+            pl.BlockSpec((1, bkv, gph), lambda bi, gi, ki, L: (bi, ki, gi)),
+            pl.BlockSpec((1, bkv, gph), lambda bi, gi, ki, L: (bi, ki, gi)),
+            pl.BlockSpec((gph, k, dg), lambda bi, gi, ki, L: (gi, 0, 0)),
+            pl.BlockSpec((gph, k, dg), lambda bi, gi, ki, L: (gi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rep), lambda bi, gi, ki, L: (bi, gi, 0)),
+            pl.BlockSpec((1, 1, rep), lambda bi, gi, ki, L: (bi, gi, 0)),
+            pl.BlockSpec((1, 1, rep, hd), lambda bi, gi, ki, L: (bi, gi, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, bkv=bkv, nkb=nkb, gph=gph, dg=dg,
+                             rep=rep)
+    m, l, acc = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, rep), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, rep), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, rep, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_codes, v_codes, cb_k, cb_v)
+    return (m.reshape(b, h), l.reshape(b, h), acc.reshape(b, h, hd))

@@ -1,0 +1,108 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Sharding/kernel autotuner: productionises the §Perf hillclimb.
+
+For one (arch x shape) it compiles the variant grid that the EXPERIMENTS.md
+§Perf pass found to matter — weight-sharding strategy, blocked-attention
+chunk, Appendix-G cache mode, last-token logits — ranks the candidates by
+roofline time (penalising any that exceed the HBM budget), and writes the
+winner to results/autotune/<arch>_<shape>.json.
+
+Usage:
+  python -m repro.launch.autotune --arch recurrentgemma-9b --shape decode_32k
+  python -m repro.launch.autotune --arch all --shape decode_32k
+"""
+import argparse
+import itertools
+import json
+
+from repro.configs import ASSIGNED, SHAPE_BY_NAME, get_config
+from repro.launch.dryrun import run_combo
+
+HBM_BYTES = 16 * 2**30  # v5e
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "autotune")
+
+
+def variant_grid(kind: str):
+    if kind == "train":
+        return [dict(fsdp=f, attn_chunk=c)
+                for f, c in itertools.product(("2d",), (0,))] + \
+               [dict(fsdp="model", attn_chunk=0)]
+    if kind == "prefill":
+        return [dict(fsdp=f, attn_chunk=c, last_only=lo)
+                for f, c, lo in itertools.product(
+                    ("2d", "model"), (0, 2048), (True,))]
+    return [dict(fsdp=f, cache_mode=m)
+            for f, m in itertools.product(("2d", "model"), ("fp", "vq"))]
+
+
+def score(rec) -> float:
+    if rec["status"] != "ok":
+        return float("inf")
+    t = rec["roofline"]["roofline_s"]
+    peak = rec.get("memory", {}).get("peak_bytes_per_device", 0)
+    if peak > HBM_BYTES:
+        t *= 1.0 + peak / HBM_BYTES  # soft penalty: it will not actually fit
+    return t
+
+
+def tune(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    shape = SHAPE_BY_NAME[shape_name]
+    results = []
+    for i, var in enumerate(variant_grid(shape.kind)):
+        rec = run_combo(arch, shape_name, multi_pod=multi_pod,
+                        tag=f"tune{i}", **var)
+        rec["variant"] = var
+        rec["score"] = score(rec)
+        results.append(rec)
+        r = rec.get("roofline", {})
+        print(f"  {var} -> {rec['status']} score={rec['score']:.3g} "
+              f"({r.get('bottleneck', '-')})", flush=True)
+    results.sort(key=lambda r: r["score"])
+    best = results[0]
+    out = {
+        "arch": arch, "shape": shape_name,
+        "best_variant": best.get("variant"),
+        "best_score_s": best["score"],
+        "best_roofline": best.get("roofline"),
+        "best_peak_bytes": best.get("memory", {}).get(
+            "peak_bytes_per_device"),
+        "candidates": [
+            {"variant": r.get("variant"), "score": r["score"],
+             "status": r["status"],
+             "bottleneck": r.get("roofline", {}).get("bottleneck")}
+            for r in results
+        ],
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{arch}_{shape_name}.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        from repro.launch.steps import combo_supported
+
+        ok, why = combo_supported(cfg, SHAPE_BY_NAME[args.shape])
+        if not ok:
+            print(f"{arch} {args.shape}: skipped ({why})")
+            continue
+        print(f"== {arch} x {args.shape}")
+        out = tune(arch, args.shape, args.multi_pod)
+        print(f"   best: {out['best_variant']} "
+              f"score={out['best_score_s']:.3g}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (DESIGN.md §5).
+
+Lowers + compiles every (architecture x input shape) on the production
+meshes — single-pod (data=16, model=16) = 256 chips and multi-pod
+(pod=2, data=16, model=16) = 512 chips — capturing memory_analysis(),
+cost_analysis() and the collective schedule parsed from the optimized HLO.
+Writes one JSON per combo to results/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-3b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod
+  python -m repro.launch.dryrun ... --mode sp          # Voltage SP baseline
+  python -m repro.launch.dryrun ... --cache-mode vq    # Appendix-G VQ cache
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, SHAPE_BY_NAME, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step, combo_supported
+from repro.roofline.analysis import (
+    collective_stats,
+    model_flops,
+    roofline_terms,
+)
+from repro.roofline.hlo_analysis import analyze as hlo_analyze
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    args = out.get("argument_size_in_bytes", 0)
+    alias = out.get("alias_size_in_bytes", 0)
+    out["peak_bytes_per_device"] = (
+        args + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0) - alias)
+    return out
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+              mode: str = "astra", cache_mode: str = "fp",
+              remat: bool = True, seq_axis: str = "model",
+              fsdp: str = "2d", last_only: bool = False,
+              attn_chunk: int = 0, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
+        "cache_mode": cache_mode, "tag": tag, "status": "?",
+    }
+    ok, reason = combo_supported(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason, wall_s=0.0)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        bundle = build_step(cfg, shape, mesh, mode=mode,
+                            cache_mode=cache_mode, remat=remat,
+                            seq_axis=seq_axis, fsdp=fsdp,
+                            last_only=last_only, attn_chunk=attn_chunk)
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        with mesh:
+            lowered = jitted.lower(*bundle.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        mem = _memory_analysis_dict(compiled)
+
+        hlo = compiled.as_text()
+        # trip-weighted call-graph totals (cost_analysis counts scan bodies
+        # once; see roofline/hlo_analysis.py)
+        ha = hlo_analyze(hlo)
+        flops = float(ha["flops"])
+        bytes_accessed = float(ha["bytes"])
+        coll = collective_stats(hlo)  # un-weighted per-type (reference)
+        wire_bytes = float(ha["wire_bytes"])
+
+        n_chips = mesh.devices.size
+        terms = roofline_terms(flops, bytes_accessed, wire_bytes)
+        tokens = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1)
+        mflops = model_flops(cfg, tokens, train=(shape.kind == "train"))
+        mflops_per_dev = mflops / n_chips
+        rec.update(
+            status="ok",
+            notes=bundle.notes,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            chips=n_chips,
+            flops_per_device=flops,
+            bytes_per_device=bytes_accessed,
+            collectives={k: {kk: (int(vv) if kk == "count" else float(vv))
+                             for kk, vv in v.items()}
+                         for k, v in coll.items()},
+            collective_counts_weighted={
+                c: ha.get(f"n_{c}", 0.0)
+                for c in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")},
+            wire_bytes_per_device=wire_bytes,
+            raw_cost_analysis={
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+            roofline=terms,
+            memory=mem,
+            model_flops_per_device=mflops_per_dev,
+            useful_flops_fraction=(mflops_per_dev / flops) if flops else 0.0,
+        )
+    except Exception as e:
+        rec.update(status="error", error=repr(e),
+                   traceback=traceback.format_exc()[-4000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all' (the 10 assigned)")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mode", default="astra", choices=["astra", "sp"])
+    ap.add_argument("--cache-mode", default="fp", choices=["fp", "vq"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--seq-axis", default="model")
+    ap.add_argument("--fsdp", default="2d",
+                    choices=["2d", "model", "data", "none"])
+    ap.add_argument("--last-only", action="store_true",
+                    help="prefill computes last-position logits only")
+    ap.add_argument("--attn-chunk", type=int, default=0,
+                    help="blocked attention KV chunk size (0 = unblocked)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_combo(arch, shape_name, multi_pod=mp,
+                                mode=args.mode, cache_mode=args.cache_mode,
+                                remat=not args.no_remat,
+                                seq_axis=args.seq_axis, fsdp=args.fsdp,
+                                last_only=args.last_only,
+                                attn_chunk=args.attn_chunk, tag=args.tag)
+                suffix = ("_" + args.tag) if args.tag else ""
+                name = (f"{arch}_{shape_name}_{rec['mesh']}_{args.mode}"
+                        f"_{args.cache_mode}{suffix}.json")
+                path = os.path.join(args.out_dir, name)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                r = rec.get("roofline", {})
+                print(f"[{rec['status']:7s}] {arch:24s} {shape_name:12s} "
+                      f"{rec['mesh']:10s} {args.mode:5s} "
+                      f"wall={rec['wall_s']:7.1f}s "
+                      f"bottleneck={r.get('bottleneck', '-'):10s} "
+                      f"{rec.get('error', rec.get('reason', ''))[:90]}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod: 16x16 = 256 v5e chips (data, model).  Multi-pod:
+2 x 16 x 16 = 512 chips (pod, data, model) — the pod axis extends data
+parallelism across the DCN/ICI boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(num_devices: int = 0, seq_axis_size: int = 0):
+    """Small mesh over the real host devices (tests)."""
+    n = num_devices or len(jax.devices())
+    m = seq_axis_size or n
+    return jax.make_mesh(
+        (n // m, m), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,367 @@
+"""Step builders for the production launch path and the multi-pod dry-run.
+
+For a (ModelConfig, ShapeSpec, Mesh) triple this module constructs the
+jittable step function together with the abstract argument pytree
+(ShapeDtypeStructs — no allocation) and the matching in_shardings, so that
+
+    jax.jit(fn, in_shardings=...).lower(*abstract_args).compile()
+
+is the whole dry-run.  The same builders back ``launch/train.py`` and
+``launch/serve.py`` with concrete arrays.
+
+Modes:
+  astra — the paper's technique: VQ-code all-gather + mixed-precision attn
+  sp    — Voltage-style sequence parallelism (full-precision K/V all-gather);
+          the paper's strongest exact baseline, used for roofline comparisons
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.sequence_parallel import MeshContext
+from repro.distributed import sharding as shd
+from repro.models import model_factory as mf
+from repro.models.context import StepCtx
+from repro.training import optimizer as opt_mod
+from repro.training.trainer import cross_entropy
+
+# models at/above this parameter count get bf16 params + bf16 optimizer
+# moments in the dry-run train step (a replicated fp32 copy of a 405B model
+# does not exist on any real system; recorded in DESIGN.md).
+_BF16_TRAIN_ABOVE = 20_000_000_000
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the dry-run needs for one (arch x shape x mesh) combo."""
+
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    ctx: StepCtx
+    notes: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Mesh context / mode resolution
+# ---------------------------------------------------------------------------
+
+
+def mesh_context_for(mesh: Mesh, shape: ShapeSpec,
+                     seq_axis: str = "model") -> MeshContext:
+    return MeshContext(
+        mesh=mesh,
+        batch_axes=shd.batch_axes_for(shape, mesh),
+        seq_axis=seq_axis if seq_axis in mesh.shape else None,
+    )
+
+
+def astra_mode_for(cfg: ModelConfig, mode: str) -> str:
+    """mode: astra|sp -> StepCtx.astra_mode."""
+    if mode == "sp" or not cfg.astra.enabled:
+        return "off"
+    return "spmd"
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                     batch_abstract: Dict[str, Any],
+                     seq_axis: Optional[str]) -> Dict[str, NamedSharding]:
+    spec_for, _ = shd.input_pspecs(cfg, shape, mesh, seq_axis)
+    return {k: _named(mesh, spec_for(k, v)) for k, v in batch_abstract.items()}
+
+
+_EP_LEAVES = ("w_up", "w_gate", "w_down")
+
+
+def _apply_expert_parallel(cfg: ModelConfig, tree_abs, shardings, mesh: Mesh,
+                           seq_axis: str = "model"):
+    """Expert-parallel override: stacked MoE expert weights (L, E, D, F) are
+    sharded E->model (one expert group per device, matching the dispatch
+    buffer's expert axis) and F->data, instead of generic FSDP.  Keeps the
+    expert FFN einsum fully local up to a small per-layer weight gather
+    over the data axis (§Perf pair-A iteration 2)."""
+    if cfg.moe is None or seq_axis not in mesh.shape:
+        return shardings
+    e = cfg.moe.num_experts
+    data_ok = "data" in mesh.shape
+
+    f = cfg.d_ff
+
+    def override(path, leaf, sh):
+        name = jax.tree_util.keystr(path)
+        if any(w in name for w in _EP_LEAVES) and leaf.ndim == 4 \
+                and leaf.shape[1] == e and e % mesh.shape[seq_axis] == 0:
+            spec = [None, seq_axis, None, None]
+            # shard the d_ff dim (dim 2 for w_down (E,F,D); dim 3 for
+            # w_up/w_gate (E,D,F)) over the data axis
+            for dim in (2, 3):
+                if leaf.shape[dim] == f and data_ok \
+                        and f % mesh.shape["data"] == 0:
+                    spec[dim] = "data"
+                    break
+            return NamedSharding(mesh, P(*spec))
+        return sh
+
+    return jax.tree_util.tree_map_with_path(override, tree_abs, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step_fn(cfg: ModelConfig, ctx: StepCtx,
+                       opt_cfg: opt_mod.AdamWConfig) -> Callable:
+    is_vit = cfg.arch_type == "vit"
+
+    def loss_fn(params, batch, rng):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits, aux, _ = mf.forward(params, inputs, ctx=ctx, rng=rng,
+                                    navq_state=None)
+        labels = batch["labels"]
+        if is_vit:
+            task = cross_entropy(logits, labels)
+        else:
+            task = cross_entropy(logits[:, -labels.shape[1]:], labels)
+        n_elts = jnp.asarray(labels.size, jnp.float32)
+        commit = aux["commit"] / jnp.maximum(n_elts, 1.0)
+        return task + cfg.astra.commit_beta * commit + aux["moe_aux"], task
+
+    def train_step(params, opt, batch, rng):
+        (_, task), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, rng)
+        new_params, new_opt, om = opt_mod.adamw_update(params, grads, opt,
+                                                       opt_cfg)
+        return new_params, new_opt, {"loss": task, **om}
+
+    return train_step
+
+
+def build_train(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
+                mode: str = "astra", remat: bool = True,
+                seq_axis: str = "model", fsdp: str = "2d",
+                attn_chunk: int = 0) -> StepBundle:
+    big = cfg.param_count() >= _BF16_TRAIN_ABOVE
+    param_dtype = jnp.bfloat16 if big else jnp.dtype(cfg.param_dtype)
+    opt_cfg = opt_mod.AdamWConfig(
+        state_dtype="bfloat16" if big else "float32")
+
+    mctx = mesh_context_for(mesh, shape, seq_axis)
+    ctx = StepCtx(cfg=cfg, mesh=mctx, mode="train",
+                  astra_mode=astra_mode_for(cfg, mode), train=True,
+                  remat=remat, attn_chunk=attn_chunk)
+
+    params_abs = jax.eval_shape(
+        lambda k: mf.init_params(k, cfg, dtype=param_dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    opt_abs = jax.eval_shape(
+        lambda p: opt_mod.init_opt_state(p, opt_cfg), params_abs)
+    batch_abs = mf.input_specs(cfg, shape)
+    rng_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    params_sh = shd.param_shardings(params_abs, mesh, fsdp)
+    params_sh = _apply_expert_parallel(cfg, params_abs, params_sh, mesh,
+                                       seq_axis)
+    opt_sh = {
+        "m": jax.tree.map(
+            lambda l: _named(mesh, shd.param_pspec(l, mesh, fsdp)),
+            opt_abs["m"]),
+        "v": jax.tree.map(
+            lambda l: _named(mesh, shd.param_pspec(l, mesh, fsdp)),
+            opt_abs["v"]),
+        "step": _named(mesh, P()),
+    }
+    opt_sh["m"] = _apply_expert_parallel(cfg, opt_abs["m"], opt_sh["m"],
+                                         mesh, seq_axis)
+    opt_sh["v"] = _apply_expert_parallel(cfg, opt_abs["v"], opt_sh["v"],
+                                         mesh, seq_axis)
+    batch_sh = _batch_shardings(cfg, shape, mesh, batch_abs, mctx.seq_axis)
+    rng_sh = _named(mesh, P())
+
+    fn = make_train_step_fn(cfg, ctx, opt_cfg)
+    return StepBundle(
+        fn=fn,
+        abstract_args=(params_abs, opt_abs, batch_abs, rng_abs),
+        in_shardings=(params_sh, opt_sh, batch_sh, rng_sh),
+        donate_argnums=(0, 1),
+        ctx=ctx,
+        notes={"param_dtype": str(jnp.dtype(param_dtype)),
+               "opt_dtype": opt_cfg.state_dtype, "remat": remat,
+               "mode": mode, "fsdp": fsdp, "attn_chunk": attn_chunk},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill step
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step_fn(cfg: ModelConfig, ctx: StepCtx) -> Callable:
+    def prefill_step(params, batch, caches):
+        from repro.models import transformer as tlm
+
+        if cfg.arch_type == "encdec":
+            logits, _ = __import__(
+                "repro.models.encdec", fromlist=["encdec_forward"]
+            ).encdec_forward(params, batch, ctx=ctx)
+            return logits[:, -1], caches
+        logits, _, _, new_caches = tlm.lm_forward(
+            params, batch, ctx=ctx, caches=caches)
+        return logits[:, -1], new_caches  # no-op slice when logits_last_only
+
+    return prefill_step
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
+                  mode: str = "astra", cache_mode: str = "fp",
+                  seq_axis: str = "model", fsdp: str = "2d",
+                  last_only: bool = False,
+                  attn_chunk: int = 0) -> StepBundle:
+    mctx = mesh_context_for(mesh, shape, seq_axis)
+    ctx = StepCtx(cfg=cfg, mesh=mctx, mode="prefill",
+                  astra_mode=astra_mode_for(cfg, mode),
+                  cache_mode=cache_mode, logits_last_only=last_only,
+                  attn_chunk=attn_chunk)
+    param_dtype = jnp.bfloat16  # serving weights are bf16 on the pod
+    params_abs = jax.eval_shape(
+        lambda k: mf.init_params(k, cfg, dtype=param_dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    batch_abs = mf.input_specs(cfg, shape)
+
+    if cfg.arch_type == "encdec":
+        caches_abs = None  # encoder output is recomputed; no decode cache
+    else:
+        from repro.models import transformer as tlm
+
+        caches_abs = jax.eval_shape(
+            lambda: tlm.init_lm_cache(cfg, shape.global_batch, shape.seq_len,
+                                      ctx, jnp.bfloat16))
+
+    params_sh = shd.param_shardings(params_abs, mesh, fsdp)
+    params_sh = _apply_expert_parallel(cfg, params_abs, params_sh, mesh,
+                                       seq_axis)
+    batch_sh = _batch_shardings(cfg, shape, mesh, batch_abs, mctx.seq_axis)
+    caches_sh = (None if caches_abs is None else
+                 shd.cache_pspecs(caches_abs, shape.seq_len, mesh,
+                                  mctx.batch_axes, seq_axis))
+
+    fn = make_prefill_step_fn(cfg, ctx)
+    return StepBundle(
+        fn=fn,
+        abstract_args=(params_abs, batch_abs, caches_abs),
+        in_shardings=(params_sh, batch_sh, caches_sh),
+        donate_argnums=(2,),
+        ctx=ctx,
+        notes={"mode": mode, "cache_mode": cache_mode, "fsdp": fsdp,
+               "last_only": last_only, "attn_chunk": attn_chunk},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve) step
+# ---------------------------------------------------------------------------
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
+                 mode: str = "astra", cache_mode: str = "fp",
+                 seq_axis: str = "model", fsdp: str = "2d") -> StepBundle:
+    mctx = mesh_context_for(mesh, shape, seq_axis)
+    ctx = StepCtx(cfg=cfg, mesh=mctx, mode="decode",
+                  astra_mode=astra_mode_for(cfg, mode),
+                  cache_mode=cache_mode)
+    param_dtype = jnp.bfloat16
+    params_abs = jax.eval_shape(
+        lambda k: mf.init_params(k, cfg, dtype=param_dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    b, t = shape.global_batch, shape.seq_len
+    batch_abs = mf.input_specs(cfg, shape)  # {"token","lengths"}
+
+    if cfg.arch_type == "encdec":
+        t_src = max(int(t * cfg.frontend_tokens_ratio), 8)
+        fe = jax.ShapeDtypeStruct((b, t_src, cfg.frontend_dim), jnp.bfloat16)
+        caches_abs = jax.eval_shape(
+            lambda p, f: mf.init_cache(p, cfg, b, t, ctx,
+                                       batch={"frame_embeds": f},
+                                       dtype=jnp.bfloat16),
+            params_abs, fe)
+    else:
+        from repro.models import transformer as tlm
+
+        caches_abs = jax.eval_shape(
+            lambda: tlm.init_lm_cache(cfg, b, t, ctx, jnp.bfloat16))
+
+    params_sh = shd.param_shardings(params_abs, mesh, fsdp)
+    params_sh = _apply_expert_parallel(cfg, params_abs, params_sh, mesh,
+                                       seq_axis)
+    batch_sh = _batch_shardings(cfg, shape, mesh, batch_abs, mctx.seq_axis)
+    caches_sh = shd.cache_pspecs(caches_abs, t, mesh, mctx.batch_axes,
+                                 seq_axis)
+
+    def serve_step(params, batch, caches):
+        logits, new_caches = mf.decode_step(
+            params, batch["token"], caches, batch["lengths"], ctx=ctx)
+        return logits, new_caches
+
+    return StepBundle(
+        fn=serve_step,
+        abstract_args=(params_abs, batch_abs, caches_abs),
+        in_shardings=(params_sh, batch_sh, caches_sh),
+        donate_argnums=(2,),
+        ctx=ctx,
+        notes={"mode": mode, "cache_mode": cache_mode, "fsdp": fsdp},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
+               mode: str = "astra", cache_mode: str = "fp",
+               remat: bool = True, seq_axis: str = "model",
+               fsdp: str = "2d", last_only: bool = False,
+               attn_chunk: int = 0) -> StepBundle:
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, mode=mode, remat=remat,
+                           seq_axis=seq_axis, fsdp=fsdp,
+                           attn_chunk=attn_chunk)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, mode=mode,
+                             cache_mode=cache_mode, seq_axis=seq_axis,
+                             fsdp=fsdp, last_only=last_only,
+                             attn_chunk=attn_chunk)
+    if shape.kind == "decode":
+        return build_decode(cfg, shape, mesh, mode=mode,
+                            cache_mode=cache_mode, seq_axis=seq_axis,
+                            fsdp=fsdp)
+    raise ValueError(shape.kind)
+
+
+def long_context_supported(cfg: ModelConfig) -> bool:
+    return bool(cfg.supports_long_context)
+
+
+def combo_supported(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runnable, reason-if-not) for one (arch x shape)."""
+    if shape.name == "long_500k" and not long_context_supported(cfg):
+        return False, ("pure full-attention architecture: no sub-quadratic "
+                       "path for a 512k-token decode (DESIGN.md §6)")
+    return True, ""

@@ -1,0 +1,13 @@
+from repro.models import (  # noqa: F401
+    attention,
+    context,
+    encdec,
+    layers,
+    mamba2,
+    model_factory,
+    moe,
+    rglru,
+    rope,
+    transformer,
+    vit,
+)

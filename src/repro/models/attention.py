@@ -1,0 +1,379 @@
+"""Attention layer: GQA projections + RoPE + (ASTRA mixed-precision |
+full-precision) attention + KV-cache handling for prefill/decode.
+
+Layer kinds: "attn" (global), "attn_nope" (global, no RoPE — llama4 iRoPE),
+"local" (sliding window), "global" (gemma2 global half).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import vq
+from repro.core.astra_block import (
+    astra_kv_attention_sim,
+    astra_kv_attention_spmd,
+    sp_full_attention_spmd,
+)
+from repro.core.mixed_attention import (
+    full_attention,
+    merge_partial_stats,
+    partial_attention_stats,
+)
+from repro.models.context import StepCtx
+from repro.models.layers import dense_init
+from repro.models.rope import apply_rope
+
+
+def kind_window(kind: str, cfg) -> int:
+    return cfg.window_size if kind == "local" else 0
+
+
+def kind_theta(kind: str, cfg) -> float:
+    return 0.0 if kind == "attn_nope" else cfg.rope_theta
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d, h * hd, dtype),
+        "wk": dense_init(k2, d, hkv * hd, dtype),
+        "wv": dense_init(k3, d, hkv * hd, dtype),
+        "wo": dense_init(k4, h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((hd,), dtype)
+        p["k_scale"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def init_astra_vq(key: jax.Array, cfg, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Per-layer K/V codebooks for quantize_mode='kv' (C=2, Appendix G)."""
+    spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
+    kk, kv_ = jax.random.split(key)
+    return {"k": vq.init(kk, spec, dtype), "v": vq.init(kv_, spec, dtype)}
+
+
+def _rms(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def qkv(params, x: jax.Array, cfg, positions, theta: float):
+    b, t, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, t, h, hd)
+    k = (x @ params["wk"]).reshape(b, t, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, t, hkv, hd)
+    if cfg.qk_norm:
+        q = _rms(q, params["q_scale"].astype(jnp.float32))
+        k = _rms(k, params["k_scale"].astype(jnp.float32))
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def attention_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    *,
+    ctx: StepCtx,
+    kind: str,
+    causal: bool,
+    vq_params: Optional[Dict] = None,
+    navq_stats: Optional[Dict] = None,
+    rng: Optional[jax.Array] = None,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    """Returns (y, aux, new_cache).  aux = dict(commit=.., navq=(per-dim
+    residual mean/var for K and V) or zeros)."""
+    cfg = ctx.cfg
+    b, t, _ = x.shape
+    window = kind_window(kind, cfg)
+    theta = kind_theta(kind, cfg)
+    positions = jnp.arange(t)[None, :]
+    q, k, v = qkv(params, x, cfg, positions, theta)
+    cap = cfg.attn_logit_softcap
+
+    aux = _zero_aux(cfg)
+    if ctx.astra_on and kind != "local" and ctx.astra_mode == "sim":
+        out, a = astra_kv_attention_sim(
+            q, k, v, vq_params["k"], vq_params["v"], cfg.astra,
+            num_shards=ctx.num_sim_shards, causal=causal, window=window,
+            softcap=cap, train=ctx.train, rng=rng,
+            navq_stats_k=navq_stats["k"] if navq_stats else None,
+            navq_stats_v=navq_stats["v"] if navq_stats else None)
+        aux = _aux_from_sim(a, cfg)
+    elif ctx.astra_on and kind != "local" and ctx.astra_mode == "spmd":
+        out = astra_kv_attention_spmd(
+            ctx.mesh, q, k, v,
+            vq_params["k"]["codebook"], vq_params["v"]["codebook"],
+            cfg.astra, causal=causal, window=window, softcap=cap,
+            chunk=ctx.attn_chunk)
+    elif ctx.seq_sharded:
+        # SP baseline (Voltage): full-precision K/V all-gather.  Local (SWA)
+        # layers take the same path; the window mask bounds useful work.
+        out = sp_full_attention_spmd(
+            ctx.mesh, q, k, v, causal=causal, window=window, softcap=cap,
+            chunk=ctx.attn_chunk)
+    else:
+        pos = jnp.arange(t)
+        out = full_attention(q, k, v, q_pos=pos, k_pos=pos, causal=causal,
+                             window=window, softcap=cap)
+
+    new_cache = None
+    if cache is not None:  # prefill writes the cache
+        new_cache = _prefill_write(cache, k, v, ctx, cfg, vq_params)
+    y = out.reshape(b, t, -1) @ params["wo"]
+    return y, aux, new_cache
+
+
+def _zero_aux(cfg) -> Dict[str, jax.Array]:
+    dkv = max(cfg.d_kv, 1)
+    z = jnp.zeros((dkv,), jnp.float32)
+    return {
+        "commit": jnp.zeros((), jnp.float32),
+        "navq_k_mean": z, "navq_k_var": z,
+        "navq_v_mean": z, "navq_v_var": z,
+    }
+
+
+def _aux_from_sim(a, cfg) -> Dict[str, jax.Array]:
+    k_x, k_hat = a["k_pair"]
+    v_x, v_hat = a["v_pair"]
+    kr = (k_x - k_hat).astype(jnp.float32).reshape(-1, cfg.d_kv)
+    vr = (v_x - v_hat).astype(jnp.float32).reshape(-1, cfg.d_kv)
+    return {
+        "commit": a["commit"],
+        "navq_k_mean": jnp.mean(kr, 0), "navq_k_var": jnp.var(kr, 0),
+        "navq_v_mean": jnp.mean(vr, 0), "navq_v_var": jnp.var(vr, 0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# KV cache: init / prefill-write / decode
+# ---------------------------------------------------------------------------
+
+
+def init_attn_cache(cfg, kind: str, batch: int, max_len: int, ctx: StepCtx,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    window = kind_window(kind, cfg)
+    s = min(window, max_len) if window else max_len
+    if ctx.cache_mode == "vq" and not window:
+        spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
+        code_dtype = jnp.uint8 if cfg.astra.codebook_size <= 256 else jnp.int32
+        return {
+            "k_codes": jnp.zeros((batch, s, spec.groups), code_dtype),
+            "v_codes": jnp.zeros((batch, s, spec.groups), code_dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, s, hkv, hd), dtype),
+        "v": jnp.zeros((batch, s, hkv, hd), dtype),
+    }
+
+
+def _prefill_write(cache, k, v, ctx: StepCtx, cfg, vq_params=None):
+    """Write prefill K/V into the cache (positions 0..T-1).  For ring (SWA)
+    caches keep the last W positions; for vq caches store codes."""
+    if "k_codes" in cache:
+        spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
+        b, t = k.shape[0], k.shape[1]
+        kc = vq.encode(vq_params["k"], k.reshape(b, t, -1), spec)
+        vc = vq.encode(vq_params["v"], v.reshape(b, t, -1), spec)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_codes"], kc.astype(cache["k_codes"].dtype), 0, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_codes"], vc.astype(cache["v_codes"].dtype), 0, 1)
+        return {"k_codes": ck, "v_codes": cv}
+    s = cache["k"].shape[1]
+    t = k.shape[1]
+    if t >= s:  # ring/window cache: keep the last s positions
+        return {"k": k[:, t - s:].astype(cache["k"].dtype),
+                "v": v[:, t - s:].astype(cache["v"].dtype)}
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, 1)
+    return {"k": ck, "v": cv}
+
+
+def _write_at(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """Per-batch dynamic write: buf (B, S, ...), new (B, 1, ...), idx (B,)."""
+    def one(b, n, i):
+        return jax.lax.dynamic_update_slice_in_dim(b, n.astype(b.dtype), i, axis=0)
+    return jax.vmap(one)(buf, new, idx)
+
+
+def ring_positions(slots: int, lengths: jax.Array) -> jax.Array:
+    """Global position held in each ring slot after writing token at position
+    ``lengths`` (B,) into slot ``lengths % W``.  Returns (B, W) positions
+    (may be negative during warmup => invalid)."""
+    s = jnp.arange(slots)[None, :]
+    l = lengths[:, None]
+    return l - jnp.mod(l - s, slots)
+
+
+def attention_decode(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    lengths: jax.Array,
+    *,
+    ctx: StepCtx,
+    kind: str,
+    vq_params: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step.  x: (B, 1, D); lengths: (B,) current sequence length
+    (the new token's position).  Returns (y, new_cache)."""
+    cfg = ctx.cfg
+    b = x.shape[0]
+    window = kind_window(kind, cfg)
+    theta = kind_theta(kind, cfg)
+    positions = lengths[:, None]
+    q, k_new, v_new = qkv(params, x, cfg, positions, theta)
+    cap = cfg.attn_logit_softcap
+
+    if window:  # ring cache, replicated over the seq axis (small)
+        s = cache["k"].shape[1]
+        slot = jnp.mod(lengths, s)
+        ck = _write_at(cache["k"], k_new, slot)
+        cv = _write_at(cache["v"], v_new, slot)
+        pos = ring_positions(s, lengths)  # (B, S)
+        valid = (pos >= 0) & (pos >= (lengths[:, None] - window + 1)) & (
+            pos <= lengths[:, None])
+        m, l, o = partial_attention_stats(q, ck, cv, k_valid=valid, softcap=cap)
+        out = o / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
+        y = out.reshape(b, 1, -1) @ params["wo"]
+        return y, {"k": ck, "v": cv}
+
+    if ctx.seq_sharded:
+        y, new_cache = _decode_sharded(params, q, k_new, v_new, cache, lengths,
+                                       ctx, cfg, cap, vq_params)
+        return y, new_cache
+
+    # plain single-device global cache
+    cache, k_all, v_all = _decode_write_and_read(cache, k_new, v_new, lengths,
+                                                 cfg, vq_params)
+    pos = jnp.arange(k_all.shape[1])[None, :]
+    valid = pos <= lengths[:, None]
+    m, l, o = partial_attention_stats(q, k_all, v_all, k_valid=valid, softcap=cap)
+    out = o / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    return y, cache
+
+
+def _decode_write_and_read(cache, k_new, v_new, lengths, cfg, vq_params):
+    """Write the new token and return full-precision K/V views (dequantizing
+    a vq cache on read)."""
+    if "k_codes" in cache:
+        spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
+        b = k_new.shape[0]
+        kc_new = vq.encode(vq_params["k"], k_new.reshape(b, 1, -1), spec)
+        vc_new = vq.encode(vq_params["v"], v_new.reshape(b, 1, -1), spec)
+        ck = _write_at(cache["k_codes"], kc_new.astype(cache["k_codes"].dtype), lengths)
+        cv = _write_at(cache["v_codes"], vc_new.astype(cache["v_codes"].dtype), lengths)
+        s = ck.shape[1]
+        k_all = vq.decode(vq_params["k"], ck.astype(jnp.int32), spec).reshape(
+            b, s, cfg.num_kv_heads, cfg.head_dim)
+        v_all = vq.decode(vq_params["v"], cv.astype(jnp.int32), spec).reshape(
+            b, s, cfg.num_kv_heads, cfg.head_dim)
+        return {"k_codes": ck, "v_codes": cv}, k_all, v_all
+    ck = _write_at(cache["k"], k_new, lengths)
+    cv = _write_at(cache["v"], v_new, lengths)
+    return {"k": ck, "v": cv}, ck, cv
+
+
+def _decode_sharded(params, q, k_new, v_new, cache, lengths, ctx: StepCtx,
+                    cfg, cap, vq_params):
+    """Distributed decode: cache sharded over mesh.seq_axis on the sequence
+    dim; flash-decoding partial-softmax merge (beyond-paper, DESIGN.md §2)."""
+    axis = ctx.mesh.seq_axis
+    bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+    b = q.shape[0]
+    vq_cache = "k_codes" in cache
+    # the Pallas decode kernel needs whole groups per kv head
+    kernel_ok = (ctx.use_pallas_decode and vq_cache
+                 and cfg.num_kv_heads > 0
+                 and cfg.astra.groups % cfg.num_kv_heads == 0)
+    s_total = (cache["k_codes"] if vq_cache else cache["k"]).shape[1]
+
+    def body(q_l, k_n, v_n, ck, cv, lens, cb_k, cb_v):
+        s_loc = ck.shape[1]
+        off = jax.lax.axis_index(axis) * s_loc
+        local_idx = jnp.clip(lens - off, 0, s_loc - 1)
+        mine = (lens >= off) & (lens < off + s_loc)
+        if vq_cache:
+            spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
+            bl = q_l.shape[0]
+            kc_n = vq.encode({"codebook": cb_k}, k_n.reshape(bl, 1, -1), spec)
+            vc_n = vq.encode({"codebook": cb_v}, v_n.reshape(bl, 1, -1), spec)
+            ck2 = jnp.where(mine[:, None, None],
+                            _write_at(ck, kc_n.astype(ck.dtype), local_idx), ck)
+            cv2 = jnp.where(mine[:, None, None],
+                            _write_at(cv, vc_n.astype(cv.dtype), local_idx), cv)
+            if kernel_ok:
+                # Pallas flash-decode over the coded cache: codes are never
+                # dequantized in HBM (kernels/vq_decode_attn.py)
+                from repro.kernels.ops import decode_attention_partials
+
+                lens_local = lens - off  # negative => nothing valid here
+                m_, l_, acc_ = decode_attention_partials(
+                    q_l[:, 0], ck2.astype(jnp.int32), cv2.astype(jnp.int32),
+                    cb_k, cb_v, lens_local, use_pallas=True)
+                m = m_[..., None]  # (B, H, 1)
+                l = l_[..., None]
+                o = acc_[:, None]  # (B, 1, H, hd)
+                out = merge_partial_stats(m, l, o, axis)
+                return out, ck2, cv2
+            k_shard = vq.decode({"codebook": cb_k}, ck2.astype(jnp.int32), spec
+                                ).reshape(bl, s_loc, cfg.num_kv_heads, cfg.head_dim)
+            v_shard = vq.decode({"codebook": cb_v}, cv2.astype(jnp.int32), spec
+                                ).reshape(bl, s_loc, cfg.num_kv_heads, cfg.head_dim)
+        else:
+            ck2 = jnp.where(mine[:, None, None, None],
+                            _write_at(ck, k_n, local_idx), ck)
+            cv2 = jnp.where(mine[:, None, None, None],
+                            _write_at(cv, v_n, local_idx), cv)
+            k_shard, v_shard = ck2, cv2
+        pos = off + jnp.arange(s_loc)[None, :]
+        valid = pos <= lens[:, None]
+        m, l, o = partial_attention_stats(q_l, k_shard, v_shard,
+                                          k_valid=valid, softcap=cap)
+        out = merge_partial_stats(m, l, o, axis)
+        return out, ck2, cv2
+
+    qspec = P(bspec, None, None, None)
+    cspec4 = P(bspec, axis, None, None)
+    cspec3 = P(bspec, axis, None)
+    if vq_cache:
+        in_specs = (qspec, qspec, qspec, cspec3, cspec3, P(bspec), P(), P())
+        out_specs = (qspec, cspec3, cspec3)
+        cb_k = vq_params["k"]["codebook"]
+        cb_v = vq_params["v"]["codebook"]
+        ck_in, cv_in = cache["k_codes"], cache["v_codes"]
+    else:
+        in_specs = (qspec, qspec, qspec, cspec4, cspec4, P(bspec), P(), P())
+        out_specs = (qspec, cspec4, cspec4)
+        cb_k = cb_v = jnp.zeros((1,), jnp.float32)
+        ck_in, cv_in = cache["k"], cache["v"]
+
+    out, ck2, cv2 = jax.shard_map(
+        body, mesh=ctx.mesh.mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(q, k_new, v_new, ck_in, cv_in, lengths, cb_k, cb_v)
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    new_cache = ({"k_codes": ck2, "v_codes": cv2} if vq_cache
+                 else {"k": ck2, "v": cv2})
+    return y, new_cache

@@ -1,0 +1,41 @@
+"""StepCtx: everything a layer needs to know about how this step executes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.sequence_parallel import LOCAL, MeshContext
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCtx:
+    cfg: ModelConfig
+    mesh: MeshContext = LOCAL
+    mode: str = "train"  # train | prefill | decode
+    # how ASTRA's mixed-precision attention executes:
+    #   sim  — global simulated view (training / single-process eval)
+    #   spmd — shard_map over mesh.seq_axis (runtime)
+    #   off  — full-precision attention (baseline / technique-inapplicable)
+    astra_mode: str = "sim"
+    train: bool = False
+    num_sim_shards: int = 4
+    # KV-cache storage: fp | vq  (vq = codes-only cache, Appendix G analogue)
+    cache_mode: str = "fp"
+    # rematerialise layer activations in the backward pass (big-model train)
+    remat: bool = False
+    # prefill optimisation (§Perf): compute logits for the last position only
+    logits_last_only: bool = False
+    # blocked (flash-style) attention KV chunk for the spmd path; 0 = off
+    attn_chunk: int = 0
+    # route the sharded vq-cache decode through the Pallas flash-decode
+    # kernel (kernels/vq_decode_attn.py); interpret-mode on CPU
+    use_pallas_decode: bool = False
+
+    @property
+    def astra_on(self) -> bool:
+        return self.cfg.astra.enabled and self.astra_mode != "off"
+
+    @property
+    def seq_sharded(self) -> bool:
+        return self.mesh.seq_axis is not None and self.mesh.mesh is not None

@@ -1,0 +1,281 @@
+"""Encoder-decoder backbone (SeamlessM4T-v2 language/decoder transformer).
+
+The audio frontend is a stub per the carve-out: the encoder consumes
+precomputed frame embeddings (B, T_src, frontend_dim).  Encoder self-attn is
+bidirectional ASTRA mixed-precision; decoder self-attn is causal ASTRA;
+cross-attention treats the VQ-compressed encoder memory as the remote set
+(a natural extension of eq. (1) — the co-resident memory shard stays FP).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vq
+from repro.core.astra_block import astra_kv_attention_sim, astra_kv_attention_spmd, sp_full_attention_spmd
+from repro.core.mixed_attention import full_attention, partial_attention_stats
+from repro.models import attention as attn
+from repro.models.context import StepCtx
+from repro.models.layers import (
+    apply_mlp, apply_norm, dense_init, embed_init, init_mlp, init_norm,
+    stack_params,
+)
+
+
+def init_encdec(key: jax.Array, cfg, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 10)
+    enc_blocks, dec_blocks = [], []
+    key_i = ks[0]
+    for _ in range(cfg.encoder_layers):
+        key_i, sk = jax.random.split(key_i)
+        enc_blocks.append(_init_enc_block(sk, cfg, dtype))
+    for _ in range(cfg.num_layers):
+        key_i, sk = jax.random.split(key_i)
+        dec_blocks.append(_init_dec_block(sk, cfg, dtype))
+    return {
+        "enc_in": dense_init(ks[1], cfg.frontend_dim, cfg.d_model, dtype),
+        "enc_blocks": stack_params(enc_blocks),
+        "enc_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "dec_embed": embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+        "dec_blocks": stack_params(dec_blocks),
+        "dec_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "lm_head": dense_init(ks[3], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _init_enc_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "norm1": init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+    if cfg.astra.enabled:
+        p["vq"] = attn.init_astra_vq(jax.random.fold_in(key, 7), cfg, dtype)
+    return p
+
+
+def _init_dec_block(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _init_enc_block(k1, cfg, dtype)
+    p["norm_x"] = init_norm(cfg.norm, cfg.d_model, dtype)
+    p["xattn"] = attn.init_attention(k2, cfg, dtype)
+    if cfg.astra.enabled:
+        p["xvq"] = attn.init_astra_vq(k3, cfg, dtype)
+    return p
+
+
+def _self_attn(p, h, ctx: StepCtx, causal: bool, rng):
+    cfg = ctx.cfg
+    b, t, _ = h.shape
+    pos = jnp.arange(t)[None, :]
+    q, k, v = attn.qkv(p["attn"], h, cfg, pos, cfg.rope_theta)
+    commit = jnp.zeros((), jnp.float32)
+    if ctx.astra_on and ctx.astra_mode == "sim":
+        out, a = astra_kv_attention_sim(
+            q, k, v, p["vq"]["k"], p["vq"]["v"], cfg.astra,
+            num_shards=ctx.num_sim_shards, causal=causal,
+            train=ctx.train, rng=rng)
+        commit = a["commit"]
+    elif ctx.astra_on and ctx.astra_mode == "spmd":
+        out = astra_kv_attention_spmd(
+            ctx.mesh, q, k, v, p["vq"]["k"]["codebook"],
+            p["vq"]["v"]["codebook"], cfg.astra, causal=causal,
+            chunk=ctx.attn_chunk)
+    elif ctx.seq_sharded:
+        out = sp_full_attention_spmd(ctx.mesh, q, k, v, causal=causal,
+                                     chunk=ctx.attn_chunk)
+    else:
+        pp = jnp.arange(t)
+        out = full_attention(q, k, v, q_pos=pp, k_pos=pp, causal=causal)
+    return out.reshape(b, t, -1) @ p["attn"]["wo"], commit, (k, v)
+
+
+def _cross_attn(p, h, mem_kv, ctx: StepCtx, rng):
+    """Decoder->encoder attention; memory K/V may be quantized (ASTRA)."""
+    cfg = ctx.cfg
+    b, t, _ = h.shape
+    pos = jnp.arange(t)[None, :]
+    q = (h @ p["xattn"]["wq"]).reshape(b, t, cfg.num_heads, cfg.head_dim)
+    k, v = mem_kv
+    commit = jnp.zeros((), jnp.float32)
+    if ctx.astra_on and ctx.astra_mode == "sim":
+        out, a = astra_kv_attention_sim(
+            q, k, v, p["xvq"]["k"], p["xvq"]["v"], cfg.astra,
+            num_shards=ctx.num_sim_shards, causal=False,
+            train=ctx.train, rng=rng)
+        commit = a["commit"]
+    elif ctx.astra_on and ctx.astra_mode == "spmd":
+        out = astra_kv_attention_spmd(
+            ctx.mesh, q, k, v, p["xvq"]["k"]["codebook"],
+            p["xvq"]["v"]["codebook"], cfg.astra, causal=False,
+            chunk=ctx.attn_chunk)
+    elif ctx.seq_sharded:
+        out = sp_full_attention_spmd(ctx.mesh, q, k, v, causal=False,
+                                     chunk=ctx.attn_chunk)
+    else:
+        qp = jnp.arange(t)
+        kp = jnp.arange(k.shape[1])
+        out = full_attention(q, k, v, q_pos=qp, k_pos=kp, causal=False)
+    return out.reshape(b, t, -1) @ p["xattn"]["wo"], commit
+
+
+def _mem_kv(p, mem, cfg):
+    """Project encoder memory into this decoder layer's cross K/V."""
+    b, t, _ = mem.shape
+    k = (mem @ p["xattn"]["wk"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = (mem @ p["xattn"]["wv"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def encdec_forward(
+    params: Dict,
+    batch: Dict,
+    *,
+    ctx: StepCtx,
+    rng: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict]:
+    """batch: {"frame_embeds": (B, T_src, F), "tokens": (B, T_dec)}."""
+    cfg = ctx.cfg
+    dt = jnp.dtype(cfg.dtype)
+    base_rng = rng if rng is not None else jax.random.PRNGKey(0)
+    commit = jnp.zeros((), jnp.float32)
+
+    # ---- encoder ----
+    x = (batch["frame_embeds"].astype(dt) @ params["enc_in"].astype(dt))
+    enc_rngs = jax.random.split(jax.random.fold_in(base_rng, 1),
+                                cfg.encoder_layers)
+
+    def enc_body(carry, xs):
+        xx, cm = carry
+        p, r = xs
+        if ctx.seq_sharded:
+            from repro.core.sequence_parallel import constrain_seq_sharded
+
+            xx = constrain_seq_sharded(xx, ctx.mesh)
+        h = apply_norm(p["norm1"], xx, cfg.norm)
+        y, c, _ = _self_attn(p, h, ctx, False, r)
+        xx = xx + y.astype(xx.dtype)
+        h2 = apply_norm(p["norm2"], xx, cfg.norm)
+        xx = xx + apply_mlp(p["mlp"], h2, cfg.activation).astype(xx.dtype)
+        return (xx, cm + c), None
+
+    (x, commit), _ = jax.lax.scan(enc_body, (x, commit),
+                                  (params["enc_blocks"], enc_rngs))
+    mem = apply_norm(params["enc_norm"], x, cfg.norm)
+
+    # ---- decoder ----
+    y = jnp.take(params["dec_embed"], batch["tokens"], axis=0).astype(dt)
+    dec_rngs = jax.random.split(jax.random.fold_in(base_rng, 2),
+                                cfg.num_layers)
+
+    def dec_body(carry, xs):
+        yy, cm = carry
+        p, r = xs
+        if ctx.seq_sharded:
+            from repro.core.sequence_parallel import constrain_seq_sharded
+
+            yy = constrain_seq_sharded(yy, ctx.mesh)
+        h = apply_norm(p["norm1"], yy, cfg.norm)
+        s, c1, _ = _self_attn(p, h, ctx, True, jax.random.fold_in(r, 0))
+        yy = yy + s.astype(yy.dtype)
+        hx = apply_norm(p["norm_x"], yy, cfg.norm)
+        mem_kv = _mem_kv(p, mem, cfg)
+        xo, c2 = _cross_attn(p, hx, mem_kv, ctx, jax.random.fold_in(r, 1))
+        yy = yy + xo.astype(yy.dtype)
+        h2 = apply_norm(p["norm2"], yy, cfg.norm)
+        yy = yy + apply_mlp(p["mlp"], h2, cfg.activation).astype(yy.dtype)
+        return (yy, cm + c1 + c2), None
+
+    (y, commit), _ = jax.lax.scan(dec_body, (y, commit),
+                                  (params["dec_blocks"], dec_rngs))
+    y = apply_norm(params["dec_norm"], y, cfg.norm)
+    logits = (y @ params["lm_head"].astype(y.dtype)).astype(jnp.float32)
+    return logits, {"commit": commit, "moe_aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve): static cross K/V per layer + growing self cache
+# ---------------------------------------------------------------------------
+
+
+def encdec_init_decode_cache(params, frame_embeds, cfg, ctx: StepCtx,
+                             batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Run the encoder once; build per-layer (cross K/V, empty self cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = frame_embeds.astype(dt) @ params["enc_in"].astype(dt)
+    commit = jnp.zeros((), jnp.float32)
+
+    def enc_body(carry, xs):
+        xx, cm = carry
+        p = xs
+        h = apply_norm(p["norm1"], xx, cfg.norm)
+        y, c, _ = _self_attn(p, h, ctx, False, jax.random.PRNGKey(0))
+        xx = xx + y.astype(xx.dtype)
+        h2 = apply_norm(p["norm2"], xx, cfg.norm)
+        return (xx + apply_mlp(p["mlp"], h2, cfg.activation).astype(xx.dtype), cm + c), None
+
+    (x, _), _ = jax.lax.scan(enc_body, (x, commit), params["enc_blocks"])
+    mem = apply_norm(params["enc_norm"], x, cfg.norm)
+
+    def per_layer_kv(p):
+        k, v = _mem_kv(p, mem, cfg)
+        return {"xk": k.astype(dtype), "xv": v.astype(dtype)}
+
+    cross = jax.vmap(per_layer_kv)(params["dec_blocks"])
+    self_c = {
+        "k": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads,
+                        cfg.head_dim), dtype),
+    }
+    return {"cross": cross, "self": self_c}
+
+
+def encdec_decode_step(
+    params: Dict,
+    token: jax.Array,  # (B, 1)
+    cache: Dict,
+    lengths: jax.Array,
+    *,
+    ctx: StepCtx,
+) -> Tuple[jax.Array, Dict]:
+    cfg = ctx.cfg
+    dt = jnp.dtype(cfg.dtype)
+    y = jnp.take(params["dec_embed"], token, axis=0).astype(dt)
+
+    def body(carry, xs):
+        yy = carry
+        p, cross, ck, cv = xs
+        h = apply_norm(p["norm1"], yy, cfg.norm)
+        pos = lengths[:, None]
+        q, k_n, v_n = attn.qkv(p["attn"], h, cfg, pos, cfg.rope_theta)
+        ck2 = attn._write_at(ck, k_n, lengths)
+        cv2 = attn._write_at(cv, v_n, lengths)
+        valid = jnp.arange(ck2.shape[1])[None, :] <= lengths[:, None]
+        m, l, o = partial_attention_stats(q, ck2, cv2, k_valid=valid)
+        out = o / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
+        yy = yy + (out.reshape(*yy.shape[:2], -1) @ p["attn"]["wo"]).astype(yy.dtype)
+        hx = apply_norm(p["norm_x"], yy, cfg.norm)
+        qx = (hx @ p["xattn"]["wq"]).reshape(
+            hx.shape[0], 1, cfg.num_heads, cfg.head_dim)
+        valid_x = jnp.ones(cross["xk"].shape[:2], bool)[..., :]
+        mx, lx, ox = partial_attention_stats(qx, cross["xk"], cross["xv"],
+                                             k_valid=valid_x)
+        outx = ox / jnp.maximum(jnp.moveaxis(lx, 1, 2)[..., None], 1e-30)
+        yy = yy + (outx.reshape(*yy.shape[:2], -1) @ p["xattn"]["wo"]).astype(yy.dtype)
+        h2 = apply_norm(p["norm2"], yy, cfg.norm)
+        yy = yy + apply_mlp(p["mlp"], h2, cfg.activation).astype(yy.dtype)
+        return yy, (ck2, cv2)
+
+    y, (ck_all, cv_all) = jax.lax.scan(
+        body, y, (params["dec_blocks"], cache["cross"],
+                  cache["self"]["k"], cache["self"]["v"]))
+    y = apply_norm(params["dec_norm"], y, cfg.norm)
+    logits = (y @ params["lm_head"].astype(y.dtype)).astype(jnp.float32)
+    new_cache = {"cross": cache["cross"],
+                 "self": {"k": ck_all, "v": cv_all}}
+    return logits, new_cache

@@ -1,0 +1,78 @@
+"""Shared layers: norms, MLPs, embeddings, linear init helpers."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(params: Dict[str, jax.Array], x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): swiglu / geglu / gelu
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, d: int, f: int, activation: str, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, d, f, dtype),
+            "w_up": dense_init(k2, d, f, dtype),
+            "w_down": dense_init(k3, f, d, dtype),
+        }
+    return {"w_up": dense_init(k1, d, f, dtype), "w_down": dense_init(k2, f, d, dtype)}
+
+
+def apply_mlp(params: Dict[str, jax.Array], x: jax.Array, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    if activation == "geglu":
+        g = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_up"], approximate=True) @ params["w_down"]
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0.0:
+        return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+    return x
+
+
+def stack_params(param_list):
+    """Stack a list of identical pytrees along a new leading axis (layer dim)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *param_list)

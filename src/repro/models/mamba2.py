@@ -1,0 +1,316 @@
+"""Mamba2 / SSD (state-space duality) mixer. [arXiv:2405.21060]
+
+Chunked SSD scan: quadratic attention-like compute inside chunks, linear
+state recurrence across chunks.  Sequence parallelism shards chunks across
+devices; the cross-device object is the (decay, state) carry pair exchanged
+via ``distributed_carry`` — this replaces ASTRA's code all-gather for the
+attention-free family (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sequence_parallel import distributed_carry
+from repro.models.context import StepCtx
+from repro.models.layers import dense_init
+
+
+def dims(cfg) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba(key: jax.Array, cfg, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    d_in, nh, p, n = dims(cfg)
+    conv_dim = d_in + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        # -> [z (d_in) | xBC (d_in + 2n) | dt (nh)]
+        "w_in": dense_init(ks[0], d, 2 * d_in + 2 * n + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, nh))).astype(dtype),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+
+def _segsum_exp(a_cum: jax.Array) -> jax.Array:
+    """a_cum: (..., q, h) inclusive log-decay cumsum -> L (..., h, q, q) with
+    L[i,j] = exp(a_cum[i] - a_cum[j]) for i >= j else 0."""
+    ai = a_cum[..., :, None, :]  # (..., q, 1, h)
+    aj = a_cum[..., None, :, :]  # (..., 1, q, h)
+    diff = jnp.moveaxis(ai - aj, -1, -3)  # (..., h, q, q)
+    q = a_cum.shape[-2]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # double-where: masked entries can have diff >> 0 whose exp overflows;
+    # zeroing diff first keeps the backward pass free of 0 * inf = NaN.
+    diff = jnp.where(mask, diff, 0.0)
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_scan(
+    x: jax.Array,  # (b, t, h, p)
+    dt: jax.Array,  # (b, t, h) post-softplus
+    A: jax.Array,  # (h,) negative
+    Bm: jax.Array,  # (b, t, n)
+    Cm: jax.Array,  # (b, t, n)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (b, h, p, n)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (y (b,t,h,p), final_state (b,h,p,n), total_logdecay (b,h))."""
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, t)
+    pad = (-t) % q
+    if pad:  # dt=0 padding is a no-op: decay=exp(0)=1, update dt*x*B=0
+        x = jnp.concatenate([x, jnp.zeros((b, pad, h, p), x.dtype)], 1)
+        dt = jnp.concatenate([dt, jnp.zeros((b, pad, h), dt.dtype)], 1)
+        Bm = jnp.concatenate([Bm, jnp.zeros((b, pad, n), Bm.dtype)], 1)
+        Cm = jnp.concatenate([Cm, jnp.zeros((b, pad, n), Cm.dtype)], 1)
+    t_pad, t_orig = t + pad, t
+    t = t_pad
+    c = t // q
+
+    xf = x.astype(jnp.float32).reshape(b, c, q, h, p)
+    dtc = dt.astype(jnp.float32).reshape(b, c, q, h)
+    Bc = Bm.astype(jnp.float32).reshape(b, c, q, n)
+    Cc = Cm.astype(jnp.float32).reshape(b, c, q, n)
+
+    a = dtc * A  # (b,c,q,h) log-decay per step (negative)
+    a_cum = jnp.cumsum(a, axis=2)  # inclusive
+
+    # intra-chunk (diagonal block) output
+    L = _segsum_exp(a_cum)  # (b,c,h,q,q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b,c,q,q)
+    w = scores[:, :, None] * L  # (b,c,h,i,j)
+    y_diag = jnp.einsum("bchij,bcjh,bcjhp->bcihp", w, dtc, xf)
+
+    # per-chunk outgoing states
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b,c,q,h)
+    s_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", decay_to_end * dtc, Bc, xf)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (b,c,h)
+
+    # inter-chunk recurrence: S_in_{c} = prod-decay * S_in_{c-1} + S_{c-1}
+    def comb(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_scan, s_scan = jax.lax.associative_scan(
+        comb, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    a_scan = jnp.moveaxis(a_scan, 0, 1)  # (b,c,h) inclusive
+    s_scan = jnp.moveaxis(s_scan, 0, 1)  # (b,c,h,p,n) inclusive of chunk c
+
+    # incoming state for chunk c = exclusive scan + injected init_state
+    s_in = jnp.concatenate(
+        [jnp.zeros_like(s_scan[:, :1]), s_scan[:, :-1]], axis=1)
+    a_in = jnp.concatenate(
+        [jnp.ones_like(a_scan[:, :1]), a_scan[:, :-1]], axis=1)
+    if init_state is not None:
+        s_in = s_in + a_in[..., None, None] * init_state[:, None].astype(jnp.float32)
+
+    # off-diagonal contribution: state decayed to each position
+    state_decay = jnp.exp(a_cum)  # (b,c,q,h)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, s_in, state_decay)
+
+    y = (y_diag + y_off).reshape(b, t, h, p)[:, :t_orig]
+    final_state = a_scan[:, -1][..., None, None] * (
+        init_state.astype(jnp.float32) if init_state is not None else 0.0
+    ) + s_scan[:, -1]
+    total_logdecay = jnp.sum(a, axis=(1, 2))  # (b,h)
+    return y.astype(x.dtype), final_state, total_logdecay
+
+
+def ssd_step(
+    state: jax.Array,  # (b, h, p, n)
+    x_t: jax.Array,  # (b, h, p)
+    dt_t: jax.Array,  # (b, h)
+    A: jax.Array,  # (h,)
+    B_t: jax.Array,  # (b, n)
+    C_t: jax.Array,  # (b, n)
+) -> Tuple[jax.Array, jax.Array]:
+    a = jnp.exp(dt_t.astype(jnp.float32) * A)  # (b,h)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t.astype(jnp.float32),
+                     x_t.astype(jnp.float32), B_t.astype(jnp.float32))
+    new_state = a[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                prev: Optional[jax.Array] = None) -> jax.Array:
+    """x: (B, T, C); w: (W, C); prev: (B, W-1, C) tokens before x (or zeros)."""
+    width = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i: i + x.shape[1]] * w[i][None, None, :] for i in range(width)
+    )
+    return out + b[None, None, :]
+
+
+def conv_step(state: jax.Array, x_t: jax.Array, w: jax.Array, b: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """state: (B, W-1, C) last inputs; x_t: (B, C)."""
+    xp = jnp.concatenate([state, x_t[:, None]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", xp, w) + b[None]
+    return y, xp[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mixer forward
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(params, x, cfg):
+    d_in, nh, p, n = dims(cfg)
+    zxbcdt = x @ params["w_in"]
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _rms(y, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def mamba_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    *,
+    ctx: StepCtx,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full-sequence forward (train/prefill).  If ctx.seq_sharded, runs the
+    sharded SSD with conv-halo ppermute + (decay, state) carry exchange."""
+    cfg = ctx.cfg
+    d_in, nh, p, n = dims(cfg)
+    b, t, _ = x.shape
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+
+    def mix_local(xbc_l, dt_raw_l, z_l, prev_conv, init_state, collect_axis):
+        xbc_c = jax.nn.silu(causal_conv(xbc_l, params["conv_w"],
+                                        params["conv_b"], prev_conv))
+        x_ssm, Bm, Cm = jnp.split(xbc_c, [d_in, d_in + n], axis=-1)
+        x_ssm = x_ssm.reshape(b, -1, nh, p)
+        dt = jax.nn.softplus(dt_raw_l.astype(jnp.float32) + params["dt_bias"])
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        y, fin, logdec = ssd_scan(x_ssm, dt, A, Bm, Cm, cfg.ssm_chunk,
+                                  init_state)
+        y = y + params["D"][None, None, :, None] * x_ssm
+        y = y.reshape(b, -1, d_in)
+        y = _rms(y * jax.nn.silu(z_l), params["norm_scale"].astype(jnp.float32))
+        return y @ params["w_out"], fin, logdec, xbc_l
+
+    if ctx.seq_sharded:
+        axis = ctx.mesh.seq_axis
+        bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+        sspec = P(bspec, axis, None)
+
+        def body(xbc_l, dt_l, z_l):
+            bl = xbc_l.shape[0]
+            # conv halo: last W-1 xbc tokens from the previous shard
+            width = cfg.conv_width
+            tail = xbc_l[:, -(width - 1):, :]
+            nshards = jax.lax.axis_size(axis)
+            perm = [(i, (i + 1) % nshards) for i in range(nshards)]
+            prev = jax.lax.ppermute(tail, axis, perm)
+            first = jax.lax.axis_index(axis) == 0
+            prev = jnp.where(first, jnp.zeros_like(prev), prev)
+            # local scan with zero init, then recompute off-chunk carry
+            xbc_c = jax.nn.silu(causal_conv(xbc_l, params["conv_w"],
+                                            params["conv_b"], prev))
+            x_ssm, Bm, Cm = jnp.split(xbc_c, [d_in, d_in + n], axis=-1)
+            x_ssm = x_ssm.reshape(bl, -1, nh, p)
+            dt = jax.nn.softplus(dt_l.astype(jnp.float32) + params["dt_bias"])
+            A = -jnp.exp(params["A_log"].astype(jnp.float32))
+            y0, fin, logdec = ssd_scan(x_ssm, dt, A, Bm, Cm, cfg.ssm_chunk, None)
+            # cross-device carry: incoming state for this shard
+            a_dev = jnp.exp(logdec)  # (b,h)
+            a_in, s_in = distributed_carry(
+                a_dev[..., None, None] * jnp.ones_like(fin), fin, axis)
+            del a_in
+            # correction: add the incoming state propagated to each position
+            a_cum = jnp.cumsum(dt * A, axis=1)  # (b, t_loc, h)
+            decay = jnp.exp(a_cum)
+            y_corr = jnp.einsum("btn,bhpn,bth->bthp", Cm.astype(jnp.float32),
+                                s_in, decay)
+            y = y0 + y_corr.astype(y0.dtype)
+            y = y + params["D"][None, None, :, None] * x_ssm  # skip (as local)
+            y = y.reshape(bl, -1, d_in)
+            y = _rms(y * jax.nn.silu(z_l),
+                     params["norm_scale"].astype(jnp.float32))
+            return y @ params["w_out"]
+
+        y = jax.shard_map(
+            body, mesh=ctx.mesh.mesh,
+            in_specs=(sspec, sspec, sspec), out_specs=sspec,
+            check_vma=False,
+        )(xbc, dt_raw, z)
+        return y, None
+
+    prev_conv = cache["conv"] if cache else None
+    init_state = cache["ssm"] if cache else None
+    y, fin, _, xbc_used = mix_local(xbc, dt_raw, z, prev_conv, init_state, None)
+    new_cache = None
+    if cache is not None:
+        width = cfg.conv_width
+        new_cache = {"conv": xbc_used[:, -(width - 1):, :].astype(cache["conv"].dtype),
+                     "ssm": fin}
+    return y, new_cache
+
+
+def mamba_decode(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (B, 1, D)
+    cache: Dict[str, jax.Array],
+    *,
+    ctx: StepCtx,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    cfg = ctx.cfg
+    d_in, nh, p, n = dims(cfg)
+    b = x.shape[0]
+    z, xbc, dt_raw = _split_proj(params, x[:, 0], cfg)
+    xbc_c, new_conv = conv_step(cache["conv"], xbc, params["conv_w"],
+                                params["conv_b"])
+    xbc_c = jax.nn.silu(xbc_c)
+    x_ssm, B_t, C_t = jnp.split(xbc_c, [d_in, d_in + n], axis=-1)
+    x_ssm = x_ssm.reshape(b, nh, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, new_state = ssd_step(cache["ssm"], x_ssm, dt, A, B_t, C_t)
+    y = y + params["D"][None, :, None] * x_ssm
+    y = y.reshape(b, d_in)
+    y = _rms(y * jax.nn.silu(z), params["norm_scale"].astype(jnp.float32))
+    y = (y @ params["w_out"])[:, None, :]
+    return y, {"conv": new_conv, "ssm": new_state}
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d_in, nh, p, n = dims(cfg)
+    conv_dim = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, p, n), jnp.float32),
+    }

@@ -1,0 +1,115 @@
+"""Model factory: config -> (init, forward/prefill/decode fns, input specs)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tlm
+from repro.models import vit as vit_mod
+from repro.models.context import StepCtx
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, dtype=None) -> Dict:
+    dt = jnp.dtype(cfg.param_dtype) if dtype is None else dtype
+    if cfg.arch_type == "vit":
+        return vit_mod.init_vit(key, cfg, dt)
+    if cfg.arch_type == "encdec":
+        return encdec_mod.init_encdec(key, cfg, dt)
+    return tlm.init_lm(key, cfg, dt)
+
+
+def init_navq_state(cfg: ModelConfig):
+    if cfg.arch_type == "vit":
+        return vit_mod.init_vit_navq(cfg)
+    if cfg.arch_type == "encdec":
+        return None  # tracked only via the trainer's sim path for LM models
+    return tlm.init_lm_navq(cfg)
+
+
+def forward(params, batch, *, ctx: StepCtx, rng=None, navq_state=None):
+    """Full forward -> (logits, aux, new_navq_state)."""
+    cfg = ctx.cfg
+    if cfg.arch_type == "vit":
+        return vit_mod.vit_forward(params, batch, ctx=ctx, rng=rng,
+                                   navq_state=navq_state)
+    if cfg.arch_type == "encdec":
+        logits, aux = encdec_mod.encdec_forward(params, batch, ctx=ctx, rng=rng)
+        return logits, aux, navq_state
+    logits, aux, new_navq, _ = tlm.lm_forward(
+        params, batch, ctx=ctx, rng=rng, navq_state=navq_state)
+    return logits, aux, new_navq
+
+
+def init_cache(params, cfg: ModelConfig, batch_size: int, max_len: int,
+               ctx: StepCtx, batch: Optional[Dict] = None,
+               dtype=jnp.bfloat16):
+    if cfg.arch_type == "encdec":
+        assert batch is not None and "frame_embeds" in batch
+        return encdec_mod.encdec_init_decode_cache(
+            params, batch["frame_embeds"], cfg, ctx, batch_size, max_len, dtype)
+    return tlm.init_lm_cache(cfg, batch_size, max_len, ctx, dtype)
+
+
+def decode_step(params, token, caches, lengths, *, ctx: StepCtx):
+    cfg = ctx.cfg
+    if cfg.arch_type == "encdec":
+        return encdec_mod.encdec_decode_step(params, token, caches, lengths,
+                                             ctx=ctx)
+    return tlm.lm_decode_step(params, token, caches, lengths, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; dry-run & smoke tests)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, *, concrete: bool = False,
+                key: Optional[jax.Array] = None) -> Dict[str, Any]:
+    """Model inputs for one step of the given shape.
+
+    concrete=False returns ShapeDtypeStructs (dry-run; no allocation).
+    concrete=True materialises random arrays (smoke tests, tiny shapes).
+    """
+    b, t = shape.global_batch, shape.seq_len
+
+    def mk(shp, dtype, maxval=None):
+        if not concrete:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        k = key if key is not None else jax.random.PRNGKey(0)
+        if jnp.issubdtype(dtype, jnp.integer):
+            return jax.random.randint(k, shp, 0, maxval or 2, dtype)
+        return jax.random.normal(k, shp, dtype)
+
+    if shape.kind == "decode":
+        out = {"token": mk((b, 1), jnp.int32, cfg.vocab_size),
+               "lengths": mk((b,), jnp.int32, t - 1)}
+        return out
+
+    if cfg.arch_type == "vit":
+        return {"patch_embeds": mk((b, t, cfg.frontend_dim), jnp.bfloat16
+                                   if not concrete else jnp.float32)}
+    if cfg.arch_type == "encdec":
+        t_src = max(int(t * cfg.frontend_tokens_ratio), 8)
+        d = {"frame_embeds": mk((b, t_src, cfg.frontend_dim),
+                                jnp.bfloat16 if not concrete else jnp.float32),
+             "tokens": mk((b, t), jnp.int32, cfg.vocab_size)}
+        if shape.kind == "train":
+            d["labels"] = mk((b, t), jnp.int32, cfg.vocab_size)
+        return d
+    if cfg.arch_type == "vlm":
+        n_patch = max(int(t * cfg.frontend_tokens_ratio), 8)
+        t_text = t - n_patch
+        d = {"tokens": mk((b, t_text), jnp.int32, cfg.vocab_size),
+             "patch_embeds": mk((b, n_patch, cfg.frontend_dim),
+                                jnp.bfloat16 if not concrete else jnp.float32)}
+        if shape.kind == "train":
+            d["labels"] = mk((b, t), jnp.int32, cfg.vocab_size)
+        return d
+    d = {"tokens": mk((b, t), jnp.int32, cfg.vocab_size)}
+    if shape.kind == "train":
+        d["labels"] = mk((b, t), jnp.int32, cfg.vocab_size)
+    return d

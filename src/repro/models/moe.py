@@ -1,0 +1,219 @@
+"""Mixture-of-Experts FFN: top-k router, capacity dispatch, aux load-balance
+loss, optional always-on shared expert (llama4-style).
+
+Dispatch is scatter-based (no O(T^2) one-hot einsum): each (token, k) pair
+gets a slot ``expert_id * C + position_within_expert`` via a cumsum over the
+assignment one-hots; tokens over capacity are dropped (standard Switch/Mesh
+behaviour).  Expert FFN compute is a batched matmul over (E, C, D) so the
+HLO FLOP count reflects *active* expert FLOPs — important for the roofline.
+
+Sharding: experts live on the `model` mesh axis; a sharding constraint on
+the dispatch buffer makes XLA materialise the token all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.context import StepCtx
+from repro.models.layers import dense_init
+
+
+def init_moe(key: jax.Array, cfg, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 5)
+    glu = cfg.activation in ("swiglu", "geglu")
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    fscale = 1.0 / jnp.sqrt(jnp.asarray(f, jnp.float32))
+
+    def ew(k, shape, s):
+        return (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d, e, dtype),
+        "w_up": ew(ks[1], (e, d, f), scale),
+        "w_down": ew(ks[2], (e, f, d), fscale),
+    }
+    if glu:
+        p["w_gate"] = ew(ks[3], (e, d, f), scale)
+    if cfg.moe.num_shared_experts:
+        from repro.models.layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], d, f * cfg.moe.num_shared_experts,
+                               cfg.activation, dtype)
+    return p
+
+
+def _expert_ffn(params, h: jax.Array, activation: str) -> jax.Array:
+    """h: (E, C, D) -> (E, C, D) via per-expert FFN."""
+    up = jnp.einsum("ecd,edf->ecf", h, params["w_up"])
+    if activation == "swiglu":
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, params["w_gate"]))
+        up = g * up
+    elif activation == "geglu":
+        g = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", h, params["w_gate"]),
+                        approximate=True)
+        up = g * up
+    else:
+        up = jax.nn.gelu(up, approximate=True)
+    return jnp.einsum("ecf,efd->ecd", up, params["w_down"])
+
+
+def _expert_ffn_b(params, h: jax.Array, activation: str) -> jax.Array:
+    """h: (B, E, C, D) -> (B, E, C, D) via per-expert FFN (batched)."""
+    up = jnp.einsum("becd,edf->becf", h, params["w_up"])
+    if activation == "swiglu":
+        g = jax.nn.silu(jnp.einsum("becd,edf->becf", h, params["w_gate"]))
+        up = g * up
+    elif activation == "geglu":
+        g = jax.nn.gelu(jnp.einsum("becd,edf->becf", h, params["w_gate"]),
+                        approximate=True)
+        up = g * up
+    else:
+        up = jax.nn.gelu(up, approximate=True)
+    return jnp.einsum("becf,efd->becd", up, params["w_down"])
+
+
+def apply_moe(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg,
+    ctx: Optional[StepCtx] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (y, aux_loss).
+
+    Dispatch is PER BATCH ROW (capacity C = cf*T*k/E per row): the cumsum /
+    scatter / gather all stay local to the row, so under a (batch=data,
+    seq=model) sharding no token crosses devices until the single expert
+    all-to-all on the (B, E, C, D) dispatch buffer.  The original
+    global-token dispatch serialised a cumsum over B*T*k slots and forced
+    XLA to all-reduce a full (E, C_global, D) buffer per MoE layer —
+    ~19.7 TB/device of wire traffic for dbrx-132b train_4k (§Perf pair-A
+    iteration 1: 707 s -> see EXPERIMENTS.md)."""
+    mo = cfg.moe
+    b, t, d = x.shape
+    e, k = mo.num_experts, mo.top_k
+    sharded = (ctx is not None and ctx.seq_sharded
+               and t % ctx.mesh.num_seq_shards == 0
+               and e % ctx.mesh.num_seq_shards == 0)
+
+    logits = (x @ params["router"]).astype(jnp.float32)  # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (B, T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch):  E * sum_e f_e * p_e  (global stats)
+    onehot_any = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (B, T, k, E)
+    frac_tokens = jnp.mean(jnp.sum(onehot_any, axis=2), axis=(0, 1))  # (E,)
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * mean_probs) * mo.aux_loss_weight
+
+    if sharded:
+        y = _moe_shard_map(params, x, idx, gate_vals, cfg, ctx)
+    else:
+        y = _moe_local(params, x, idx, gate_vals, cfg, e, k)
+
+    if "shared" in params:
+        from repro.models.layers import apply_mlp
+
+        y = y + apply_mlp(params["shared"], x, cfg.activation)
+    return y, aux
+
+
+def _dispatch(x_flat, flat_assign, gate_flat, cap, e):
+    """Local capacity dispatch: (N, D) tokens -> (E, cap, D) buffer + the
+    inverse gather indices.  Pure local arrays — no cross-device semantics."""
+    n, d = x_flat.shape
+    oh = jax.nn.one_hot(flat_assign, e, dtype=jnp.int32)  # (N*k..., E)
+    pos = jnp.cumsum(oh, axis=0) - 1
+    pos = jnp.sum(pos * oh, axis=-1)
+    valid = pos < cap
+    slot = jnp.where(valid, flat_assign * cap + pos, e * cap)
+    buf = jnp.zeros((e * cap, d), x_flat.dtype).at[slot].add(
+        x_flat, mode="drop")
+    return buf.reshape(e, cap, d), slot, valid
+
+
+def _undispatch(h, slot, valid, gate_flat, e, cap):
+    hf = h.reshape(e * cap, -1)
+    g = jnp.take(hf, jnp.minimum(slot, e * cap - 1), axis=0)
+    g = jnp.where((valid & (slot < e * cap))[:, None], g, 0.0)
+    return g * gate_flat[:, None].astype(g.dtype)
+
+
+def _moe_local(params, x, idx, gate_vals, cfg, e, k):
+    """Single-device (sim/tests) path: global dispatch."""
+    b, t, d = x.shape
+    n = b * t
+    flat = idx.reshape(n * k)
+    gates = gate_vals.reshape(n * k)
+    xk = jnp.repeat(x.reshape(n, d), k, axis=0)
+    cap_tot = max(1, int(cfg.moe.capacity_factor * n * k / e))
+    buf, slot, valid = _dispatch(xk, flat, gates, cap_tot, e)
+    h = _expert_ffn(params, buf, cfg.activation)
+    yk = _undispatch(h, slot, valid, gates, e, cap_tot)
+    return jnp.sum(yk.reshape(n, k, d), axis=1).reshape(b, t, d)
+
+
+def _moe_shard_map(params, x, idx, gate_vals, cfg, ctx):
+    """Expert-parallel runtime: per-device local dispatch + one all_to_all
+    over the sequence ('model') axis each way (§Perf pair-A iteration 4).
+
+    Per device: (b_loc*t_loc) tokens -> (E, cap_dev, D) -> a2a ->
+    (E/S, S*cap_dev, D) local expert FFN -> a2a back -> local undispatch.
+    Expert weights arrive sharded (E->model, F->data); the F shards are
+    all-gathered over 'data' inside the body (weights << activations)."""
+    mo = cfg.moe
+    b, t, d = x.shape
+    e, k = mo.num_experts, mo.top_k
+    mesh = ctx.mesh.mesh
+    seq = ctx.mesh.seq_axis
+    bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+    n_seq = ctx.mesh.num_seq_shards
+    glu = "w_gate" in params
+
+    def body(x_l, idx_l, gate_l, w_up, w_gate, w_down):
+        bl, tl, _ = x_l.shape
+        n_loc = bl * tl * k
+        cap_dev = max(1, int(mo.capacity_factor * n_loc / e))
+        flat = idx_l.reshape(n_loc)
+        gates = gate_l.reshape(n_loc)
+        xk = jnp.repeat(x_l.reshape(bl * tl, d), k, axis=0)
+        buf, slot, valid = _dispatch(xk, flat, gates, cap_dev, e)
+        # expert a2a: (E, cap, D) -> (E/S, S*cap, D)
+        h = jax.lax.all_to_all(buf, seq, split_axis=0, concat_axis=1,
+                               tiled=True)
+        # gather the F-sharded expert weights over the data axis
+        if "data" in mesh.shape and w_up.shape[-1] != cfg.d_ff:
+            w_up = jax.lax.all_gather(w_up, "data", axis=-1, tiled=True)
+            w_down_full = jax.lax.all_gather(w_down, "data", axis=1,
+                                             tiled=True)
+            if glu:
+                w_gate = jax.lax.all_gather(w_gate, "data", axis=-1,
+                                            tiled=True)
+        else:
+            w_down_full = w_down
+        p_loc = {"w_up": w_up, "w_down": w_down_full}
+        if glu:
+            p_loc["w_gate"] = w_gate
+        h = _expert_ffn(p_loc, h, cfg.activation)
+        h = jax.lax.all_to_all(h, seq, split_axis=1, concat_axis=0,
+                               tiled=True)
+        yk = _undispatch(h, slot, valid, gates, e, cap_dev)
+        y = jnp.sum(yk.reshape(bl * tl, k, d), axis=1)
+        return y.reshape(bl, tl, d)
+
+    tok_spec = P(bspec, seq, None)
+    w3 = P(seq, None, "data") if "data" in mesh.shape else P(seq, None, None)
+    w3d = P(seq, "data", None) if "data" in mesh.shape else P(seq, None, None)
+    args = [x, idx, gate_vals.astype(x.dtype), params["w_up"],
+            params.get("w_gate", params["w_up"]), params["w_down"]]
+    in_specs = (tok_spec, tok_spec, tok_spec, w3, w3, w3d)
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=tok_spec,
+        check_vma=False,
+    )(*args)

@@ -1,0 +1,159 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma). [arXiv:2402.19427]
+
+Recurrence: a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)),
+h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), c = 8.
+Implemented with an associative scan; cross-device sequence parallelism
+exchanges the (decay, state) carry pair (same mechanism as the SSD scan).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sequence_parallel import distributed_carry
+from repro.models.context import StepCtx
+from repro.models.layers import dense_init
+from repro.models.mamba2 import causal_conv, conv_step
+
+RG_C = 8.0
+
+
+def lru_width(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_rglru(key: jax.Array, cfg, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    w = lru_width(cfg)
+    ks = jax.random.split(key, 7)
+    # Lambda init so a ~ U[0.9, 0.999] at sigmoid(r)=0.5 (griffin init)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) * 2.0 / RG_C))  # softplus^-1
+    return {
+        "w_x": dense_init(ks[1], d, w, dtype),  # recurrent branch in
+        "w_gate_branch": dense_init(ks[2], d, w, dtype),  # gelu branch
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": dense_init(ks[4], w, w, dtype),
+        "b_r": jnp.zeros((w,), dtype),
+        "w_i": dense_init(ks[5], w, w, dtype),
+        "b_i": jnp.zeros((w,), dtype),
+        "Lambda": lam.astype(dtype),
+        "w_out": dense_init(ks[6], w, d, dtype),
+    }
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(x @ params["w_r"] + params["b_r"])
+    i = jax.nn.sigmoid(x @ params["w_i"] + params["b_i"])
+    log_a = -RG_C * jax.nn.softplus(params["Lambda"].astype(jnp.float32)) * (
+        r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i.astype(jnp.float32) * x.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_scan(params, x: jax.Array, init_state: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, T, W). Returns (h (B,T,W), final_state (B,W), total_decay (B,W))."""
+    a, b_in = _gates(params, x)
+
+    def comb(e1, e2):
+        a1, h1 = e1
+        a2, h2 = e2
+        return a1 * a2, a2 * h1 + h2
+
+    a_s, h_s = jax.lax.associative_scan(comb, (a, b_in), axis=1)
+    if init_state is not None:
+        h_s = h_s + a_s * init_state[:, None, :].astype(jnp.float32)
+    total_a = a_s[:, -1]
+    return h_s.astype(x.dtype), h_s[:, -1], total_a
+
+
+def rglru_step(params, x_t: jax.Array, state: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x_t: (B, W); state: (B, W)."""
+    a, b_in = _gates(params, x_t)
+    h = a * state + b_in
+    return h.astype(x_t.dtype), h
+
+
+def rg_block_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    *,
+    ctx: StepCtx,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Griffin recurrent block: conv -> RG-LRU on one branch, GeLU gate on
+    the other."""
+    cfg = ctx.cfg
+    xr = x @ params["w_x"]
+    gate = jax.nn.gelu((x @ params["w_gate_branch"]), approximate=True)
+
+    if ctx.seq_sharded:
+        axis = ctx.mesh.seq_axis
+        bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+        sspec = P(bspec, axis, None)
+
+        def body(xr_l):
+            width = cfg.conv_width
+            tail = xr_l[:, -(width - 1):, :]
+            nsh = jax.lax.axis_size(axis)
+            perm = [(i, (i + 1) % nsh) for i in range(nsh)]
+            prev = jax.lax.ppermute(tail, axis, perm)
+            first = jax.lax.axis_index(axis) == 0
+            prev = jnp.where(first, jnp.zeros_like(prev), prev)
+            xc = causal_conv(xr_l, params["conv_w"], params["conv_b"], prev)
+            h0, fin, total_a = rglru_scan(params, xc, None)
+            a_in, s_in = distributed_carry(total_a, fin.astype(jnp.float32), axis)
+            del a_in
+            # propagate incoming state through the local positions
+            a, _ = _gates(params, xc)
+            a_cumprod = jnp.cumprod(a, axis=1)
+            h = h0.astype(jnp.float32) + a_cumprod * s_in[:, None, :]
+            return h.astype(xr_l.dtype)
+
+        h = jax.shard_map(body, mesh=ctx.mesh.mesh, in_specs=(sspec,),
+                          out_specs=sspec, check_vma=False)(xr)
+        return (h * gate) @ params["w_out"], None
+
+    prev_conv = cache["conv"] if cache else None
+    xc = causal_conv(xr, params["conv_w"], params["conv_b"], prev_conv)
+    init_state = cache["state"] if cache else None
+    h, fin, _ = rglru_scan(params, xc, init_state)
+    y = (h * gate) @ params["w_out"]
+    new_cache = None
+    if cache is not None:
+        width = cfg.conv_width
+        new_cache = {"conv": xr[:, -(width - 1):, :].astype(cache["conv"].dtype),
+                     "state": fin.astype(jnp.float32)}
+    return y, new_cache
+
+
+def rg_block_decode(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (B, 1, D)
+    cache: Dict[str, jax.Array],
+    *,
+    ctx: StepCtx,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    xr = (x[:, 0] @ params["w_x"])
+    gate = jax.nn.gelu(x[:, 0] @ params["w_gate_branch"], approximate=True)
+    xc, new_conv = conv_step(cache["conv"], xr, params["conv_w"], params["conv_b"])
+    h, new_state = rglru_step(params, xc, cache["state"])
+    y = ((h * gate) @ params["w_out"])[:, None, :]
+    return y, {"conv": new_conv, "state": new_state}
+
+
+def init_rg_cache(cfg, batch: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    w = lru_width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "state": jnp.zeros((batch, w), jnp.float32),
+    }

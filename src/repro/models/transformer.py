@@ -1,0 +1,396 @@
+"""Generic decoder-LM assembler covering dense / MoE / SSM / hybrid / VLM.
+
+A model is a sequence of *stages*; each stage is a repeated super-block of
+layer kinds (e.g. gemma2 = [local, global] x 23; recurrentgemma =
+[rec, rec, local] x 12 + [rec] x 2; llama4 = [attn, attn, attn, attn_nope]
+x 12).  Stage parameters are stacked over the repeat dim and executed with
+``lax.scan`` so 126-layer models compile in one program.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import navq
+from repro.models import attention as attn
+from repro.models import mamba2, moe as moe_mod, rglru
+from repro.models.context import StepCtx
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    dense_init,
+    embed_init,
+    init_mlp,
+    init_norm,
+    softcap,
+    stack_params,
+)
+
+ATTN_KINDS = ("attn", "attn_nope", "local", "global")
+
+
+def stages(cfg) -> List[Tuple[Tuple[str, ...], int]]:
+    l = cfg.num_layers
+    if cfg.arch_type == "ssm":
+        return [(("ssm",), l)]
+    if cfg.layer_pattern == "local_global":
+        assert l % 2 == 0
+        return [(("local", "global"), l // 2)]
+    if cfg.layer_pattern == "rg":
+        reps, rem = divmod(l, 3)
+        out = []
+        if reps:
+            out.append((("rec", "rec", "local"), reps))
+        if rem:
+            out.append((("rec",) * max(rem - 1, 0) + ("local",), 1)
+                       if not reps else (("rec",) * rem, 1))
+        return out
+    if cfg.nope_interval:
+        k = cfg.nope_interval
+        out = []
+        if l >= k:
+            out.append((tuple(["attn"] * (k - 1) + ["attn_nope"]), l // k))
+        if l % k:
+            out.append((("attn",) * (l % k), 1))
+        return out
+    return [(("attn",), l)]
+
+
+def decoder_stages(cfg):
+    return stages(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key: jax.Array, cfg, kind: str, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if kind in ATTN_KINDS:
+        p["attn"] = attn.init_attention(ks[0], cfg, dtype)
+        if cfg.astra.enabled:
+            p["vq"] = attn.init_astra_vq(ks[1], cfg, dtype)
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        if cfg.moe is not None:
+            p["moe"] = moe_mod.init_moe(ks[2], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+        if cfg.post_norm:
+            p["post1"] = init_norm(cfg.norm, cfg.d_model, dtype)
+            p["post2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+    elif kind == "rec":
+        p["rec"] = rglru.init_rglru(ks[0], cfg, dtype)
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    elif kind == "ssm":
+        p["ssm"] = mamba2.init_mamba(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_block_navq(cfg, kind: str) -> Dict:
+    if kind in ATTN_KINDS and cfg.astra.enabled:
+        return {
+            "k": navq.init_residual_stats(cfg.d_kv),
+            "v": navq.init_residual_stats(cfg.d_kv),
+        }
+    return {}
+
+
+def init_block_cache(cfg, kind: str, batch: int, max_len: int, ctx: StepCtx,
+                     dtype=jnp.bfloat16) -> Dict:
+    if kind in ATTN_KINDS:
+        return attn.init_attn_cache(cfg, kind, batch, max_len, ctx, dtype)
+    if kind == "rec":
+        return rglru.init_rg_cache(cfg, batch, dtype)
+    if kind == "ssm":
+        return mamba2.init_mamba_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Block forward / decode
+# ---------------------------------------------------------------------------
+
+
+def block_forward(
+    p: Dict,
+    x: jax.Array,
+    *,
+    ctx: StepCtx,
+    kind: str,
+    causal: bool,
+    rng: Optional[jax.Array],
+    navq_stats: Optional[Dict],
+    cache: Optional[Dict],
+    lengths: Optional[jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array], Dict, Optional[Dict]]:
+    cfg = ctx.cfg
+    aux = {"commit": jnp.zeros((), jnp.float32),
+           "moe_aux": jnp.zeros((), jnp.float32)}
+    new_navq: Dict = {}
+    new_cache: Optional[Dict] = None
+
+    if ctx.seq_sharded and ctx.mode != "decode":
+        from repro.core.sequence_parallel import constrain_seq_sharded
+
+        x = constrain_seq_sharded(x, ctx.mesh)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind in ATTN_KINDS:
+        if ctx.mode == "decode":
+            y, new_cache = attn.attention_decode(
+                p["attn"], h, cache, lengths, ctx=ctx, kind=kind,
+                vq_params=p.get("vq"))
+        else:
+            y, a, new_cache = attn.attention_forward(
+                p["attn"], h, ctx=ctx, kind=kind, causal=causal,
+                vq_params=p.get("vq"), navq_stats=navq_stats or None,
+                rng=rng, cache=cache)
+            aux["commit"] = a["commit"]
+            if navq_stats:
+                new_navq = {
+                    "k": _stats_update(navq_stats["k"], a["navq_k_mean"],
+                                       a["navq_k_var"]),
+                    "v": _stats_update(navq_stats["v"], a["navq_v_mean"],
+                                       a["navq_v_var"]),
+                }
+        if cfg.post_norm:
+            y = apply_norm(p["post1"], y, cfg.norm)
+        x = x + y.astype(x.dtype)
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        if cfg.moe is not None:
+            y2, moe_aux = moe_mod.apply_moe(p["moe"], h2, cfg, ctx)
+            aux["moe_aux"] = moe_aux
+        else:
+            y2 = apply_mlp(p["mlp"], h2, cfg.activation)
+        if cfg.post_norm:
+            y2 = apply_norm(p["post2"], y2, cfg.norm)
+        return x + y2.astype(x.dtype), aux, new_navq, new_cache
+
+    if kind == "rec":
+        if ctx.mode == "decode":
+            y, new_cache = rglru.rg_block_decode(p["rec"], h, cache, ctx=ctx)
+        else:
+            y, new_cache = rglru.rg_block_forward(p["rec"], h, ctx=ctx,
+                                                  cache=cache)
+        x = x + y.astype(x.dtype)
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        y2 = apply_mlp(p["mlp"], h2, cfg.activation)
+        return x + y2.astype(x.dtype), aux, new_navq, new_cache
+
+    if kind == "ssm":
+        if ctx.mode == "decode":
+            y, new_cache = mamba2.mamba_decode(p["ssm"], h, cache, ctx=ctx)
+        else:
+            y, new_cache = mamba2.mamba_forward(p["ssm"], h, ctx=ctx,
+                                                cache=cache)
+        return x + y.astype(x.dtype), aux, new_navq, new_cache
+
+    raise ValueError(kind)
+
+
+def _stats_update(stats, mean, var):
+    return {
+        "mean": 0.99 * stats["mean"] + 0.01 * mean,
+        "var": 0.99 * stats["var"] + 0.01 * var,
+        "count": stats["count"] + 1,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key: jax.Array, cfg, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.rope_theta and cfg.arch_type != "ssm":
+        params["pos_embed"] = embed_init(ks[1], cfg.max_seq_len, cfg.d_model,
+                                         dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.frontend == "vision" and cfg.arch_type == "vlm":
+        params["projector"] = {
+            "w1": dense_init(ks[3], cfg.frontend_dim, cfg.d_model, dtype),
+            "w2": dense_init(ks[4], cfg.d_model, cfg.d_model, dtype),
+        }
+    st = []
+    key_i = ks[5]
+    for kinds, reps in stages(cfg):
+        sub = {}
+        for j, kind in enumerate(kinds):
+            blocks = []
+            for r in range(reps):
+                key_i, sk = jax.random.split(key_i)
+                blocks.append(init_block(sk, cfg, kind, dtype))
+            sub[f"sub{j}"] = stack_params(blocks)
+        st.append(sub)
+    params["stages"] = st
+    return params
+
+
+def init_lm_navq(cfg) -> List[Dict]:
+    out = []
+    for kinds, reps in stages(cfg):
+        sub = {}
+        for j, kind in enumerate(kinds):
+            s = init_block_navq(cfg, kind)
+            if s:
+                sub[f"sub{j}"] = jax.tree.map(
+                    lambda x: jnp.stack([x] * reps, 0), s)
+        out.append(sub)
+    return out
+
+
+def init_lm_cache(cfg, batch: int, max_len: int, ctx: StepCtx,
+                  dtype=jnp.bfloat16) -> List[Dict]:
+    out = []
+    for kinds, reps in stages(cfg):
+        sub = {}
+        for j, kind in enumerate(kinds):
+            c = init_block_cache(cfg, kind, batch, max_len, ctx, dtype)
+            sub[f"sub{j}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), c)
+        out.append(sub)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch: Dict, cfg) -> jax.Array:
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if "pos_embed" in params:
+        t = tokens.shape[1]
+        x = x + params["pos_embed"][None, :t]
+    if "patch_embeds" in batch and "projector" in params:
+        pe = batch["patch_embeds"]
+        h = jax.nn.gelu(pe @ params["projector"]["w1"], approximate=True)
+        h = h @ params["projector"]["w2"]
+        x = jnp.concatenate([h.astype(x.dtype), x], axis=1)
+    return x
+
+
+def run_stages(
+    params_stages: List[Dict],
+    x: jax.Array,
+    *,
+    ctx: StepCtx,
+    cfg,
+    causal: bool,
+    rng: Optional[jax.Array],
+    navq_state: Optional[List[Dict]],
+    caches: Optional[List[Dict]],
+    lengths: Optional[jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array], List[Dict], Optional[List[Dict]]]:
+    commit = jnp.zeros((), jnp.float32)
+    moe_aux = jnp.zeros((), jnp.float32)
+    new_navq_all, new_caches_all = [], []
+    base_rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    for si, (kinds, reps) in enumerate(stages(cfg)):
+        p_stage = params_stages[si]
+        navq_stage = (navq_state[si] if navq_state else {})
+        cache_stage = (caches[si] if caches is not None else {})
+        rngs = jax.random.split(jax.random.fold_in(base_rng, si), reps)
+
+        def body(carry, xs):
+            xx, cm, ma = carry
+            p_l, rng_l, navq_l, cache_l = xs
+            navq_outs, cache_outs = {}, {}
+            for j, kind in enumerate(kinds):
+                nst = navq_l.get(f"sub{j}") or None
+                cst = cache_l.get(f"sub{j}") if cache_l else None
+                xx, aux, n_new, c_new = block_forward(
+                    p_l[f"sub{j}"], xx, ctx=ctx, kind=kind, causal=causal,
+                    rng=jax.random.fold_in(rng_l, j), navq_stats=nst,
+                    cache=cst, lengths=lengths)
+                cm = cm + aux["commit"]
+                ma = ma + aux["moe_aux"]
+                if n_new:
+                    navq_outs[f"sub{j}"] = n_new
+                if c_new is not None:
+                    cache_outs[f"sub{j}"] = c_new
+            return (xx, cm, ma), (navq_outs, cache_outs)
+
+        scan_body = jax.checkpoint(body) if ctx.remat else body
+        (x, commit, moe_aux), (navq_out, cache_out) = jax.lax.scan(
+            scan_body, (x, commit, moe_aux),
+            (p_stage, rngs, navq_stage, cache_stage))
+        new_navq_all.append(navq_out)
+        new_caches_all.append(cache_out)
+
+    aux = {"commit": commit, "moe_aux": moe_aux}
+    return x, aux, new_navq_all, (new_caches_all if caches is not None else None)
+
+
+def lm_forward(
+    params: Dict,
+    batch: Dict,
+    *,
+    ctx: StepCtx,
+    rng: Optional[jax.Array] = None,
+    navq_state: Optional[List[Dict]] = None,
+    caches: Optional[List[Dict]] = None,
+    lengths: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict, List[Dict], Optional[List[Dict]]]:
+    """Returns (logits, aux, new_navq_state, new_caches)."""
+    cfg = ctx.cfg
+    x = _embed_inputs(params, batch, cfg).astype(_adtype(cfg, ctx))
+    x, aux, new_navq, new_caches = run_stages(
+        params["stages"], x, ctx=ctx, cfg=cfg, causal=True, rng=rng,
+        navq_state=navq_state, caches=caches, lengths=lengths)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if ctx.logits_last_only:
+        # §Perf: prefill only needs the next-token distribution — skip the
+        # (B, T, vocab) logits matmul for all but the final position.
+        x = x[:, -1:]
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    if ctx.seq_sharded and not ctx.logits_last_only:
+        from repro.core.sequence_parallel import constrain_seq_sharded
+
+        logits = constrain_seq_sharded(logits, ctx.mesh)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, aux, new_navq, new_caches
+
+
+def lm_decode_step(
+    params: Dict,
+    token: jax.Array,  # (B, 1)
+    caches: List[Dict],
+    lengths: jax.Array,  # (B,)
+    *,
+    ctx: StepCtx,
+) -> Tuple[jax.Array, List[Dict]]:
+    cfg = ctx.cfg
+    x = jnp.take(params["embed"], token, axis=0)
+    if "pos_embed" in params:
+        x = x + jnp.take(params["pos_embed"],
+                         jnp.clip(lengths, 0, cfg.max_seq_len - 1), axis=0)[:, None]
+    x = x.astype(_adtype(cfg, ctx))
+    x, aux, _, new_caches = run_stages(
+        params["stages"], x, ctx=ctx, cfg=cfg, causal=True, rng=None,
+        navq_state=None, caches=caches, lengths=lengths)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, new_caches
+
+
+def _adtype(cfg, ctx: StepCtx):
+    """Activation compute dtype (bf16 on the pod, fp32 in CPU smoke tests)."""
+    return jnp.dtype(cfg.dtype)

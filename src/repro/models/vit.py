@@ -1,0 +1,190 @@
+"""ViT encoder with Distributed Class Tokens (the paper's primary vision
+model; Table 1/2, ablations in Appendix F).
+
+quantize_mode="input" (C=1): the normed block input X is quantized once per
+block; K-hat/V-hat are derived from X-hat by the block's own projections.
+The patch frontend is stubbed: inputs are precomputed patch embeddings
+(B, T, frontend_dim).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import navq, vq
+from repro.core.astra_block import quantize_with_navq
+from repro.core.class_token import pool_class_tokens, vit_mixed_attention_sim
+from repro.core.mixed_attention import full_attention
+from repro.models import attention as attn
+from repro.models.context import StepCtx
+from repro.models.layers import (
+    apply_mlp, apply_norm, dense_init, init_mlp, init_norm, stack_params,
+)
+
+
+def input_spec_dim(cfg) -> int:
+    return cfg.frontend_dim
+
+
+def init_vit(key: jax.Array, cfg, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    blocks = []
+    key_i = ks[0]
+    for _ in range(cfg.num_layers):
+        key_i, sk = jax.random.split(key_i)
+        blocks.append(_init_block(sk, cfg, dtype))
+    p = {
+        "patch_proj": dense_init(ks[1], cfg.frontend_dim, cfg.d_model, dtype),
+        "cls": (jax.random.normal(ks[2], (cfg.d_model,), jnp.float32) * 0.02
+                ).astype(dtype),
+        "pos_embed": (jax.random.normal(ks[3], (4096, cfg.d_model), jnp.float32)
+                      * 0.02).astype(dtype),
+        "blocks": stack_params(blocks),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "head": dense_init(ks[4], cfg.d_model, cfg.num_classes, dtype),
+    }
+    return p
+
+
+def _init_block(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "norm1": init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+    if cfg.astra.enabled:
+        spec = vq.VQSpec(cfg.d_model, cfg.astra.groups, cfg.astra.codebook_size)
+        p["vq"] = vq.init(k3, spec, dtype)
+    return p
+
+
+def init_vit_navq(cfg):
+    if not cfg.astra.enabled:
+        return []
+    s = navq.init_residual_stats(cfg.d_model)
+    return jax.tree.map(lambda x: jnp.stack([x] * cfg.num_layers, 0), s)
+
+
+def _proj_kv(p_attn, x, cfg):
+    b, t, _ = x.shape
+    k = (x @ p_attn["wk"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ p_attn["wv"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _block(p, cls, x, *, ctx: StepCtx, rng, navq_stats, distributed_cls: bool):
+    """cls: (B, Ncls, D); x: (B, T, D)."""
+    cfg = ctx.cfg
+    b, t, d = x.shape
+    n = ctx.num_sim_shards
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    hc = apply_norm(p["norm1"], cls, cfg.norm)
+    commit = jnp.zeros((), jnp.float32)
+    res_pair = None
+
+    if ctx.astra_on:
+        spec = vq.VQSpec(cfg.d_model, cfg.astra.groups, cfg.astra.codebook_size)
+        x_hat, codes, commit = quantize_with_navq(
+            p["vq"], h, spec, noise_lambda=cfg.astra.noise_lambda,
+            train=ctx.train, rng=rng, stats=navq_stats)
+        res_pair = (jax.lax.stop_gradient(h), jax.lax.stop_gradient(x_hat))
+        q = (h @ p["attn"]["wq"]).reshape(b, t, cfg.num_heads, cfg.head_dim)
+        k_fp, v_fp = _proj_kv(p["attn"], h, cfg)
+        k_hat, v_hat = _proj_kv(p["attn"], x_hat, cfg)
+        cls_q = (hc @ p["attn"]["wq"]).reshape(b, -1, cfg.num_heads, cfg.head_dim)
+        cls_k, cls_v = _proj_kv(p["attn"], hc, cfg)
+        if distributed_cls:
+            cls_out, content_out = vit_mixed_attention_sim(
+                cls_q, cls_k, cls_v, q, k_fp, v_fp, k_hat, v_hat, num_shards=n)
+        else:
+            # ablation: single class token living on device 0
+            cls_out, content_out = _single_cls_attention(
+                cls_q, cls_k, cls_v, q, k_fp, v_fp, k_hat, v_hat, n)
+    else:
+        hx = jnp.concatenate([hc, h], axis=1)
+        q = (hx @ p["attn"]["wq"]).reshape(b, -1, cfg.num_heads, cfg.head_dim)
+        k, v = _proj_kv(p["attn"], hx, cfg)
+        pos = jnp.arange(hx.shape[1])
+        out = full_attention(q, k, v, q_pos=pos, k_pos=pos, causal=False)
+        cls_out, content_out = out[:, : cls.shape[1]], out[:, cls.shape[1]:]
+
+    ncls = cls.shape[1]
+    cls2 = cls + cls_out.reshape(b, ncls, -1) @ p["attn"]["wo"]
+    x2 = x + content_out.reshape(b, t, -1) @ p["attn"]["wo"]
+    hc2 = apply_norm(p["norm2"], cls2, cfg.norm)
+    h2 = apply_norm(p["norm2"], x2, cfg.norm)
+    cls3 = cls2 + apply_mlp(p["mlp"], hc2, cfg.activation)
+    x3 = x2 + apply_mlp(p["mlp"], h2, cfg.activation)
+    return cls3, x3, commit, res_pair
+
+
+def _single_cls_attention(cls_q, cls_k, cls_v, q, k_fp, v_fp, k_hat, v_hat, n):
+    """Single class token on device 0 (ablation, Appendix F Table 13)."""
+    from repro.core.mixed_attention import device_mixed_attention
+
+    b, t = q.shape[0], q.shape[1]
+    tl = t // n
+    # content tokens: every shard sees the (single) cls K/V in full precision
+    # — one token's embedding is negligible wire traffic; the ablation's
+    # asymmetry is in the cls QUERY below, which reads FP from shard 0 only.
+    tile = lambda a: jnp.broadcast_to(a[:, :1], (b, n) + a.shape[2:])
+    _, content_out = vit_mixed_attention_sim(
+        tile(cls_q), tile(cls_k), tile(cls_v), q, k_fp, v_fp, k_hat, v_hat,
+        num_shards=n)
+    # cls lives on device 0: FP access to shard 0 only
+    k0, v0 = k_fp[:, :tl], v_fp[:, :tl]
+    cq = cls_q[:, :1]
+    cls_out = device_mixed_attention(
+        cq, k0, v0, k_hat, v_hat, jnp.asarray(0), causal=False,
+        extra_kv=(cls_k[:, :1], cls_v[:, :1]))
+    return cls_out, content_out
+
+
+def vit_forward(
+    params: Dict,
+    batch: Dict,
+    *,
+    ctx: StepCtx,
+    rng: Optional[jax.Array] = None,
+    navq_state=None,
+) -> Tuple[jax.Array, Dict, Optional[Dict]]:
+    """batch: {"patch_embeds": (B, T, F)} -> (class logits, aux, new_navq)."""
+    cfg = ctx.cfg
+    dt = jnp.dtype(cfg.dtype)
+    pe = batch["patch_embeds"].astype(dt)
+    b, t, _ = pe.shape
+    x = pe @ params["patch_proj"].astype(dt) + params["pos_embed"][None, :t].astype(dt)
+    ncls = ctx.num_sim_shards if (ctx.astra_on and cfg.astra.distributed_cls) else 1
+    cls = jnp.broadcast_to(params["cls"].astype(dt)[None, None], (b, ncls, cfg.d_model))
+    base_rng = rng if rng is not None else jax.random.PRNGKey(0)
+    rngs = jax.random.split(base_rng, cfg.num_layers)
+
+    def body(carry, xs):
+        cls_c, x_c, cm = carry
+        p, r, nst = xs
+        cls_c, x_c, c, pair = _block(
+            p, cls_c, x_c, ctx=ctx, rng=r, navq_stats=nst if nst else None,
+            distributed_cls=cfg.astra.distributed_cls)
+        if pair is not None and nst:
+            res = (pair[0] - pair[1]).astype(jnp.float32).reshape(-1, cfg.d_model)
+            new_stats = {
+                "mean": 0.99 * nst["mean"] + 0.01 * jnp.mean(res, 0),
+                "var": 0.99 * nst["var"] + 0.01 * jnp.var(res, 0),
+                "count": nst["count"] + 1,
+            }
+        else:
+            new_stats = nst
+        return (cls_c, x_c, cm + c), new_stats
+
+    nst_in = navq_state if navq_state is not None else {}
+    (cls, x, commit), new_navq = jax.lax.scan(
+        body, (cls, x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], rngs, nst_in))
+    cls = apply_norm(params["final_norm"], cls, cfg.norm)
+    pooled = pool_class_tokens(cls)
+    logits = (pooled @ params["head"].astype(pooled.dtype)).astype(jnp.float32)
+    return logits, {"commit": commit, "moe_aux": jnp.zeros((), jnp.float32)}, new_navq

@@ -1,0 +1,131 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §5).
+
+compute    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+memory     = HLO_bytes / (chips * 819 GB/s HBM)
+collective = wire_bytes / (chips * 50 GB/s ICI per link)
+
+cost_analysis() is per SPMD program (per device); collective bytes are
+parsed out of the optimized HLO by summing result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+scaled to wire bytes with the standard ring factors.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+V5E = {
+    "peak_flops": 197e12,  # bf16 per chip
+    "hbm_bw": 819e9,  # bytes/s
+    "ici_bw": 50e9,  # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result-bytes -> wire-bytes ring factors (N = group size)
+def _wire_factor(op: str, n: int) -> float:
+    if op == "collective-permute":
+        return 1.0  # no replica_groups attr; always one hop of the result
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return (n - 1) / n  # result is the gathered buffer
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op == "reduce-scatter":
+        return float(n - 1)  # result is the scattered shard
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _first_shape_bytes(line: str) -> int:
+    """Bytes of the op's result (possibly a tuple: sum elements)."""
+    total = 0
+    # result is everything before ' = '... parse shapes on the lhs segment
+    lhs = line.split(" = ", 1)
+    seg = lhs[1] if len(lhs) == 2 else line
+    # first shape(s) right after '=' describe the result
+    m = _SHAPE_RE.findall(seg.split("(", 1)[0])
+    for dtype, dims in m:
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_SHAPE_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}", 1)[0]
+        ids = first.replace("{", "").split(",")
+        return max(len([i for i in ids if i.strip() != ""]), 1)
+    return 1
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-type result bytes, wire bytes and op counts."""
+    stats = {op: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0}
+             for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        for op in _COLLECTIVES:
+            # match the op name as the instruction, not a substring of names
+            if re.search(rf"\s{op}(-start)?\(", s) or re.search(
+                    rf"= [a-z0-9\[\],{{}} ]*{op}(-start)?\(", s):
+                n = _group_size(s)
+                b = _first_shape_bytes(s)
+                stats[op]["count"] += 1
+                stats[op]["result_bytes"] += b
+                stats[op]["wire_bytes"] += b * _wire_factor(op, n)
+                break
+    total = {
+        "count": sum(v["count"] for v in stats.values()),
+        "result_bytes": sum(v["result_bytes"] for v in stats.values()),
+        "wire_bytes": sum(v["wire_bytes"] for v in stats.values()),
+    }
+    stats["total"] = total
+    return stats
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   wire_bytes_per_device: float, hw: Dict = V5E) -> Dict:
+    compute = flops_per_device / hw["peak_flops"]
+    memory = bytes_per_device / hw["hbm_bw"]
+    collective = wire_bytes_per_device / hw["ici_bw"]
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    total = max(compute, memory, collective)
+    terms["roofline_s"] = total
+    terms["compute_fraction_of_roofline"] = compute / total if total else 0.0
+    return terms
+
+
+def model_flops(cfg, tokens: int, train: bool) -> float:
+    """6*N*D (dense) or 6*N_active*D (MoE); x1 for inference fwd (2*N*D)."""
+    n = cfg.active_param_count()
+    per_tok = 6.0 * n if train else 2.0 * n
+    return per_tok * tokens

@@ -1,0 +1,1 @@
+from repro.serving import engine, kv_cache, sampler  # noqa: F401

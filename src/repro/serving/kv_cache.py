@@ -1,0 +1,58 @@
+"""KV-cache bookkeeping + memory accounting (paper Appendix G)."""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+
+def kv_cache_bytes_fp(cfg: ModelConfig, seq_len: int, batch: int = 1,
+                      bytes_per_val: int = 2) -> int:
+    """Original model KV-cache bytes: 2 * N * L * d_kv * b (eq. 38)."""
+    layers = _attn_layers(cfg)
+    return 2 * batch * seq_len * layers * cfg.d_kv * bytes_per_val
+
+
+def kv_cache_bytes_astra(cfg: ModelConfig, seq_len: int, num_devices: int,
+                         batch: int = 1, bytes_per_val: int = 2) -> int:
+    """ASTRA per-device KV bytes (eq. 39): local FP + non-local VQ codes."""
+    layers = _attn_layers(cfg)
+    g = cfg.astra.groups
+    bits = math.log2(cfg.astra.codebook_size)
+    local = (seq_len / num_devices) * layers * cfg.d_kv * bytes_per_val
+    remote = (num_devices - 1) * (seq_len / num_devices) * layers * g * bits / 8
+    return int(2 * batch * (local + remote))
+
+
+def kv_cache_bytes_sharded(cfg: ModelConfig, seq_len: int, num_devices: int,
+                           batch: int = 1, bytes_per_val: int = 2) -> int:
+    """Our runtime's sharded cache (beyond-paper): disjoint FP shards."""
+    return kv_cache_bytes_fp(cfg, seq_len, batch, bytes_per_val) // num_devices
+
+
+def codebook_bytes(cfg: ModelConfig, bytes_per_val: int = 2) -> int:
+    """M_codebook = L * C * K * d * b (eq. 37); C=2 for quantize_mode='kv'."""
+    c = 2 if cfg.astra.quantize_mode == "kv" else 1
+    dim = cfg.d_kv if cfg.astra.quantize_mode == "kv" else cfg.d_model
+    return _attn_layers(cfg) * c * cfg.astra.codebook_size * dim * bytes_per_val
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.arch_type == "ssm":
+        return 0
+    if cfg.layer_pattern == "rg":
+        return cfg.num_layers - 2 * (cfg.num_layers // 3)
+    return cfg.num_layers
+
+
+def memory_report(cfg: ModelConfig, seq_len: int, num_devices: int) -> Dict:
+    fp = kv_cache_bytes_fp(cfg, seq_len)
+    return {
+        "kv_fp_bytes": fp,
+        "kv_astra_bytes": kv_cache_bytes_astra(cfg, seq_len, num_devices),
+        "kv_sharded_bytes": kv_cache_bytes_sharded(cfg, seq_len, num_devices),
+        "codebook_bytes": codebook_bytes(cfg),
+        "astra_fraction": kv_cache_bytes_astra(cfg, seq_len, num_devices) / fp
+        if fp else 0.0,
+    }

@@ -1,0 +1,17 @@
+"""Token samplers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(rng: jax.Array, logits: jax.Array, *, temperature: float = 0.0,
+                  top_k: int = 0) -> jax.Array:
+    """logits: (B, V) -> (B,) int32.  temperature 0 => greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jnp.sort(l, axis=-1)[:, -top_k][:, None]
+        l = jnp.where(l < kth, -1e30, l)
+    return jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)

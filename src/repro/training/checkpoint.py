@@ -1,0 +1,68 @@
+"""Flat-npz checkpointing for arbitrary pytrees (no orbax on this box).
+
+Leaves are stored under '/'-joined key paths; restore rebuilds into the
+structure of a provided template pytree (shape/dtype checked).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree, metadata: Dict[str, Any] | None = None) -> None:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f)
+
+
+def restore(path: str, template):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat = dict(data)
+
+    def rebuild(t, prefix=""):
+        if isinstance(t, dict):
+            return {k: rebuild(t[k], f"{prefix}{k}/") for k in t}
+        if isinstance(t, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}#{i}/") for i, v in enumerate(t)]
+            return type(t)(vals) if isinstance(t, tuple) else vals
+        key = prefix[:-1]
+        arr = flat[key]
+        want = np.asarray(t)
+        if arr.shape != want.shape:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"template {want.shape}")
+        return jax.numpy.asarray(arr.astype(want.dtype))
+
+    return rebuild(template)
+
+
+def load_metadata(path: str) -> Dict[str, Any]:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with open(path + ".meta.json") as f:
+        return json.load(f)

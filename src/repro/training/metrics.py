@@ -1,0 +1,63 @@
+"""Training/serving metrics: JSONL logger + throughput meters.
+
+Kept dependency-free (no tensorboard on this box); the JSONL stream is the
+interchange format for dashboards.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+
+class JsonlLogger:
+    """Append-only JSONL metrics stream with a wall-clock column."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._t0 = time.time()
+        self._fh = None
+        if path:
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            self._fh = open(path, "a", buffering=1)
+
+    def log(self, step: int, **metrics: Any) -> Dict[str, Any]:
+        rec = {"step": step, "wall_s": round(time.time() - self._t0, 3)}
+        rec.update({k: (float(v) if hasattr(v, "__float__") else v)
+                    for k, v in metrics.items()})
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+        return rec
+
+    def close(self) -> None:
+        if self._fh:
+            self._fh.close()
+
+
+class ThroughputMeter:
+    """Tokens/sec + step-time EMA."""
+
+    def __init__(self, ema: float = 0.9):
+        self.ema = ema
+        self._last = None
+        self.step_s = 0.0
+        self.tok_per_s = 0.0
+
+    def tick(self, tokens: int) -> Dict[str, float]:
+        now = time.time()
+        if self._last is not None:
+            dt = max(now - self._last, 1e-9)
+            inst = tokens / dt
+            a = self.ema if self.step_s else 0.0
+            self.step_s = a * self.step_s + (1 - a) * dt
+            self.tok_per_s = a * self.tok_per_s + (1 - a) * inst
+        self._last = now
+        return {"step_s": self.step_s, "tok_per_s": self.tok_per_s}
+
+
+def mfu(tok_per_s: float, params: int, chips: int,
+        peak_flops: float = 197e12, train: bool = True) -> float:
+    """Model-FLOPs utilisation: achieved 6ND (or 2ND) flops / peak."""
+    per_tok = (6.0 if train else 2.0) * params
+    return tok_per_s * per_tok / (chips * peak_flops)

@@ -1,0 +1,134 @@
+"""ASTRA fine-tuning loop (paper §3.2/§3.3 recipe, eq. 2).
+
+Loss = task loss + beta * ||X - sg(X_hat)||^2 (commitment, per-element mean)
+       + MoE aux loss.
+Straight-through estimator + NAVQ noise live in the sim-mode forward; the
+per-layer NAVQ residual statistics ride along as model state and are
+EMA-updated every step.  Codebooks are trained by gradient (through the
+dequantized attention path) — functionally equivalent to the paper's EMA
+update; recorded as a deviation in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model_factory as mf
+from repro.models.context import StepCtx
+from repro.training import optimizer as opt_mod
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Dict[str, Any]
+    navq: Any
+    rng: jax.Array
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, ctx: StepCtx,
+                    opt_cfg: opt_mod.AdamWConfig) -> Callable:
+    is_vit = cfg.arch_type == "vit"
+
+    def loss_fn(params, batch, navq_state, rng):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits, aux, new_navq = mf.forward(
+            params, inputs, ctx=ctx, rng=rng, navq_state=navq_state)
+        labels = batch["labels"]
+        if is_vit:
+            task = cross_entropy(logits, labels)
+        else:
+            # logits cover the concatenated stream for VLMs; score the tail
+            t_lab = labels.shape[1]
+            task = cross_entropy(logits[:, -t_lab:], labels)
+        n_elts = jnp.asarray(labels.size, jnp.float32)
+        commit = aux["commit"] / jnp.maximum(n_elts, 1.0)
+        total = task + cfg.astra.commit_beta * commit + aux["moe_aux"]
+        metrics = {"loss": total, "task_loss": task, "commit": commit,
+                   "moe_aux": aux["moe_aux"]}
+        return total, (metrics, new_navq)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        rng, sub = jax.random.split(state.rng)
+        (_, (metrics, new_navq)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch, state.navq, sub)
+        new_params, new_opt, om = opt_mod.adamw_update(
+            state.params, grads, state.opt, opt_cfg)
+        metrics.update(om)
+        return TrainState(new_params, new_opt, new_navq, rng), metrics
+
+    return jax.jit(train_step)
+
+
+class Trainer:
+    """Single-host trainer running the paper's simulated-N-device fine-tune."""
+
+    def __init__(self, cfg: ModelConfig, *, num_devices_sim: int = 4,
+                 opt_cfg: Optional[opt_mod.AdamWConfig] = None,
+                 astra_mode: str = "sim", seed: int = 42):
+        self.cfg = cfg
+        self.ctx = StepCtx(cfg=cfg, mode="train", astra_mode=astra_mode,
+                           train=True, num_sim_shards=num_devices_sim)
+        self.opt_cfg = opt_cfg or opt_mod.AdamWConfig()
+        key = jax.random.PRNGKey(seed)
+        pkey, rkey = jax.random.split(key)
+        params = mf.init_params(pkey, cfg)
+        self.state = TrainState(
+            params=params,
+            opt=opt_mod.init_opt_state(params, self.opt_cfg),
+            navq=mf.init_navq_state(cfg),
+            rng=rkey,
+        )
+        self._step_fn = make_train_step(cfg, self.ctx, self.opt_cfg)
+
+    def fit(self, data: Iterator[Dict], steps: int,
+            log_every: int = 10, log: bool = True) -> List[Dict[str, float]]:
+        history = []
+        t0 = time.time()
+        for i in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            self.state, metrics = self._step_fn(self.state, batch)
+            if i % log_every == 0 or i == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = i
+                m["wall_s"] = time.time() - t0
+                history.append(m)
+                if log:
+                    print(f"step {i:5d} loss {m['loss']:.4f} "
+                          f"task {m['task_loss']:.4f} commit {m['commit']:.4f}")
+        return history
+
+    def eval_loss(self, data: Iterator[Dict], batches: int = 8) -> float:
+        ctx_eval = dataclasses.replace(self.ctx, train=False)
+        is_vit = self.cfg.arch_type == "vit"
+
+        @jax.jit
+        def eval_one(params, navq_state, batch):
+            inputs = {k: v for k, v in batch.items() if k != "labels"}
+            logits, _, _ = mf.forward(params, inputs, ctx=ctx_eval,
+                                      navq_state=navq_state)
+            labels = batch["labels"]
+            if is_vit:
+                return cross_entropy(logits, labels)
+            return cross_entropy(logits[:, -labels.shape[1]:], labels)
+
+        tot = 0.0
+        for _ in range(batches):
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            tot += float(eval_one(self.state.params, self.state.navq, batch))
+        return tot / batches

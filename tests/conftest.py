@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests run on the single real host device (the dry-run sets its own
+# 512-device flag in its own process; never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(42)

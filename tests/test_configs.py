@@ -1,0 +1,88 @@
+"""Every assigned architecture's config matches the assignment table."""
+import pytest
+
+from repro.configs import ASSIGNED, SHAPES, all_configs, get_config
+
+# (layers, d_model, heads, kv_heads, d_ff, vocab)
+EXPECTED = {
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+    "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+    "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+}
+
+
+def test_ten_assigned():
+    assert len(ASSIGNED) == 10
+    assert set(ASSIGNED) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    l, d, h, kv, ff, v = EXPECTED[arch]
+    assert cfg.num_layers == l
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.citation  # every config cites its source
+
+
+def test_arch_type_coverage():
+    types = {c.arch_type for n, c in all_configs().items() if n in ASSIGNED}
+    assert {"moe", "dense", "ssm", "hybrid", "encdec", "vlm"} <= types
+
+
+def test_moe_settings():
+    dbrx = get_config("dbrx-132b")
+    assert dbrx.moe.num_experts == 16 and dbrx.moe.top_k == 4
+    scout = get_config("llama4-scout-17b-a16e")
+    assert scout.moe.num_experts == 16 and scout.moe.top_k == 1
+
+
+def test_ssm_settings():
+    m = get_config("mamba2-130m")
+    assert m.ssm_state == 128
+    assert not m.astra.enabled  # technique inapplicable (attention-free)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_reduced_within_smoke_limits(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers <= 2
+    assert r.d_model <= 512
+    if r.moe is not None:
+        assert r.moe.num_experts <= 4
+
+
+def test_shapes_table():
+    by = {s.name: s for s in SHAPES}
+    assert (by["train_4k"].seq_len, by["train_4k"].global_batch) == (4096, 256)
+    assert (by["prefill_32k"].seq_len, by["prefill_32k"].global_batch) == (32768, 32)
+    assert (by["decode_32k"].seq_len, by["decode_32k"].global_batch) == (32768, 128)
+    assert (by["long_500k"].seq_len, by["long_500k"].global_batch) == (524288, 1)
+
+
+def test_long_context_flags():
+    assert get_config("mamba2-130m").supports_long_context
+    assert get_config("recurrentgemma-9b").supports_long_context
+    assert get_config("gemma2-27b").supports_long_context
+    assert not get_config("llama3-405b").supports_long_context
+
+
+def test_param_counts_order_of_magnitude():
+    """Rough param counts should land near the model names."""
+    assert 2e9 < get_config("starcoder2-3b").param_count() < 5e9
+    assert 300e9 < get_config("llama3-405b").param_count() < 500e9
+    assert 90e9 < get_config("dbrx-132b").param_count() < 180e9
+    assert 0.1e9 < get_config("mamba2-130m").param_count() < 0.3e9
+    a = get_config("llama4-scout-17b-a16e")
+    assert 12e9 < a.active_param_count() < 25e9

@@ -1,0 +1,46 @@
+"""Distributed-runtime parity: shard_map paths vs single-process references.
+
+These run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=4
+so the rest of the suite keeps the single real device (per the dry-run rule).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "scripts", script)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.mark.slow
+def test_spmd_parity_suite():
+    r = _run("spmd_checks.py")
+    sys.stdout.write(r.stdout[-4000:])
+    sys.stderr.write(r.stderr[-2000:])
+    assert r.returncode == 0
+    assert "ALL SPMD CHECKS OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo_executes():
+    """The dry-run entry point itself (with its 512-device flag) lowers,
+    compiles and reports a roofline for one combo."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "starcoder2-3b", "--shape", "decode_32k", "--tag", "unittest"],
+        capture_output=True, text=True, timeout=560, env=env, cwd=ROOT)
+    sys.stdout.write(r.stdout[-2000:])
+    assert r.returncode == 0
+    assert "[ok" in r.stdout

@@ -1,0 +1,222 @@
+"""Pallas kernel sweeps (interpret=True on CPU) vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.mixed_attn import mixed_flash_attention
+from repro.kernels.ops import assign_codes, mixed_attention
+from repro.kernels.vq_assign import vq_assign
+
+
+# ---------------------------------------------------------------------------
+# vq_assign
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,g,dg,k,bt,bk", [
+    (64, 1, 8, 32, 32, 16),
+    (128, 4, 4, 64, 64, 64),
+    (256, 2, 16, 128, 256, 32),
+    (32, 8, 2, 16, 32, 16),
+])
+def test_vq_assign_shapes(t, g, dg, k, bt, bk):
+    kx, kc = jax.random.split(jax.random.PRNGKey(t + g))
+    x = jax.random.normal(kx, (t, g, dg))
+    cb = jax.random.normal(kc, (g, k, dg))
+    got = vq_assign(x, cb, block_t=bt, block_k=bk, interpret=True)
+    want = ref.vq_assign_ref(x, cb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vq_assign_dtypes(dtype):
+    kx, kc = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (64, 2, 8)).astype(dtype)
+    cb = jax.random.normal(kc, (2, 32, 8)).astype(dtype)
+    got = vq_assign(x, cb, block_t=32, block_k=32, interpret=True)
+    want = ref.vq_assign_ref(x, cb)
+    # identical fp32 accumulate path -> exact match expected
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_vq_assign_multiblock_argmin_crosses_blocks():
+    """The running argmin must pick winners from any codebook block."""
+    t, g, dg, k = 16, 1, 4, 64
+    x = jnp.zeros((t, g, dg))
+    cb = jnp.ones((g, k, dg))
+    # plant the unique nearest centroid in the last block
+    cb = cb.at[0, k - 3].set(0.0)
+    got = vq_assign(x, cb, block_t=16, block_k=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), k - 3)
+
+
+def test_assign_codes_wrapper_matches_core_vq():
+    from repro.core import vq as core_vq
+
+    spec = core_vq.VQSpec(16, 4, 32)
+    params = core_vq.init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 20, 16))
+    want = core_vq.encode(params, x, spec)
+    got = assign_codes(x, params["codebook"], groups=4, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# mixed flash attention
+# ---------------------------------------------------------------------------
+
+
+def _mk_case(key, b, h, hkv, t, tl, hd, g_per_head, k, offset_blocks, bkv):
+    ks = jax.random.split(key, 8)
+    g = g_per_head * hkv
+    dg = hd // g_per_head
+    q_t = tl  # queries = the local shard
+    q = jax.random.normal(ks[0], (b, h, q_t, hd))
+    k_local = jax.random.normal(ks[1], (b, hkv, tl, hd))
+    v_local = jax.random.normal(ks[2], (b, hkv, tl, hd))
+    k_codes = jax.random.randint(ks[3], (b, t, g), 0, k, jnp.int32)
+    v_codes = jax.random.randint(ks[4], (b, t, g), 0, k, jnp.int32)
+    cb_k = jax.random.normal(ks[5], (g, k, dg))
+    cb_v = jax.random.normal(ks[6], (g, k, dg))
+    offset = jnp.asarray(offset_blocks * bkv, jnp.int32)
+    return q, k_local, v_local, k_codes, v_codes, cb_k, cb_v, offset
+
+
+@pytest.mark.parametrize("b,h,hkv,t,tl,hd,gph,k,off,bq,bkv", [
+    (1, 2, 1, 64, 16, 8, 2, 16, 0, 16, 16),
+    (2, 4, 2, 64, 32, 8, 1, 32, 1, 16, 16),
+    (1, 2, 2, 128, 32, 16, 4, 64, 2, 32, 32),
+    (1, 1, 1, 32, 32, 8, 2, 16, 0, 16, 16),  # all-local
+])
+def test_mixed_flash_vs_ref(b, h, hkv, t, tl, hd, gph, k, off, bq, bkv):
+    args = _mk_case(jax.random.PRNGKey(b * 100 + t), b, h, hkv, t, tl, hd,
+                    gph, k, off, bkv)
+    got = mixed_flash_attention(*args, causal=True, block_q=bq, block_kv=bkv,
+                                interpret=True)
+    want = ref.mixed_flash_ref(*args, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_mixed_flash_masks_and_softcap(causal, softcap):
+    args = _mk_case(jax.random.PRNGKey(7), 1, 2, 1, 64, 16, 8, 2, 16, 1, 16)
+    got = mixed_flash_attention(*args, causal=causal, softcap=softcap,
+                                block_q=16, block_kv=16, interpret=True)
+    want = ref.mixed_flash_ref(*args, causal=causal, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mixed_flash_dtypes(dtype):
+    (q, kl, vl, kc, vc, cbk, cbv, off) = _mk_case(
+        jax.random.PRNGKey(3), 1, 2, 1, 64, 16, 8, 2, 16, 0, 16)
+    q, kl, vl = q.astype(dtype), kl.astype(dtype), vl.astype(dtype)
+    cbk, cbv = cbk.astype(dtype), cbv.astype(dtype)
+    got = mixed_flash_attention(q, kl, vl, kc, vc, cbk, cbv, off,
+                                causal=True, block_q=16, block_kv=16,
+                                interpret=True)
+    want = ref.mixed_flash_ref(q, kl, vl, kc, vc, cbk, cbv, off, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol,
+                               atol=tol)
+    assert got.dtype == dtype
+
+
+def test_mixed_flash_local_block_uses_fp():
+    """Poisoned codes inside the local range must not affect the output."""
+    (q, kl, vl, kc, vc, cbk, cbv, off) = _mk_case(
+        jax.random.PRNGKey(5), 1, 2, 1, 64, 16, 8, 2, 16, 1, 16)
+    o1 = mixed_flash_attention(q, kl, vl, kc, vc, cbk, cbv, off, causal=True,
+                               block_q=16, block_kv=16, interpret=True)
+    # corrupt codes in [offset, offset+tl)
+    kc2 = kc.at[:, 16:32].set(0)
+    vc2 = vc.at[:, 16:32].set(0)
+    o2 = mixed_flash_attention(q, kl, vl, kc2, vc2, cbk, cbv, off,
+                               causal=True, block_q=16, block_kv=16,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+
+
+def test_ops_wrapper_ref_path():
+    args = _mk_case(jax.random.PRNGKey(9), 1, 2, 1, 64, 16, 8, 2, 16, 0, 16)
+    got = mixed_attention(*args, causal=True, use_pallas=True, block_q=16,
+                          block_kv=16)
+    want = mixed_attention(*args, causal=True, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# vq decode attention (flash partials over a coded cache)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,hkv,s,hd,gph,k,bkv", [
+    (2, 4, 2, 64, 8, 2, 16, 16),
+    (1, 2, 1, 128, 16, 4, 32, 32),
+    (3, 8, 8, 32, 8, 1, 64, 16),
+])
+def test_vq_decode_attention_vs_ref(b, h, hkv, s, hd, gph, k, bkv):
+    from repro.kernels.vq_decode_attn import vq_decode_attention
+
+    g = gph * hkv
+    dg = hd // gph
+    ks = jax.random.split(jax.random.PRNGKey(b * 10 + s), 6)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kc = jax.random.randint(ks[1], (b, s, g), 0, k, jnp.int32)
+    vc = jax.random.randint(ks[2], (b, s, g), 0, k, jnp.int32)
+    cbk = jax.random.normal(ks[3], (g, k, dg))
+    cbv = jax.random.normal(ks[4], (g, k, dg))
+    lengths = jax.random.randint(ks[5], (b,), 0, s, jnp.int32)
+    m, l, acc = vq_decode_attention(q, kc, vc, cbk, cbv, lengths,
+                                    block_kv=bkv, interpret=True)
+    m_r, l_r, a_r = ref.vq_decode_attn_ref(q, kc, vc, cbk, cbv, lengths)
+    # partials normalise to the same output (m may differ by blockwise max
+    # only when a block is fully masked; compare the normalised output)
+    out = acc / np.maximum(np.asarray(l)[..., None], 1e-30) * \
+        np.exp(np.asarray(m) - np.asarray(m_r))[..., None]
+    out_r = np.asarray(a_r) / np.maximum(np.asarray(l_r)[..., None], 1e-30)
+    np.testing.assert_allclose(
+        np.asarray(acc) * np.exp(np.asarray(m) - np.asarray(m_r))[..., None]
+        / np.maximum((np.asarray(l) * np.exp(np.asarray(m)
+                                             - np.asarray(m_r)))[..., None],
+                     1e-30),
+        out_r, rtol=2e-5, atol=2e-5)
+
+
+def test_vq_decode_attention_matches_fp_when_codebook_lossless():
+    """With every cached vector an exact codebook row, the kernel's output
+    equals exact attention over the dequantized cache."""
+    from repro.core.mixed_attention import partial_attention_stats
+    from repro.kernels.vq_decode_attn import vq_decode_attention
+
+    b, h, s, hd, k = 1, 2, 32, 8, 16
+    g, dg = 2, 4
+    keyiter = jax.random.split(jax.random.PRNGKey(0), 4)
+    cbk = jax.random.normal(keyiter[0], (g, k, dg))
+    cbv = jax.random.normal(keyiter[1], (g, k, dg))
+    kc = jax.random.randint(keyiter[2], (b, s, g), 0, k, jnp.int32)
+    vc = jax.random.randint(keyiter[3], (b, s, g), 0, k, jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(5), (b, h, hd))
+    lengths = jnp.asarray([20], jnp.int32)
+
+    m, l, acc = vq_decode_attention(q, kc, vc, cbk, cbv, lengths,
+                                    block_kv=16, interpret=True)
+    out = np.asarray(acc / np.maximum(np.asarray(l)[..., None], 1e-30))
+
+    kv = ref.dequant_head(kc[0], cbk, 0, hd)[None, :, None]  # (1,S,1,hd)
+    vv = ref.dequant_head(vc[0], cbv, 0, hd)[None, :, None]
+    valid = (jnp.arange(s) <= lengths[:, None])
+    m2, l2, o2 = partial_attention_stats(q[:, None][:, 0:1].swapaxes(1, 1),
+                                         kv, vv, k_valid=valid)
+    # reference via partial stats (q reshaped (B,1,H,hd))
+    m2, l2, o2 = partial_attention_stats(q[:, None, :, :], kv, vv,
+                                         k_valid=valid)
+    want = np.asarray(o2 / jnp.moveaxis(l2, 1, 2)[..., None])[:, 0]
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,39 @@
+"""Metrics substrate: JSONL logger, throughput meter, MFU."""
+import json
+import time
+
+from repro.training.metrics import JsonlLogger, ThroughputMeter, mfu
+
+
+def test_jsonl_logger_roundtrip(tmp_path):
+    p = str(tmp_path / "m.jsonl")
+    lg = JsonlLogger(p)
+    lg.log(0, loss=1.5, tag="a")
+    lg.log(1, loss=1.25)
+    lg.close()
+    rows = [json.loads(l) for l in open(p)]
+    assert rows[0]["loss"] == 1.5 and rows[0]["tag"] == "a"
+    assert rows[1]["step"] == 1
+    assert all("wall_s" in r for r in rows)
+
+
+def test_logger_without_path_returns_record():
+    lg = JsonlLogger(None)
+    rec = lg.log(3, x=2)
+    assert rec["step"] == 3 and rec["x"] == 2.0
+
+
+def test_throughput_meter_positive():
+    m = ThroughputMeter()
+    m.tick(100)
+    time.sleep(0.01)
+    out = m.tick(100)
+    assert out["tok_per_s"] > 0
+    assert out["step_s"] > 0
+
+
+def test_mfu_formula():
+    # 1000 tok/s on one chip with 1B params training:
+    # 6e9 * 1000 / 197e12 = ~3.05%
+    assert abs(mfu(1000, int(1e9), 1) - 6e12 / 197e12) < 1e-9
+    assert mfu(1000, int(1e9), 1, train=False) < mfu(1000, int(1e9), 1)

@@ -1,0 +1,245 @@
+"""MoE router, SSD (mamba2) scan, RG-LRU — the non-dense substrate."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import mamba2, moe as moe_mod, rglru
+from repro.models.context import StepCtx
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def moe_cfg(num_experts=4, top_k=2, shared=0, cap=4.0):
+    cfg = get_config("dbrx-132b").reduced()
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, num_experts=num_experts,
+                                     top_k=top_k, capacity_factor=cap,
+                                     num_shared_experts=shared))
+
+
+def test_moe_output_shape_and_aux():
+    cfg = moe_cfg()
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, aux = moe_mod.apply_moe(p, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) > 0.0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_topk_1_selects_single_expert():
+    """With top_k=1 and ample capacity, output equals the argmax expert's
+    FFN exactly (gate weight normalises to 1)."""
+    cfg = moe_cfg(num_experts=4, top_k=1, cap=16.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, cfg.d_model))
+    y, _ = moe_mod.apply_moe(p, x, cfg)
+
+    xf = x.reshape(-1, cfg.d_model)
+    logits = xf @ p["router"]
+    top = jnp.argmax(logits, -1)
+    h = xf[:, None, :]  # (N, 1, D) -> run all experts, pick routed one
+    all_out = []
+    for e in range(4):
+        pe = {"w_up": p["w_up"][e:e + 1], "w_down": p["w_down"][e:e + 1]}
+        if "w_gate" in p:
+            pe["w_gate"] = p["w_gate"][e:e + 1]
+        all_out.append(moe_mod._expert_ffn(pe, h[:, 0:1, :].swapaxes(0, 1),
+                                           cfg.activation)[0])
+    want = jnp.stack(all_out, 0)[top, jnp.arange(xf.shape[0])]
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity 1 token/expert, most routed slots are dropped and the
+    output magnitude falls (never NaN)."""
+    cfg = moe_cfg(num_experts=2, top_k=2, cap=0.01)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model))
+    y, _ = moe_mod.apply_moe(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    cfg2 = moe_cfg(num_experts=2, top_k=2, cap=16.0)
+    y2, _ = moe_mod.apply_moe(p, x, cfg2)
+    assert float(jnp.sum(jnp.abs(y))) < float(jnp.sum(jnp.abs(y2)))
+
+
+def test_moe_shared_expert_always_on():
+    cfg = moe_cfg(shared=1)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    assert "shared" in p
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, cfg.d_model))
+    y, _ = moe_mod.apply_moe(p, x, cfg)
+    # zeroing the shared expert changes the output for every token
+    p2 = dict(p)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    y2, _ = moe_mod.apply_moe(p2, x, cfg)
+    assert float(jnp.max(jnp.abs(y - y2))) > 1e-6
+
+
+def test_moe_aux_loss_prefers_balance():
+    """Uniform routing probabilities minimise the Switch aux loss (==w)."""
+    cfg = moe_cfg(num_experts=4, top_k=1)
+    e = 4
+    n = 1024
+    key = jax.random.PRNGKey(0)
+    # craft router inputs: balanced vs collapsed
+    probs_bal = jnp.full((n, e), 0.25)
+    probs_col = jnp.asarray([[0.97, 0.01, 0.01, 0.01]] * n)
+
+    def aux_of(probs):
+        idx = jnp.argmax(probs + 1e-6 * jax.random.normal(key, probs.shape),
+                         -1)[:, None]
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+        frac = jnp.mean(jnp.sum(onehot, 1), 0)
+        return float(e * jnp.sum(frac * jnp.mean(probs, 0)))
+
+    assert aux_of(probs_bal) < aux_of(probs_col)
+
+
+# ---------------------------------------------------------------------------
+# SSD / mamba2
+# ---------------------------------------------------------------------------
+
+
+def _naive_ssd(x, dt, A, B, C, init_state=None):
+    """O(T) sequential reference: h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T;
+    y_t = C_t h_t."""
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    state = (jnp.zeros((b, h, p, n)) if init_state is None
+             else init_state.astype(jnp.float32))
+    ys = []
+    for i in range(t):
+        decay = jnp.exp(dt[:, i] * A)  # (b, h)
+        upd = jnp.einsum("bhp,bn->bhpn", dt[:, i, :, None] * x[:, i],
+                         B[:, i])
+        state = decay[..., None, None] * state + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, C[:, i]))
+    return jnp.stack(ys, 1), state
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.sampled_from([8, 16, 32]), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 50))
+def test_ssd_chunked_matches_naive(t, chunk, seed):
+    b, h, p, n = 1, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, t, n))
+    C = jax.random.normal(ks[4], (b, t, n))
+    y, fin, _ = mamba2.ssd_scan(x, dt, A, B, C, chunk)
+    y_ref, fin_ref = _naive_ssd(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_with_initial_state():
+    b, t, h, p, n = 1, 12, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, t, n))
+    C = jax.random.normal(ks[4], (b, t, n))
+    s0 = jax.random.normal(ks[5], (b, h, p, n))
+    y, fin, _ = mamba2.ssd_scan(x, dt, A, B, C, 4, s0)
+    y_ref, fin_ref = _naive_ssd(x, dt, A, B, C, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_step_matches_scan_tail():
+    """Decode step after a prefill equals the full-sequence scan."""
+    b, t, h, p, n = 1, 9, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, t, n))
+    C = jax.random.normal(ks[4], (b, t, n))
+    y_all, _, _ = mamba2.ssd_scan(x, dt, A, B, C, 4)
+    _, state, _ = mamba2.ssd_scan(x[:, :-1], dt[:, :-1], A, B[:, :-1],
+                                  C[:, :-1], 4)
+    y_t, _ = mamba2.ssd_step(state, x[:, -1], dt[:, -1], A, B[:, -1],
+                             C[:, -1])
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_all[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_causal_conv_step_parity():
+    cfg = get_config("mamba2-130m").reduced()
+    d = 8
+    w = jax.random.normal(jax.random.PRNGKey(0), (cfg.conv_width, d))
+    bbias = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 10, d))
+    y_full = mamba2.causal_conv(x, w, bbias)
+    state = jnp.zeros((1, cfg.conv_width - 1, d))
+    outs = []
+    for i in range(10):
+        y_t, state = mamba2.conv_step(state, x[:, i], w, bbias)
+        outs.append(y_t)
+    y_step = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mamba_forward_decode_parity():
+    """Prefill(T) then decode(+1) == forward(T+1) for the full block."""
+    cfg = get_config("mamba2-130m").reduced()
+    p = mamba2.init_mamba(jax.random.PRNGKey(0), cfg)
+    ctx = StepCtx(cfg=cfg, mode="prefill", astra_mode="off")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model))
+    y_full, _ = mamba2.mamba_forward(p, x, ctx=ctx)
+    cache = mamba2.init_mamba_cache(cfg, 2)
+    y_pre, cache = mamba2.mamba_forward(p, x[:, :-1], ctx=ctx, cache=cache)
+    ctx_d = StepCtx(cfg=cfg, mode="decode", astra_mode="off")
+    y_dec, _ = mamba2.mamba_decode(p, x[:, -1:], cache, ctx=ctx_d)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_full[:, -1]), rtol=2e-3,
+                               atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+
+def test_rglru_scan_step_parity():
+    cfg = get_config("recurrentgemma-9b").reduced()
+    p = rglru.init_rglru(jax.random.PRNGKey(0), cfg)
+    ctx = StepCtx(cfg=cfg, mode="prefill", astra_mode="off")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, cfg.d_model))
+    y_full, _ = rglru.rg_block_forward(p, x, ctx=ctx)
+
+    cache = rglru.init_rg_cache(cfg, 2)
+    ctx_d = StepCtx(cfg=cfg, mode="decode", astra_mode="off")
+    outs = []
+    for i in range(10):
+        y_t, cache = rglru.rg_block_decode(p, x[:, i:i + 1], cache, ctx=ctx_d)
+        outs.append(y_t)
+    y_step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_decay_bounded():
+    """RG-LRU recurrence gate a_t in (0, 1): bounded state growth."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    p = rglru.init_rglru(jax.random.PRNGKey(0), cfg)
+    x = 100.0 * jax.random.normal(jax.random.PRNGKey(1),
+                                  (1, 64, rglru.lru_width(cfg)))
+    h, _, _ = rglru.rglru_scan(p, x)
+    assert bool(jnp.all(jnp.isfinite(h)))

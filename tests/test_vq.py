@@ -1,0 +1,216 @@
+"""Unit + property tests for the VQ module (paper §2/§3.2) and NAVQ (§3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import navq, vq
+
+
+def spec_and_params(key, dim, groups, k):
+    spec = vq.VQSpec(dim, groups, k)
+    return spec, vq.init(key, spec)
+
+
+# ---------------------------------------------------------------------------
+# encode / decode
+# ---------------------------------------------------------------------------
+
+
+def test_codes_shape_dtype_range():
+    key = jax.random.PRNGKey(0)
+    spec, params = spec_and_params(key, 32, 4, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 7, 32))
+    codes = vq.encode(params, x, spec)
+    assert codes.shape == (3, 7, 4)
+    assert codes.dtype == jnp.int32
+    assert int(codes.min()) >= 0 and int(codes.max()) < 16
+
+
+def test_codebook_rows_are_fixed_points():
+    """Quantizing a centroid returns exactly that centroid."""
+    key = jax.random.PRNGKey(0)
+    spec, params = spec_and_params(key, 24, 3, 8)
+    cb = params["codebook"]  # (3, 8, 8)
+    # build x whose g-th group equals centroid j of group g
+    for j in range(spec.codebook_size):
+        x = cb[:, j, :].reshape(-1)[None]  # (1, 24)
+        codes = vq.encode(params, x, spec)
+        np.testing.assert_array_equal(np.asarray(codes[0]), j)
+        x_hat = vq.decode(params, codes, spec)
+        np.testing.assert_allclose(np.asarray(x_hat), np.asarray(x),
+                                   rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    groups=st.sampled_from([1, 2, 4]),
+    dg=st.integers(2, 8),
+    k=st.sampled_from([4, 16, 64]),
+    t=st.integers(1, 9),
+)
+def test_property_decode_encode_idempotent(groups, dg, k, t):
+    """decode∘encode is idempotent: quantizing a dequantized vector is a
+    no-op."""
+    dim = groups * dg
+    spec = vq.VQSpec(dim, groups, k)
+    params = vq.init(jax.random.PRNGKey(dim * k + t), spec)
+    x = jax.random.normal(jax.random.PRNGKey(t), (t, dim))
+    c1 = vq.encode(params, x, spec)
+    x_hat = vq.decode(params, c1, spec)
+    c2 = vq.encode(params, x_hat, spec)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(vq.decode(params, c2, spec)),
+                               np.asarray(x_hat), rtol=1e-6)
+
+
+def test_straight_through_gradient_is_identity():
+    key = jax.random.PRNGKey(0)
+    spec, params = spec_and_params(key, 16, 2, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 16))
+
+    g = jax.grad(lambda xx: jnp.sum(vq.quantize_st(params, xx, spec)[0]))(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0, rtol=1e-6)
+
+
+def test_commit_loss_zero_for_codebook_rows():
+    key = jax.random.PRNGKey(0)
+    spec, params = spec_and_params(key, 16, 2, 8)
+    x = params["codebook"][:, 3, :].reshape(-1)[None]
+    _, _, commit = vq.quantize_st(params, x, spec)
+    assert float(commit) < 1e-10
+
+
+def test_commit_gradient_pulls_x_toward_centroid():
+    key = jax.random.PRNGKey(0)
+    spec, params = spec_and_params(key, 8, 1, 4)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8))
+
+    def commit_loss(xx):
+        return vq.quantize_st(params, xx, spec)[2]
+
+    g = jax.grad(commit_loss)(x)
+    x_hat = vq.decode(params, vq.encode(params, x, spec), spec)
+    # d/dx ||x - sg(x_hat)||^2 = 2 (x - x_hat)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(x - x_hat),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# packing (wire format)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,expect_dtype", [(16, jnp.uint8), (256, jnp.uint8),
+                                            (1024, jnp.uint16),
+                                            (65536, jnp.uint16)])
+def test_pack_roundtrip(k, expect_dtype):
+    spec = vq.VQSpec(8, 2, k)
+    codes = jax.random.randint(jax.random.PRNGKey(0), (4, 6, 2), 0, k,
+                               jnp.int32)
+    packed = vq.pack_codes(codes, spec)
+    assert packed.dtype == expect_dtype
+    out = vq.unpack_codes(packed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+def test_bits_per_token_matches_paper():
+    # ViT-Base/GPT2: K=1024 -> 10 bits; G in {1, 16, 32}
+    assert vq.VQSpec(768, 1, 1024).bits_per_token == 10
+    assert vq.VQSpec(768, 16, 1024).bits_per_token == 160
+    assert vq.VQSpec(768, 32, 1024).bits_per_token == 320
+
+
+# ---------------------------------------------------------------------------
+# k-means init + EMA updates (paper training recipe)
+# ---------------------------------------------------------------------------
+
+
+def test_kmeans_init_beats_random_init():
+    key = jax.random.PRNGKey(0)
+    spec = vq.VQSpec(16, 2, 16)
+    data = jax.random.normal(key, (512, 16)) * 3.0 + 1.0
+    rand = vq.init(jax.random.PRNGKey(1), spec)
+    km = vq.kmeans_init(jax.random.PRNGKey(2), data, spec, iters=10)
+
+    def mse(params):
+        x_hat = vq.decode(params, vq.encode(params, data, spec), spec)
+        return float(jnp.mean(jnp.square(data - x_hat)))
+
+    assert mse(km) < mse(rand)
+
+
+def test_ema_update_moves_codebook_toward_data():
+    key = jax.random.PRNGKey(0)
+    spec = vq.VQSpec(8, 1, 4)
+    params = vq.init(key, spec)
+    state = vq.init_ema_state(spec)
+    data = jax.random.normal(jax.random.PRNGKey(1), (256, 8)) + 2.0
+
+    def mse(p):
+        x_hat = vq.decode(p, vq.encode(p, data, spec), spec)
+        return float(jnp.mean(jnp.square(data - x_hat)))
+
+    before = mse(params)
+    for i in range(20):
+        codes = vq.encode(params, data, spec)
+        params, state = vq.ema_update(params, state, data, codes, spec,
+                                      decay=0.8)
+    assert mse(params) < before
+
+
+# ---------------------------------------------------------------------------
+# NAVQ (paper §3.3 / Theorem 3.1)
+# ---------------------------------------------------------------------------
+
+
+def test_navq_stats_track_residuals():
+    stats = navq.init_residual_stats(4)
+    x = jnp.ones((64, 4)) * 2.0
+    x_hat = jnp.zeros((64, 4))
+    stats = navq.update_residual_stats(stats, x, x_hat)
+    np.testing.assert_allclose(np.asarray(stats["mean"]), 2.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(stats["var"]), 0.0, atol=1e-6)
+
+
+def test_navq_noise_disabled_at_lambda_zero():
+    stats = navq.init_residual_stats(4)
+    x_hat = jnp.ones((8, 4))
+    out = navq.add_noise(jax.random.PRNGKey(0), x_hat, stats, 0.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x_hat))
+
+
+@settings(max_examples=30, deadline=None)
+@given(lam=st.floats(0.05, 1.0), seed=st.integers(0, 100))
+def test_theorem31_noise_reduces_w2(lam, seed):
+    """W2^2(P_X, P_Xtilde) < W2^2(P_X, P_Xhat) for lambda in (0,1]."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    d = 6
+    m_hat = jax.random.normal(k1, (d,))
+    v_hat = jax.random.uniform(k2, (d,), minval=0.1, maxval=2.0)
+    mu = jax.random.normal(k3, (d,)) * 0.5
+    var = jax.random.uniform(k1, (d,), minval=0.05, maxval=1.0)
+    w2_hat, w2_tilde = navq.theorem31_gap(m_hat, v_hat, mu, var, lam)
+    assert float(w2_tilde) < float(w2_hat)
+
+
+def test_theorem31_empirical_monte_carlo():
+    """Empirical version: residual-fitted noise brings the quantized sample
+    distribution W2-closer to the true embedding distribution."""
+    key = jax.random.PRNGKey(0)
+    spec = vq.VQSpec(8, 1, 8)
+    params = vq.init(jax.random.PRNGKey(1), spec)
+    x = jax.random.normal(key, (4096, 8)) * 1.5 + 0.3
+    x_hat = vq.decode(params, vq.encode(params, x, spec), spec)
+    res = x - x_hat
+    mu, var = jnp.mean(res, 0), jnp.var(res, 0)
+    xi = mu + jnp.sqrt(var) * jax.random.normal(jax.random.PRNGKey(2),
+                                                x_hat.shape)
+    x_tilde = x_hat + 1.0 * xi
+
+    def w2_diag(a, b):
+        return float(navq.wasserstein2_gaussian_sq(
+            jnp.mean(a, 0), jnp.var(a, 0), jnp.mean(b, 0), jnp.var(b, 0)))
+
+    assert w2_diag(x, x_tilde) < w2_diag(x, x_hat)
