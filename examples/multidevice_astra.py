@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.core.comm_model import bits_astra, bits_sequence_parallel, CommEnv
 from repro.core.sequence_parallel import MeshContext
@@ -34,8 +35,7 @@ def main() -> None:
     tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
                                 cfg.vocab_size, jnp.int32)
 
-    mesh = jax.make_mesh((4,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("model",))
     mctx = MeshContext(mesh=mesh, batch_axes=(), seq_axis="model")
 
     # the distributed path: shard_map over the sequence axis

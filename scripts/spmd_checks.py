@@ -17,6 +17,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.configs.base import ASTRAConfig, ShapeSpec
 from repro.core import vq
@@ -43,8 +44,7 @@ def check(name, a, b, tol=2e-4):
 
 
 def mesh_ctx():
-    mesh = jax.make_mesh((4,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("model",))
     return MeshContext(mesh=mesh, batch_axes=(), seq_axis="model")
 
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ASTRAConfig
 from repro.core import navq, vq
 from repro.core.mixed_attention import (
@@ -157,7 +158,7 @@ def astra_kv_attention_spmd(
             causal=causal, window=window, softcap=softcap)
 
     qspec = P(bspec, axis, None, None)
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=ctx.mesh,
         in_specs=(qspec, qspec, qspec, P(), P()),
@@ -204,7 +205,7 @@ def sp_full_attention_spmd(
             causal=causal, window=window, softcap=softcap)
 
     qspec = P(bspec, axis, None, None)
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=ctx.mesh,
         in_specs=(qspec, qspec, qspec),

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 @dataclasses.dataclass(frozen=True)
 class MeshContext:
@@ -90,7 +92,7 @@ def distributed_carry(
     device's incoming carry is h_in = A_prefix * h0 + B_prefix (h0 = 0 at
     sequence start).  Exchange volume: one (a, b) pair per device — tiny.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     a_all = jax.lax.all_gather(a_local, axis_name)  # (N, ...)
     b_all = jax.lax.all_gather(b_local, axis_name)

@@ -22,6 +22,7 @@ import traceback
 
 import jax
 
+from repro.compat import cost_analysis as normalized_cost_analysis
 from repro.configs import ASSIGNED, SHAPE_BY_NAME, SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step, combo_supported
@@ -87,7 +88,7 @@ def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
             compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-        cost = compiled.cost_analysis() or {}
+        cost = normalized_cost_analysis(compiled)
         mem = _memory_analysis_dict(compiled)
 
         hlo = compiled.as_text()

@@ -9,19 +9,17 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(num_devices: int = 0, seq_axis_size: int = 0):
     """Small mesh over the real host devices (tests)."""
     n = num_devices or len(jax.devices())
     m = seq_axis_size or n
-    return jax.make_mesh(
-        (n // m, m), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // m, m), ("data", "model"))

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import vq
 from repro.core.astra_block import (
     astra_kv_attention_sim,
@@ -370,7 +371,7 @@ def _decode_sharded(params, q, k_new, v_new, cache, lengths, ctx: StepCtx,
         cb_k = cb_v = jnp.zeros((1,), jnp.float32)
         ck_in, cv_in = cache["k"], cache["v"]
 
-    out, ck2, cv2 = jax.shard_map(
+    out, ck2, cv2 = shard_map(
         body, mesh=ctx.mesh.mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False)(q, k_new, v_new, ck_in, cv_in, lengths, cb_k, cb_v)
     y = out.reshape(b, 1, -1) @ params["wo"]

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map
 from repro.core.sequence_parallel import distributed_carry
 from repro.models.context import StepCtx
 from repro.models.layers import dense_init
@@ -233,7 +235,7 @@ def mamba_forward(
             # conv halo: last W-1 xbc tokens from the previous shard
             width = cfg.conv_width
             tail = xbc_l[:, -(width - 1):, :]
-            nshards = jax.lax.axis_size(axis)
+            nshards = compat.axis_size(axis)
             perm = [(i, (i + 1) % nshards) for i in range(nshards)]
             prev = jax.lax.ppermute(tail, axis, perm)
             first = jax.lax.axis_index(axis) == 0
@@ -263,7 +265,7 @@ def mamba_forward(
                      params["norm_scale"].astype(jnp.float32))
             return y @ params["w_out"]
 
-        y = jax.shard_map(
+        y = shard_map(
             body, mesh=ctx.mesh.mesh,
             in_specs=(sspec, sspec, sspec), out_specs=sspec,
             check_vma=False,

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.context import StepCtx
 from repro.models.layers import dense_init
 
@@ -213,7 +214,7 @@ def _moe_shard_map(params, x, idx, gate_vals, cfg, ctx):
     args = [x, idx, gate_vals.astype(x.dtype), params["w_up"],
             params.get("w_gate", params["w_up"]), params["w_down"]]
     in_specs = (tok_spec, tok_spec, tok_spec, w3, w3, w3d)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=tok_spec,
         check_vma=False,
     )(*args)

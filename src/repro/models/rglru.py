@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map
 from repro.core.sequence_parallel import distributed_carry
 from repro.models.context import StepCtx
 from repro.models.layers import dense_init
@@ -104,7 +106,7 @@ def rg_block_forward(
         def body(xr_l):
             width = cfg.conv_width
             tail = xr_l[:, -(width - 1):, :]
-            nsh = jax.lax.axis_size(axis)
+            nsh = compat.axis_size(axis)
             perm = [(i, (i + 1) % nsh) for i in range(nsh)]
             prev = jax.lax.ppermute(tail, axis, perm)
             first = jax.lax.axis_index(axis) == 0
@@ -119,7 +121,7 @@ def rg_block_forward(
             h = h0.astype(jnp.float32) + a_cumprod * s_in[:, None, :]
             return h.astype(xr_l.dtype)
 
-        h = jax.shard_map(body, mesh=ctx.mesh.mesh, in_specs=(sspec,),
+        h = shard_map(body, mesh=ctx.mesh.mesh, in_specs=(sspec,),
                           out_specs=sspec, check_vma=False)(xr)
         return (h * gate) @ params["w_out"], None
 

@@ -20,6 +20,7 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
+from repro.compat import cost_analysis as normalized_cost_analysis
 from repro.roofline.analysis import _DTYPE_BYTES, _wire_factor
 
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
@@ -269,3 +270,19 @@ def analyze(hlo: str) -> Dict[str, float]:
     if entry is None:
         return {k: 0.0 for k in _ZERO}
     return total(entry, False)
+
+
+def analyze_compiled(compiled) -> Dict[str, float]:
+    """Trip-weighted totals for a jit-compiled executable, plus the raw
+    (unweighted) XLA numbers under ``raw_flops`` / ``raw_bytes_accessed``.
+
+    The raw numbers come through the version-normalizing compat accessor —
+    on jax 0.4.x the executable reports a *list* of per-program cost dicts,
+    which is what used to crash the roofline path with
+    ``TypeError: list indices must be integers``.
+    """
+    out = analyze(compiled.as_text())
+    raw = normalized_cost_analysis(compiled)
+    out["raw_flops"] = float(raw.get("flops", 0.0))
+    out["raw_bytes_accessed"] = float(raw.get("bytes accessed", 0.0))
+    return out

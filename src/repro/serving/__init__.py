@@ -1,1 +1,1 @@
-from repro.serving import engine, kv_cache, sampler  # noqa: F401
+from repro.serving import engine, kv_cache, sampler, steps  # noqa: F401

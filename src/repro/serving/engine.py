@@ -6,6 +6,12 @@ is autoregressive.  This engine supports:
   * static-batch generate() with per-request lengths,
   * fp or vq (Appendix G) cache modes,
   * plain single-host execution or a sequence-sharded mesh.
+
+Decode runs through the shared jitted multi-token loop in
+``repro.serving.steps``: the host dispatches one chunk of ``decode_chunk``
+steps at a time and syncs once per chunk (``host_syncs`` counts the
+device->host transfers so tests can pin the O(max_new_tokens / chunk)
+behaviour).
 """
 from __future__ import annotations
 
@@ -21,7 +27,7 @@ from repro.core.sequence_parallel import LOCAL, MeshContext
 from repro.models import model_factory as mf
 from repro.models import transformer as tlm
 from repro.models.context import StepCtx
-from repro.serving.sampler import sample_tokens
+from repro.serving import steps as serving_steps
 
 
 @dataclasses.dataclass
@@ -41,17 +47,21 @@ class ServingEngine:
         astra_mode: str = "sim",
         cache_mode: str = "fp",
         cache_dtype=jnp.float32,
+        decode_chunk: int = 8,
     ):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.cache_dtype = cache_dtype
+        self.decode_chunk = max(int(decode_chunk), 1)
         self.prefill_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="prefill",
                                    astra_mode=astra_mode, cache_mode=cache_mode)
         self.decode_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="decode",
                                   astra_mode=astra_mode, cache_mode=cache_mode)
         self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl, static_argnums=(5, 6))
+        self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx)
+        # device->host transfer counter (one increment per blocking fetch)
+        self.host_syncs = 0
 
     # -- steps ---------------------------------------------------------------
     def _prefill_impl(self, params, tokens, lengths):
@@ -62,14 +72,6 @@ class ServingEngine:
         last = jnp.take_along_axis(
             logits, (lengths - 1)[:, None, None].clip(0), axis=1)[:, 0]
         return last, caches
-
-    def _decode_impl(self, params, token, caches, lengths, rng, temperature,
-                     top_k):
-        logits, caches = tlm.lm_decode_step(params, token, caches, lengths,
-                                            ctx=self.decode_ctx)
-        nxt = sample_tokens(rng, logits[:, 0], temperature=temperature,
-                            top_k=top_k)
-        return nxt, caches
 
     # -- API -----------------------------------------------------------------
     def generate(
@@ -93,25 +95,37 @@ class ServingEngine:
                                             jnp.asarray(lens))
         rng = jax.random.PRNGKey(seed)
         rng, sub = jax.random.split(rng)
-        cur = sample_tokens(sub, last_logits, temperature=temperature,
-                            top_k=top_k)
+        eos_arr = serving_steps.as_eos_array(eos_id, b)
+        cur, done = serving_steps.first_token(sub, last_logits, eos_arr,
+                                              temperature=temperature,
+                                              top_k=top_k)
+        first, done_h = jax.device_get((cur, done))
+        self.host_syncs += 1
+        out = [[int(first[i])] for i in range(b)]
+
         lengths = jnp.asarray(lens)
-        out = [[int(cur[i])] for i in range(b)]
-        done = np.zeros(b, bool)
-        for _ in range(max_new_tokens - 1):
+        budget = max_new_tokens - 1
+        # num_steps stays pinned to decode_chunk (ONE compiled scan) even for
+        # short budgets — the per-row `remaining` mask truncates the tail, so
+        # varying max_new_tokens never re-specializes the decode graph.
+        chunk = self.decode_chunk
+        remaining = jnp.full((b,), budget, jnp.int32)
+        emitted = 0
+        while emitted < budget and not done_h.all():
             rng, sub = jax.random.split(rng)
-            cur, caches = self._decode(self.params, cur[:, None], caches,
-                                       lengths, sub,
-                                       temperature, top_k)
-            lengths = lengths + 1
+            toks_d, valid_d, cur, caches, lengths, remaining, done = \
+                self._decode_chunk(self.params, cur, caches, lengths,
+                                   remaining, eos_arr, done, sub,
+                                   num_steps=chunk, temperature=temperature,
+                                   top_k=top_k)
+            toks_h, valid_h, done_h = jax.device_get((toks_d, valid_d, done))
+            self.host_syncs += 1
             for i in range(b):
-                if not done[i]:
-                    tok = int(cur[i])
-                    out[i].append(tok)
-                    if eos_id is not None and tok == eos_id:
-                        done[i] = True
-            if done.all():
-                break
+                for j in range(chunk):
+                    if valid_h[i, j]:
+                        out[i].append(int(toks_h[i, j]))
+            emitted += chunk
+        self.host_syncs += 1  # prefill_logits fetch below
         return GenerationResult(tokens=out,
                                 prefill_logits=np.asarray(last_logits))
 

@@ -9,7 +9,11 @@ iteration-level scheduling, with ASTRA's sequence-parallel prefill supplying
 the time-to-first-token acceleration.
 
 All steps are fixed-shape (slot count and max_len are static), so the jitted
-prefill/decode compile once.
+prefill/decode compile once.  Decoding goes through the same jitted
+multi-token chunk as ``ServingEngine`` (``repro.serving.steps``): each
+``step()`` advances every active slot by up to ``decode_chunk`` tokens on
+device and syncs with the host once, so admission/retirement happen at
+chunk boundaries instead of after every token.
 """
 from __future__ import annotations
 
@@ -26,7 +30,7 @@ from repro.core.sequence_parallel import LOCAL, MeshContext
 from repro.models import model_factory as mf
 from repro.models import transformer as tlm
 from repro.models.context import StepCtx
-from repro.serving.sampler import sample_tokens
+from repro.serving import steps as serving_steps
 
 
 @dataclasses.dataclass
@@ -46,7 +50,8 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, mesh_ctx: MeshContext = LOCAL,
                  astra_mode: str = "off", cache_mode: str = "fp",
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 decode_chunk: int = 4):
         if cfg.arch_type in ("vit",):
             raise ValueError("classification models are not generative")
         self.cfg = cfg
@@ -55,6 +60,7 @@ class ContinuousBatchingEngine:
         self.max_len = max_len
         self.temperature = temperature
         self.top_k = top_k
+        self.decode_chunk = max(int(decode_chunk), 1)
         self.prefill_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="prefill",
                                    astra_mode=astra_mode,
                                    cache_mode=cache_mode)
@@ -64,14 +70,15 @@ class ContinuousBatchingEngine:
         self.caches = tlm.init_lm_cache(cfg, slots, max_len, self.decode_ctx,
                                         jnp.float32)
         self.lengths = jnp.zeros((slots,), jnp.int32)
-        self.cur_token = jnp.zeros((slots, 1), jnp.int32)
+        self.cur_token = jnp.zeros((slots,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.step_count = 0
+        self.host_syncs = 0
         self._rng = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl)
+        self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx)
         self._uid = 0
 
     # -- jitted steps --------------------------------------------------------
@@ -84,13 +91,6 @@ class ContinuousBatchingEngine:
         last = jnp.take_along_axis(
             logits, (length - 1)[None, None, None].clip(0), axis=1)[:, 0]
         return last, caches
-
-    def _decode_impl(self, params, token, caches, lengths, rng):
-        logits, caches = tlm.lm_decode_step(params, token, caches, lengths,
-                                            ctx=self.decode_ctx)
-        nxt = sample_tokens(rng, logits[:, 0], temperature=self.temperature,
-                            top_k=self.top_k)
-        return nxt, caches
 
     # -- slot management -----------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
@@ -121,15 +121,18 @@ class ContinuousBatchingEngine:
                 self.params, jnp.asarray(toks), jnp.asarray(n, jnp.int32))
             self._write_slot_cache(slot, slot_cache)
             self._rng, sub = jax.random.split(self._rng)
-            first = sample_tokens(sub, last_logits,
-                                  temperature=self.temperature,
-                                  top_k=self.top_k)
-            req.output.append(int(first[0]))
+            eos_arr = serving_steps.as_eos_array(req.eos_id, 1)
+            first, _ = serving_steps.first_token(
+                sub, last_logits, eos_arr, temperature=self.temperature,
+                top_k=self.top_k)
+            tok = int(first[0])
+            self.host_syncs += 1
+            req.output.append(tok)
             req.first_token_step = self.step_count
             self.active[slot] = req
             self.lengths = self.lengths.at[slot].set(n)
-            self.cur_token = self.cur_token.at[slot, 0].set(int(first[0]))
-            if self._maybe_finish(slot, int(first[0])):
+            self.cur_token = self.cur_token.at[slot].set(tok)
+            if self._maybe_finish(slot, tok):
                 continue
 
     def _maybe_finish(self, slot: int, tok: int) -> bool:
@@ -146,27 +149,42 @@ class ContinuousBatchingEngine:
 
     # -- main loop -----------------------------------------------------------
     def step(self) -> int:
-        """One scheduler iteration: admit + one decode step for all active
-        slots.  Returns the number of active slots decoded."""
+        """One scheduler iteration: admit + one on-device decode chunk (up
+        to ``decode_chunk`` tokens) for all active slots.  Returns the
+        number of tokens emitted this iteration."""
         self._admit()
         n_active = sum(r is not None for r in self.active)
         if n_active == 0:
             self.step_count += 1
             return 0
+        remaining = jnp.asarray(
+            [(r.max_new_tokens - len(r.output)) if r is not None else 0
+             for r in self.active], jnp.int32)
+        eos_ids = jnp.asarray(
+            [r.eos_id if r is not None and r.eos_id is not None else -1
+             for r in self.active], jnp.int32)
+        done = jnp.asarray([r is None for r in self.active])
         self._rng, sub = jax.random.split(self._rng)
-        nxt, self.caches = self._decode(self.params, self.cur_token,
-                                        self.caches, self.lengths, sub)
-        self.lengths = self.lengths + jnp.asarray(
-            [1 if r is not None else 0 for r in self.active], jnp.int32)
-        self.cur_token = nxt[:, None]
+        toks_d, valid_d, cur, self.caches, self.lengths, _, _ = \
+            self._decode_chunk(self.params, self.cur_token, self.caches,
+                               self.lengths, remaining, eos_ids, done, sub,
+                               num_steps=self.decode_chunk,
+                               temperature=self.temperature,
+                               top_k=self.top_k)
+        self.cur_token = cur
+        toks_h, valid_h = jax.device_get((toks_d, valid_d))
+        self.host_syncs += 1
         self.step_count += 1
+        emitted = 0
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            tok = int(nxt[slot])
-            req.output.append(tok)
-            self._maybe_finish(slot, tok)
-        return n_active
+            for j in range(self.decode_chunk):
+                if valid_h[slot, j]:
+                    req.output.append(int(toks_h[slot, j]))
+                    emitted += 1
+            self._maybe_finish(slot, req.output[-1])
+        return emitted
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict[str, Any]:
         t0 = time.time()

@@ -1,0 +1,113 @@
+"""Shared on-device decode loop: one jitted chunk advances every sequence.
+
+Both serving engines (static-batch ``ServingEngine`` and the slot-based
+``ContinuousBatchingEngine``) used to drive decoding with a host Python loop
+— one jitted dispatch, one device->host sync and one host-side EOS check
+*per generated token per request*.  This module replaces that with a single
+``lax.scan`` over a decode chunk: sampling, EOS detection, per-row length
+and token-budget tracking all run on device, and the host syncs once per
+chunk (O(max_new_tokens / chunk) transfers instead of O(max_new_tokens)).
+
+This is the iteration-level-scheduling move of DeepSpeed-Inference/vLLM-
+style servers: the accelerator stays busy across decode iterations, and the
+scheduler (admission, retirement) interposes only at chunk boundaries.
+
+Per-row state is carried as arrays so rows are independent:
+  * ``remaining``  — tokens this row may still emit (0 => frozen),
+  * ``eos_ids``    — per-row EOS token id, or -1 for "no EOS",
+  * ``done``       — row already emitted its EOS (or was never active).
+Frozen rows keep re-feeding their last token with ``lengths`` unchanged.
+CAUTION: that keeps their *emitted tokens* exact but dirties their slice of
+the returned caches — KV writes land on the next unconsumed position, and
+recurrent-state layers (SSD / RG-LRU) keep folding the re-fed token into
+their position-less hidden state.  Callers must treat a finished row's
+cache as dead: both engines do (ServingEngine discards caches after
+generate; the scheduler re-prefills a slot on admission).  Any future
+continue-from-cache feature needs per-row state freezing first.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tlm
+from repro.serving.sampler import sample_tokens
+
+
+def make_decode_chunk(ctx):
+    """Jitted ``decode_chunk`` specialized to one StepCtx — the single
+    compiled decode entry point both serving engines share."""
+    return jax.jit(functools.partial(decode_chunk, ctx=ctx),
+                   static_argnames=("num_steps", "temperature", "top_k"))
+
+
+def decode_chunk(
+    params,
+    cur: jax.Array,        # (B,) int32 — last sampled token per row
+    caches: List[Dict],
+    lengths: jax.Array,    # (B,) int32 — tokens already in the cache
+    remaining: jax.Array,  # (B,) int32 — emission budget left per row
+    eos_ids: jax.Array,    # (B,) int32 — per-row EOS id, -1 = none
+    done: jax.Array,       # (B,) bool — row finished (EOS seen / inactive)
+    rng: jax.Array,
+    *,
+    ctx,                   # StepCtx (decode mode) — closed over via partial
+    num_steps: int,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array, List[Dict], jax.Array,
+           jax.Array, jax.Array]:
+    """Advance every row by up to ``num_steps`` tokens, entirely on device.
+
+    Returns ``(tokens, valid, cur, caches, lengths, remaining, done)`` where
+    ``tokens``/``valid`` are (B, num_steps): ``valid[b, j]`` marks whether
+    ``tokens[b, j]`` was actually emitted by row ``b`` (False once the row
+    hit EOS, exhausted its budget, or was inactive on entry).  The returned
+    ``done`` includes budget exhaustion, so callers can stop polling.
+    """
+
+    def one(carry, step_rng):
+        cur, caches, lengths, remaining, done = carry
+        logits, caches = tlm.lm_decode_step(params, cur[:, None], caches,
+                                            lengths, ctx=ctx)
+        nxt = sample_tokens(step_rng, logits[:, 0], temperature=temperature,
+                            top_k=top_k)
+        active = jnp.logical_and(~done, remaining > 0)
+        nxt = jnp.where(active, nxt, cur)
+        lengths = lengths + active.astype(lengths.dtype)
+        remaining = remaining - active.astype(remaining.dtype)
+        done = done | (active & (eos_ids >= 0) & (nxt == eos_ids))
+        return (nxt, caches, lengths, remaining, done), (nxt, active)
+
+    carry = (cur, caches, lengths, remaining, done)
+    (cur, caches, lengths, remaining, done), (toks, valid) = jax.lax.scan(
+        one, carry, jax.random.split(rng, num_steps))
+    return (toks.T, valid.T, cur, caches, lengths, remaining,
+            done | (remaining <= 0))
+
+
+def first_token(rng: jax.Array, last_logits: jax.Array, eos_ids: jax.Array,
+                *, temperature: float = 0.0,
+                top_k: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Sample the prefill continuation and check it against EOS on device.
+
+    The first sampled token goes through exactly the same EOS gate as every
+    scan step above — the historical "first token never checked against
+    eos_id" bug is impossible by construction.
+    """
+    cur = sample_tokens(rng, last_logits, temperature=temperature,
+                        top_k=top_k)
+    return cur, (eos_ids >= 0) & (cur == eos_ids)
+
+
+def as_eos_array(eos_id, batch: int) -> jax.Array:
+    """Normalize an Optional[int] (or per-row list) EOS id to a (B,) array."""
+    if eos_id is None:
+        return jnp.full((batch,), -1, jnp.int32)
+    arr = jnp.asarray(eos_id, jnp.int32)
+    if arr.ndim == 0:
+        arr = jnp.full((batch,), int(eos_id), jnp.int32)
+    return arr

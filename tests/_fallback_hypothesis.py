@@ -1,0 +1,93 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this suite use a small slice of the hypothesis API:
+``@settings(max_examples=N, deadline=None)`` stacked on ``@given(**strats)``
+with ``sampled_from`` / ``integers`` / ``floats`` / ``booleans`` strategies.
+This module re-implements exactly that slice with a seeded ``random.Random``
+so the suite still *collects and runs* without the dependency (the real
+package, listed in requirements-dev.txt, takes over whenever available):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _fallback_hypothesis import given, settings, st
+
+Draws are deterministic (fixed seed per test) and capped at
+``MAX_FALLBACK_EXAMPLES`` to keep runtime close to the hypothesis profile.
+No shrinking, no database — this is a compatibility sampler, not a
+property-testing engine.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+from typing import Any, Callable, Dict
+
+MAX_FALLBACK_EXAMPLES = 8
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example_for(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = MAX_FALLBACK_EXAMPLES, **_kw):
+    """Records the example budget on the (already-@given-wrapped) test."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies: _Strategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_fallback_max_examples",
+                            MAX_FALLBACK_EXAMPLES), MAX_FALLBACK_EXAMPLES)
+            rng = random.Random(f"fallback:{fn.__name__}")
+            for _ in range(n):
+                draw: Dict[str, Any] = {
+                    name: strat.example_for(rng)
+                    for name, strat in strategies.items()
+                }
+                fn(*args, **kwargs, **draw)
+
+        # expose only the non-strategy parameters to pytest, so given-driven
+        # args are not mistaken for fixtures
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -10,7 +10,8 @@ from repro.roofline.analysis import (
     model_flops,
     roofline_terms,
 )
-from repro.roofline.hlo_analysis import analyze
+from repro.compat import cost_analysis
+from repro.roofline.hlo_analysis import analyze, analyze_compiled
 
 
 def _compiled(f, *args):
@@ -39,8 +40,12 @@ def test_scan_trip_weighting_exact():
     assert a_unroll["flops"] == 10 * one_matmul
     # raw cost_analysis undercounts the scan (regression guard for the
     # assumption this analyzer corrects)
-    raw = _compiled(f_scan, x).cost_analysis()["flops"]
+    raw = cost_analysis(_compiled(f_scan, x))["flops"]
     assert raw <= one_matmul * 1.01
+    # analyze_compiled bundles both views (trip-weighted + normalized raw)
+    both = analyze_compiled(_compiled(f_scan, x))
+    assert both["flops"] == 10 * one_matmul
+    assert both["raw_flops"] == raw
 
 
 def test_nested_scan_multiplies():

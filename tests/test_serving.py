@@ -110,3 +110,88 @@ def test_encdec_generation():
         token = jnp.argmax(logits, -1).astype(jnp.int32)
         lengths = lengths + 1
     assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+# ---------------------------------------------------------------------------
+# EOS regressions + chunked-decode behaviour (repro.serving.steps)
+# ---------------------------------------------------------------------------
+
+
+def test_eos_on_first_token():
+    """The prefill-sampled token must be EOS-checked too: with eos_id equal
+    to the very first greedy token, generation stops immediately."""
+    cfg, params = small_lm()
+    engine = ServingEngine(cfg, params, max_len=32, astra_mode="off")
+    ref = engine.generate([[1, 2, 3]], max_new_tokens=16,
+                          temperature=0.0).tokens[0]
+    out = engine.generate([[1, 2, 3]], max_new_tokens=16, temperature=0.0,
+                          eos_id=ref[0])
+    assert out.tokens[0] == [ref[0]]
+
+
+def test_eos_mid_stream_truncates_exactly():
+    """eos_id first appearing at position j>0 stops that row at j (the EOS
+    token itself is kept, nothing after it)."""
+    cfg, params = small_lm()
+    engine = ServingEngine(cfg, params, max_len=32, astra_mode="off")
+    ref = engine.generate([[1, 2, 3]], max_new_tokens=16,
+                          temperature=0.0).tokens[0]
+    v = next((t for i, t in enumerate(ref) if i >= 1 and t not in ref[:i]),
+             None)
+    if v is None:
+        pytest.skip("greedy sequence has no fresh mid-stream token")
+    j = ref.index(v)
+    out = engine.generate([[1, 2, 3]], max_new_tokens=16, temperature=0.0,
+                          eos_id=v)
+    assert out.tokens[0] == ref[: j + 1]
+
+
+def test_generate_invariant_to_decode_chunk_size():
+    """Greedy output must not depend on how the on-device loop is chunked."""
+    cfg, params = small_lm()
+    prompts = [[5, 9, 3], [7, 2, 8, 4, 1]]
+    outs = [
+        ServingEngine(cfg, params, max_len=48, astra_mode="off",
+                      decode_chunk=c).generate(
+            prompts, max_new_tokens=7, temperature=0.0).tokens
+        for c in (1, 3, 8)
+    ]
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_engines_greedy_parity():
+    """ServingEngine and ContinuousBatchingEngine share one jitted decode
+    chunk and must emit identical greedy tokens for the same prompts."""
+    from repro.serving.scheduler import ContinuousBatchingEngine
+
+    cfg, params = small_lm()
+    prompts = [[5, 9, 3], [7, 2, 8, 4, 1], [11, 12]]
+    static = ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                           decode_chunk=3)
+    want = static.generate(prompts, max_new_tokens=6, temperature=0.0).tokens
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=64,
+                                   decode_chunk=2)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    eng.run_until_drained()
+    got = {tuple(r.prompt): r.output for r in eng.finished}
+    for p, w in zip(prompts, want):
+        assert got[tuple(p)] == w, (p, got[tuple(p)], w)
+
+
+def test_host_syncs_scale_with_chunks_not_tokens():
+    """Device->host transfers are O(max_new_tokens / chunk): one fetch for
+    the prefill token, one per decode chunk, one for prefill_logits."""
+    cfg, params = small_lm()
+    engine = ServingEngine(cfg, params, max_len=48, astra_mode="off",
+                           decode_chunk=8)
+    engine.generate([[1, 2, 3]], max_new_tokens=17, temperature=0.0)
+    budget = 16
+    n_chunks = -(-budget // 8)  # ceil
+    assert engine.host_syncs == 2 + n_chunks  # NOT 2 + budget
+
+    # per-token chunking really would cost one sync per token
+    engine1 = ServingEngine(cfg, params, max_len=48, astra_mode="off",
+                            decode_chunk=1)
+    engine1.generate([[1, 2, 3]], max_new_tokens=17, temperature=0.0)
+    assert engine1.host_syncs == 2 + budget

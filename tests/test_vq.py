@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collected without the dev dep: deterministic fallback
+    from _fallback_hypothesis import given, settings, st
 
 from repro.core import navq, vq
 
