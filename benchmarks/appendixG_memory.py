@@ -1,11 +1,39 @@
-"""Paper Appendix G: VQ codebook overhead + KV-cache savings (exact)."""
+"""Paper Appendix G: VQ codebook overhead + KV-cache savings (exact), plus
+the *measured* page-pool bytes of the runtime's paged cache modes next to
+the eq. 38/39 predictions (page-granularity rounding + one scratch page)."""
 from __future__ import annotations
 
 import dataclasses
 
 from repro.configs import ASSIGNED, get_config
-from repro.serving.kv_cache import memory_report
+from repro.serving.kv_cache import memory_report, paged_pool_bytes
 from benchmarks.common import fmt_table
+
+PAGE = 16  # tokens per KV page
+
+
+def _paged(cfg, seq_len: int, mode: str, bytes_per_val: int = 2) -> int:
+    return paged_pool_bytes(cfg, max_len=seq_len, page_size=PAGE,
+                            cache_mode=mode, slots=1,
+                            dtype_bytes=bytes_per_val)
+
+
+def _measured_pools(cfg, seq_len: int) -> dict:
+    """Materialize the page pools for one sequence and report their actual
+    byte sizes (what the paged engines really allocate)."""
+    import jax.numpy as jnp
+
+    from repro.models.context import StepCtx
+    from repro.serving.kv_cache import PagedKVCache, pool_bytes
+
+    out = {}
+    for mode in ("paged", "paged_vq"):
+        ctx = StepCtx(cfg=cfg, mode="decode", astra_mode="off",
+                      cache_mode=mode)
+        kv = PagedKVCache(cfg, slots=1, max_len=seq_len, ctx=ctx,
+                          page_size=PAGE, dtype=jnp.bfloat16)
+        out[mode] = pool_bytes(kv.init_cache())
+    return out
 
 
 def main() -> str:
@@ -17,7 +45,8 @@ def main() -> str:
     rep = memory_report(cfg, seq_len=1024, num_devices=4)
     rows.append(["llama3-8b(paper)", 1024, rep["kv_fp_bytes"],
                  rep["kv_astra_bytes"], rep["astra_fraction"],
-                 rep["codebook_bytes"]])
+                 rep["codebook_bytes"], _paged(cfg, 1024, "paged"),
+                 _paged(cfg, 1024, "paged_vq")])
     # every assigned arch at decode_32k scale
     for arch in ASSIGNED:
         c = get_config(arch)
@@ -25,11 +54,19 @@ def main() -> str:
             continue  # no KV cache
         r = memory_report(c, seq_len=32768, num_devices=4)
         rows.append([arch, 32768, r["kv_fp_bytes"], r["kv_astra_bytes"],
-                     r["astra_fraction"], r["codebook_bytes"]])
-    return fmt_table(
+                     r["astra_fraction"], r["codebook_bytes"],
+                     _paged(c, 32768, "paged"), _paged(c, 32768, "paged_vq")])
+    table = fmt_table(
         "Appendix G: KV-cache + codebook memory (bytes, batch=1)",
         ["arch", "seq", "kv_fp", "kv_astra", "astra_fraction",
-         "codebook"], rows)
+         "codebook", "kv_paged_pool", "kv_paged_vq_pool"], rows)
+    # materialize the worked example's pools: measured == analytic columns
+    measured = _measured_pools(cfg, 1024)
+    table += ("\n# measured page pools, llama3-8b(paper) seq=1024 "
+              f"page={PAGE}: paged={measured['paged']} "
+              f"paged_vq={measured['paged_vq']} "
+              f"(eq.38 fp={rep['kv_fp_bytes']})")
+    return table
 
 
 if __name__ == "__main__":

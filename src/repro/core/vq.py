@@ -116,15 +116,21 @@ def quantize_st(
 # ---------------------------------------------------------------------------
 
 
+def code_dtype(codebook_size: int):
+    """Narrowest storage dtype holding log2(K)-bit codes — the single source
+    of truth for code storage width (wire packing, vq slab caches, paged
+    code pools, and the Appendix-G byte accounting all derive from it)."""
+    if codebook_size <= 256:
+        return jnp.uint8
+    if codebook_size <= 65536:
+        return jnp.uint16
+    return jnp.int32
+
+
 def pack_codes(codes: jax.Array, spec: VQSpec) -> jax.Array:
     """Narrow codes to the smallest dtype holding log2(K) bits before the
     all-gather.  int32 -> uint8 (K<=256) / uint16 (K<=65536)."""
-    k = spec.codebook_size
-    if k <= 256:
-        return codes.astype(jnp.uint8)
-    if k <= 65536:
-        return codes.astype(jnp.uint16)
-    return codes
+    return codes.astype(code_dtype(spec.codebook_size))
 
 
 def unpack_codes(packed: jax.Array) -> jax.Array:

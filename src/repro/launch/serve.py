@@ -31,7 +31,10 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--cache-mode", default="fp", choices=["fp", "vq"])
+    ap.add_argument("--cache-mode", default="fp",
+                    choices=["fp", "vq", "paged", "paged_vq"])
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size (tokens) for the paged cache modes")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -50,7 +53,7 @@ def main() -> None:
     engine = ServingEngine(
         cfg, params, max_len=args.max_len,
         astra_mode="sim" if cfg.astra.enabled else "off",
-        cache_mode=args.cache_mode)
+        cache_mode=args.cache_mode, page_size=args.page_size)
 
     rng = np.random.RandomState(args.seed)
     prompts = [

@@ -99,6 +99,7 @@ def attention_forward(
     navq_stats: Optional[Dict] = None,
     rng: Optional[jax.Array] = None,
     cache: Optional[Dict] = None,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
     """Returns (y, aux, new_cache).  aux = dict(commit=.., navq=(per-dim
     residual mean/var for K and V) or zeros)."""
@@ -138,7 +139,8 @@ def attention_forward(
 
     new_cache = None
     if cache is not None:  # prefill writes the cache
-        new_cache = _prefill_write(cache, k, v, ctx, cfg, vq_params)
+        new_cache = _prefill_write(cache, k, v, ctx, cfg, vq_params,
+                                   block_table)
     y = out.reshape(b, t, -1) @ params["wo"]
     return y, aux, new_cache
 
@@ -171,16 +173,35 @@ def _aux_from_sim(a, cfg) -> Dict[str, jax.Array]:
 
 
 def init_attn_cache(cfg, kind: str, batch: int, max_len: int, ctx: StepCtx,
-                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+                    dtype=jnp.bfloat16, *, page_size: int = 0,
+                    num_pages: int = 0) -> Dict[str, jax.Array]:
     hkv, hd = cfg.num_kv_heads, cfg.head_dim
     window = kind_window(kind, cfg)
     s = min(window, max_len) if window else max_len
+    if ctx.cache_mode in ("paged", "paged_vq"):
+        # Shared page pools (no batch dim): a request's pages are resolved
+        # through its block-table row.  Windowed layers keep fp pages under
+        # paged_vq, mirroring dense "vq" which leaves them full-precision.
+        if page_size <= 0 or num_pages <= 0:
+            raise ValueError("paged cache modes need page_size/num_pages "
+                             "(build caches via serving.kv_cache.PagedKVCache)")
+        if ctx.cache_mode == "paged_vq" and not window:
+            g = cfg.astra.groups
+            cd = vq.code_dtype(cfg.astra.codebook_size)
+            return {
+                "k_code_pages": jnp.zeros((num_pages, page_size, g), cd),
+                "v_code_pages": jnp.zeros((num_pages, page_size, g), cd),
+            }
+        return {
+            "k_pages": jnp.zeros((num_pages, page_size, hkv, hd), dtype),
+            "v_pages": jnp.zeros((num_pages, page_size, hkv, hd), dtype),
+        }
     if ctx.cache_mode == "vq" and not window:
         spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
-        code_dtype = jnp.uint8 if cfg.astra.codebook_size <= 256 else jnp.int32
+        cd = vq.code_dtype(cfg.astra.codebook_size)
         return {
-            "k_codes": jnp.zeros((batch, s, spec.groups), code_dtype),
-            "v_codes": jnp.zeros((batch, s, spec.groups), code_dtype),
+            "k_codes": jnp.zeros((batch, s, spec.groups), cd),
+            "v_codes": jnp.zeros((batch, s, spec.groups), cd),
         }
     return {
         "k": jnp.zeros((batch, s, hkv, hd), dtype),
@@ -188,9 +209,13 @@ def init_attn_cache(cfg, kind: str, batch: int, max_len: int, ctx: StepCtx,
     }
 
 
-def _prefill_write(cache, k, v, ctx: StepCtx, cfg, vq_params=None):
+def _prefill_write(cache, k, v, ctx: StepCtx, cfg, vq_params=None,
+                   block_table=None):
     """Write prefill K/V into the cache (positions 0..T-1).  For ring (SWA)
-    caches keep the last W positions; for vq caches store codes."""
+    caches keep the last W positions; for vq caches store codes; for page
+    pools scatter whole pages through the block table."""
+    if "k_pages" in cache or "k_code_pages" in cache:
+        return _prefill_write_paged(cache, k, v, cfg, vq_params, block_table)
     if "k_codes" in cache:
         spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
         b, t = k.shape[0], k.shape[1]
@@ -209,6 +234,42 @@ def _prefill_write(cache, k, v, ctx: StepCtx, cfg, vq_params=None):
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, 1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, 1)
     return {"k": ck, "v": cv}
+
+
+def _scatter_pages(pool: jax.Array, vals: jax.Array,
+                   block_table: jax.Array) -> jax.Array:
+    """Write ``vals`` (B, T, ...) into ``pool`` (P, ps, ...) page-by-page via
+    ``block_table`` (B, max_pages).  Rows whose table entries point at the
+    scratch page (0) dump there; those positions are never read (masked)."""
+    ps = pool.shape[1]
+    b, t = vals.shape[:2]
+    n_pages = -(-t // ps)
+    pad = n_pages * ps - t
+    if pad:
+        vals = jnp.pad(vals, [(0, 0), (0, pad)] + [(0, 0)] * (vals.ndim - 2))
+    vals = vals.reshape((b * n_pages, ps) + vals.shape[2:])
+    idx = block_table[:, :n_pages].reshape(-1)
+    return pool.at[idx].set(vals.astype(pool.dtype))
+
+
+def _prefill_write_paged(cache, k, v, cfg, vq_params, block_table):
+    """Prefill writes prompt K/V (or codes) directly into the page pools —
+    no (B, max_len) slab is ever materialized or copied."""
+    b, t = k.shape[:2]
+    if "k_code_pages" in cache:
+        spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
+        kc = vq.encode(vq_params["k"], k.reshape(b, t, -1), spec)
+        vc = vq.encode(vq_params["v"], v.reshape(b, t, -1), spec)
+        return {
+            "k_code_pages": _scatter_pages(cache["k_code_pages"], kc,
+                                           block_table),
+            "v_code_pages": _scatter_pages(cache["v_code_pages"], vc,
+                                           block_table),
+        }
+    return {
+        "k_pages": _scatter_pages(cache["k_pages"], k, block_table),
+        "v_pages": _scatter_pages(cache["v_pages"], v, block_table),
+    }
 
 
 def _write_at(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
@@ -236,6 +297,7 @@ def attention_decode(
     ctx: StepCtx,
     kind: str,
     vq_params: Optional[Dict] = None,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decode step.  x: (B, 1, D); lengths: (B,) current sequence length
     (the new token's position).  Returns (y, new_cache)."""
@@ -247,6 +309,18 @@ def attention_decode(
     q, k_new, v_new = qkv(params, x, cfg, positions, theta)
     cap = cfg.attn_logit_softcap
 
+    if "k_pages" in cache or "k_code_pages" in cache:
+        # paged pools: scatter-write the current token's page slot, gather
+        # the request's pages through the block table, then run the same
+        # dense masked decode attention (window layers mask to their span).
+        cache, k_all, v_all = _paged_write_read(cache, k_new, v_new, lengths,
+                                                block_table, cfg, vq_params)
+        pos = jnp.arange(k_all.shape[1])[None, :]
+        valid = pos <= lengths[:, None]
+        if window:
+            valid &= pos >= lengths[:, None] - (window - 1)
+        return _masked_decode_attn(params, q, k_all, v_all, valid, cap), cache
+
     if window:  # ring cache, replicated over the seq axis (small)
         s = cache["k"].shape[1]
         slot = jnp.mod(lengths, s)
@@ -255,9 +329,7 @@ def attention_decode(
         pos = ring_positions(s, lengths)  # (B, S)
         valid = (pos >= 0) & (pos >= (lengths[:, None] - window + 1)) & (
             pos <= lengths[:, None])
-        m, l, o = partial_attention_stats(q, ck, cv, k_valid=valid, softcap=cap)
-        out = o / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
-        y = out.reshape(b, 1, -1) @ params["wo"]
+        y = _masked_decode_attn(params, q, ck, cv, valid, cap)
         return y, {"k": ck, "v": cv}
 
     if ctx.seq_sharded:
@@ -270,10 +342,56 @@ def attention_decode(
                                                  cfg, vq_params)
     pos = jnp.arange(k_all.shape[1])[None, :]
     valid = pos <= lengths[:, None]
-    m, l, o = partial_attention_stats(q, k_all, v_all, k_valid=valid, softcap=cap)
+    return _masked_decode_attn(params, q, k_all, v_all, valid, cap), cache
+
+
+def _masked_decode_attn(params, q, k_all, v_all, valid, cap) -> jax.Array:
+    """Shared single-token decode epilogue: masked partial-softmax stats,
+    normalize, project through wo.  Every cache layout funnels through this
+    so the cache modes cannot drift numerically."""
+    b = q.shape[0]
+    m, l, o = partial_attention_stats(q, k_all, v_all, k_valid=valid,
+                                      softcap=cap)
     out = o / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
-    y = out.reshape(b, 1, -1) @ params["wo"]
-    return y, cache
+    return out.reshape(b, 1, -1) @ params["wo"]
+
+
+def _paged_write_read(cache, k_new, v_new, lengths, block_table, cfg,
+                      vq_params):
+    """Paged decode: write the new token into its page, return the gathered
+    (B, max_pages * page_size, Hkv, hd) full-precision view (dequantizing
+    code pages on read)."""
+    if block_table is None:
+        raise ValueError("paged cache modes require a block table")
+    vq_pool = "k_code_pages" in cache
+    kp = cache["k_code_pages" if vq_pool else "k_pages"]
+    vp = cache["v_code_pages" if vq_pool else "v_pages"]
+    ps = kp.shape[1]
+    b = k_new.shape[0]
+    max_pages = block_table.shape[1]
+    page_slot = jnp.clip(lengths // ps, 0, max_pages - 1)
+    page_ids = jnp.take_along_axis(block_table, page_slot[:, None],
+                                   axis=1)[:, 0]
+    offs = jnp.mod(lengths, ps)
+    s = max_pages * ps
+    if vq_pool:
+        spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
+        kc = vq.encode(vq_params["k"], k_new.reshape(b, 1, -1), spec)[:, 0]
+        vc = vq.encode(vq_params["v"], v_new.reshape(b, 1, -1), spec)[:, 0]
+        kp = kp.at[page_ids, offs].set(kc.astype(kp.dtype))
+        vp = vp.at[page_ids, offs].set(vc.astype(vp.dtype))
+        k_codes = kp[block_table].reshape(b, s, spec.groups)
+        v_codes = vp[block_table].reshape(b, s, spec.groups)
+        k_all = vq.decode(vq_params["k"], k_codes.astype(jnp.int32), spec
+                          ).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+        v_all = vq.decode(vq_params["v"], v_codes.astype(jnp.int32), spec
+                          ).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+        return {"k_code_pages": kp, "v_code_pages": vp}, k_all, v_all
+    kp = kp.at[page_ids, offs].set(k_new[:, 0].astype(kp.dtype))
+    vp = vp.at[page_ids, offs].set(v_new[:, 0].astype(vp.dtype))
+    k_all = kp[block_table].reshape((b, s) + kp.shape[2:])
+    v_all = vp[block_table].reshape((b, s) + vp.shape[2:])
+    return {"k_pages": kp, "v_pages": vp}, k_all, v_all
 
 
 def _decode_write_and_read(cache, k_new, v_new, lengths, cfg, vq_params):

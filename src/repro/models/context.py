@@ -20,7 +20,13 @@ class StepCtx:
     astra_mode: str = "sim"
     train: bool = False
     num_sim_shards: int = 4
-    # KV-cache storage: fp | vq  (vq = codes-only cache, Appendix G analogue)
+    # KV-cache storage:
+    #   fp       — contiguous full-precision slab per sequence
+    #   vq       — codes-only slab (Appendix G analogue)
+    #   paged    — block-table page pools, fp value pages
+    #   paged_vq — block-table page pools, uint8/16 VQ code pages
+    # Paged modes need a block table (serving.kv_cache.PagedKVCache) and are
+    # single-host (seq-sharded decode keeps the fp/vq shard cache).
     cache_mode: str = "fp"
     # rematerialise layer activations in the backward pass (big-model train)
     remat: bool = False

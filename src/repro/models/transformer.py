@@ -103,9 +103,11 @@ def init_block_navq(cfg, kind: str) -> Dict:
 
 
 def init_block_cache(cfg, kind: str, batch: int, max_len: int, ctx: StepCtx,
-                     dtype=jnp.bfloat16) -> Dict:
+                     dtype=jnp.bfloat16, *, page_size: int = 0,
+                     num_pages: int = 0) -> Dict:
     if kind in ATTN_KINDS:
-        return attn.init_attn_cache(cfg, kind, batch, max_len, ctx, dtype)
+        return attn.init_attn_cache(cfg, kind, batch, max_len, ctx, dtype,
+                                    page_size=page_size, num_pages=num_pages)
     if kind == "rec":
         return rglru.init_rg_cache(cfg, batch, dtype)
     if kind == "ssm":
@@ -129,6 +131,7 @@ def block_forward(
     navq_stats: Optional[Dict],
     cache: Optional[Dict],
     lengths: Optional[jax.Array],
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array], Dict, Optional[Dict]]:
     cfg = ctx.cfg
     aux = {"commit": jnp.zeros((), jnp.float32),
@@ -145,12 +148,12 @@ def block_forward(
         if ctx.mode == "decode":
             y, new_cache = attn.attention_decode(
                 p["attn"], h, cache, lengths, ctx=ctx, kind=kind,
-                vq_params=p.get("vq"))
+                vq_params=p.get("vq"), block_table=block_table)
         else:
             y, a, new_cache = attn.attention_forward(
                 p["attn"], h, ctx=ctx, kind=kind, causal=causal,
                 vq_params=p.get("vq"), navq_stats=navq_stats or None,
-                rng=rng, cache=cache)
+                rng=rng, cache=cache, block_table=block_table)
             aux["commit"] = a["commit"]
             if navq_stats:
                 new_navq = {
@@ -252,12 +255,14 @@ def init_lm_navq(cfg) -> List[Dict]:
 
 
 def init_lm_cache(cfg, batch: int, max_len: int, ctx: StepCtx,
-                  dtype=jnp.bfloat16) -> List[Dict]:
+                  dtype=jnp.bfloat16, *, page_size: int = 0,
+                  num_pages: int = 0) -> List[Dict]:
     out = []
     for kinds, reps in stages(cfg):
         sub = {}
         for j, kind in enumerate(kinds):
-            c = init_block_cache(cfg, kind, batch, max_len, ctx, dtype)
+            c = init_block_cache(cfg, kind, batch, max_len, ctx, dtype,
+                                 page_size=page_size, num_pages=num_pages)
             sub[f"sub{j}"] = jax.tree.map(
                 lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), c)
         out.append(sub)
@@ -294,6 +299,7 @@ def run_stages(
     navq_state: Optional[List[Dict]],
     caches: Optional[List[Dict]],
     lengths: Optional[jax.Array],
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array], List[Dict], Optional[List[Dict]]]:
     commit = jnp.zeros((), jnp.float32)
     moe_aux = jnp.zeros((), jnp.float32)
@@ -316,7 +322,7 @@ def run_stages(
                 xx, aux, n_new, c_new = block_forward(
                     p_l[f"sub{j}"], xx, ctx=ctx, kind=kind, causal=causal,
                     rng=jax.random.fold_in(rng_l, j), navq_stats=nst,
-                    cache=cst, lengths=lengths)
+                    cache=cst, lengths=lengths, block_table=block_tables)
                 cm = cm + aux["commit"]
                 ma = ma + aux["moe_aux"]
                 if n_new:
@@ -345,13 +351,15 @@ def lm_forward(
     navq_state: Optional[List[Dict]] = None,
     caches: Optional[List[Dict]] = None,
     lengths: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict, List[Dict], Optional[List[Dict]]]:
     """Returns (logits, aux, new_navq_state, new_caches)."""
     cfg = ctx.cfg
     x = _embed_inputs(params, batch, cfg).astype(_adtype(cfg, ctx))
     x, aux, new_navq, new_caches = run_stages(
         params["stages"], x, ctx=ctx, cfg=cfg, causal=True, rng=rng,
-        navq_state=navq_state, caches=caches, lengths=lengths)
+        navq_state=navq_state, caches=caches, lengths=lengths,
+        block_tables=block_tables)
     x = apply_norm(params["final_norm"], x, cfg.norm)
     if ctx.logits_last_only:
         # §Perf: prefill only needs the next-token distribution — skip the
@@ -374,6 +382,7 @@ def lm_decode_step(
     lengths: jax.Array,  # (B,)
     *,
     ctx: StepCtx,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, List[Dict]]:
     cfg = ctx.cfg
     x = jnp.take(params["embed"], token, axis=0)
@@ -383,7 +392,8 @@ def lm_decode_step(
     x = x.astype(_adtype(cfg, ctx))
     x, aux, _, new_caches = run_stages(
         params["stages"], x, ctx=ctx, cfg=cfg, causal=True, rng=None,
-        navq_state=None, caches=caches, lengths=lengths)
+        navq_state=None, caches=caches, lengths=lengths,
+        block_tables=block_tables)
     x = apply_norm(params["final_norm"], x, cfg.norm)
     head = params["lm_head"] if "lm_head" in params else params["embed"].T
     logits = (x @ head.astype(x.dtype)).astype(jnp.float32)

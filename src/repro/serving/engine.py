@@ -4,8 +4,9 @@ The paper's serving story (§3.1, §5): prefill is distributed across devices
 with ASTRA's compressed exchange (time-to-first-token acceleration); decode
 is autoregressive.  This engine supports:
   * static-batch generate() with per-request lengths,
-  * fp or vq (Appendix G) cache modes,
-  * plain single-host execution or a sequence-sharded mesh.
+  * fp or vq (Appendix G) slab caches, or their paged page-pool variants
+    ("paged" / "paged_vq", block tables via serving.kv_cache.PagedKVCache),
+  * plain single-host execution or a sequence-sharded mesh (slab modes).
 
 Decode runs through the shared jitted multi-token loop in
 ``repro.serving.steps``: the host dispatches one chunk of ``decode_chunk``
@@ -27,6 +28,7 @@ from repro.core.sequence_parallel import LOCAL, MeshContext
 from repro.models import model_factory as mf
 from repro.models import transformer as tlm
 from repro.models.context import StepCtx
+from repro.serving import kv_cache as kvc
 from repro.serving import steps as serving_steps
 
 
@@ -48,12 +50,21 @@ class ServingEngine:
         cache_mode: str = "fp",
         cache_dtype=jnp.float32,
         decode_chunk: int = 8,
+        page_size: int = 16,
     ):
+        if cache_mode not in ("fp", "vq") + kvc.PAGED_CACHE_MODES:
+            raise ValueError(f"unknown cache_mode {cache_mode!r}")
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.decode_chunk = max(int(decode_chunk), 1)
+        self.paged = cache_mode in kvc.PAGED_CACHE_MODES
+        self.page_size = page_size
+        if self.paged and mesh_ctx.seq_axis is not None:
+            raise NotImplementedError(
+                "paged cache modes are single-host; the seq-sharded decode "
+                "path keeps the fp/vq shard cache")
         self.prefill_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="prefill",
                                    astra_mode=astra_mode, cache_mode=cache_mode)
         self.decode_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="decode",
@@ -64,11 +75,16 @@ class ServingEngine:
         self.host_syncs = 0
 
     # -- steps ---------------------------------------------------------------
-    def _prefill_impl(self, params, tokens, lengths):
-        caches = tlm.init_lm_cache(self.cfg, tokens.shape[0], self.max_len,
-                                   self.prefill_ctx, self.cache_dtype)
+    def _prefill_impl(self, params, tokens, lengths, caches, block_tables):
+        """caches/block_tables are None for slab modes (the slab is created
+        here); paged modes pass the page pools + block tables in and prefill
+        scatters prompt K/V into pages directly — no (B, max_len) slab."""
+        if caches is None:
+            caches = tlm.init_lm_cache(self.cfg, tokens.shape[0], self.max_len,
+                                       self.prefill_ctx, self.cache_dtype)
         logits, _, _, caches = tlm.lm_forward(
-            params, {"tokens": tokens}, ctx=self.prefill_ctx, caches=caches)
+            params, {"tokens": tokens}, ctx=self.prefill_ctx, caches=caches,
+            block_tables=block_tables)
         last = jnp.take_along_axis(
             logits, (lengths - 1)[:, None, None].clip(0), axis=1)[:, 0]
         return last, caches
@@ -86,13 +102,34 @@ class ServingEngine:
     ) -> GenerationResult:
         b = len(prompts)
         lens = np.array([len(p) for p in prompts], np.int32)
+        if int(lens.max()) + max_new_tokens > self.max_len:
+            # fail fast: the dense slab would silently clamp writes at the
+            # last position and the paged path would cycle offsets through
+            # its last page — both corrupt the row's own KV history.
+            raise ValueError(
+                f"prompt length {int(lens.max())} + max_new_tokens "
+                f"{max_new_tokens} exceeds max_len={self.max_len}")
         t_pad = int(max(lens.max(), 1))
         toks = np.zeros((b, t_pad), np.int32)
         for i, p in enumerate(prompts):
             toks[i, : len(p)] = p
 
+        kv = block_tables = caches0 = None
+        if self.paged:
+            # one PagedKVCache per generate(): each request gets exactly the
+            # pages its prompt + budget needs, all layers share the tables.
+            kv = kvc.PagedKVCache(
+                self.cfg, slots=b, max_len=self.max_len, ctx=self.decode_ctx,
+                page_size=self.page_size, dtype=self.cache_dtype)
+            for i in range(b):
+                ok = kv.allocate(i, min(int(lens[i]) + max_new_tokens,
+                                        self.max_len))
+                assert ok, "pool sized for slots*max_pages can't run dry"
+            block_tables = kv.table()
+            caches0 = kv.init_cache(b)
         last_logits, caches = self._prefill(self.params, jnp.asarray(toks),
-                                            jnp.asarray(lens))
+                                            jnp.asarray(lens), caches0,
+                                            block_tables)
         rng = jax.random.PRNGKey(seed)
         rng, sub = jax.random.split(rng)
         eos_arr = serving_steps.as_eos_array(eos_id, b)
@@ -116,8 +153,8 @@ class ServingEngine:
             toks_d, valid_d, cur, caches, lengths, remaining, done = \
                 self._decode_chunk(self.params, cur, caches, lengths,
                                    remaining, eos_arr, done, sub,
-                                   num_steps=chunk, temperature=temperature,
-                                   top_k=top_k)
+                                   block_tables, num_steps=chunk,
+                                   temperature=temperature, top_k=top_k)
             toks_h, valid_h, done_h = jax.device_get((toks_d, valid_d, done))
             self.host_syncs += 1
             for i in range(b):

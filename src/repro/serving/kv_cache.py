@@ -1,10 +1,44 @@
-"""KV-cache bookkeeping + memory accounting (paper Appendix G)."""
+"""KV-cache subsystem: Appendix-G memory accounting + the paged page-pool
+cache behind ``cache_mode in {"paged", "paged_vq"}``.
+
+Two halves:
+
+* **Accounting** (eqs. 37-39): ``kv_cache_bytes_fp`` / ``kv_cache_bytes_astra``
+  / ``codebook_bytes`` — pure arithmetic used by the Appendix-G benchmark and
+  the roofline tables.
+
+* **Paged runtime cache**: ``PageAllocator`` (free-list over page ids) +
+  ``PagedKVCache`` (block tables, per-layer page pools).  Every attention
+  layer's K/V pool is a ``(num_pages, page_size, ...)`` array; a request owns
+  a list of pages recorded in its slot's block-table row, so engine memory
+  scales with *allocated tokens* (page-granular) instead of
+  ``slots * max_len``.  One allocator/block table serves every layer: fp16/32
+  value pages ("paged") and uint8/16 VQ code pages ("paged_vq",
+  the codes-only Appendix-G cache) share the same page ids.
+
+Page 0 is a reserved scratch page: block-table rows of retired or
+never-admitted slots point at it, so the fixed-shape decode step can keep
+writing without corrupting live requests, and page-pool reads beyond a row's
+allocation are masked by the attention validity mask.
+"""
 from __future__ import annotations
 
 import math
-from typing import Dict
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.configs.base import ModelConfig
+
+PAGED_CACHE_MODES = ("paged", "paged_vq")
+# leaf names marking a cache sub-dict as a shared page pool (no batch dim)
+PAGED_LEAF_KEYS = frozenset(
+    {"k_pages", "v_pages", "k_code_pages", "v_code_pages"})
+
+
+# ---------------------------------------------------------------------------
+# Appendix-G accounting (eqs. 37-39)
+# ---------------------------------------------------------------------------
 
 
 def kv_cache_bytes_fp(cfg: ModelConfig, seq_len: int, batch: int = 1,
@@ -25,6 +59,14 @@ def kv_cache_bytes_astra(cfg: ModelConfig, seq_len: int, num_devices: int,
     return int(2 * batch * (local + remote))
 
 
+def kv_cache_bytes_codes(cfg: ModelConfig, seq_len: int, batch: int = 1) -> int:
+    """Codes-only cache bytes (the eq.-39 remote term at (n-1)/n -> 1):
+    every token stored as G * log2(K) bits for K and V."""
+    layers = _attn_layers(cfg)
+    bits = math.log2(cfg.astra.codebook_size)
+    return int(2 * batch * seq_len * layers * cfg.astra.groups * bits / 8)
+
+
 def kv_cache_bytes_sharded(cfg: ModelConfig, seq_len: int, num_devices: int,
                            batch: int = 1, bytes_per_val: int = 2) -> int:
     """Our runtime's sharded cache (beyond-paper): disjoint FP shards."""
@@ -38,12 +80,24 @@ def codebook_bytes(cfg: ModelConfig, bytes_per_val: int = 2) -> int:
     return _attn_layers(cfg) * c * cfg.astra.codebook_size * dim * bytes_per_val
 
 
+def code_itemsize(codebook_size: int) -> int:
+    """Storage bytes per VQ code (derived from the runtime's code dtype so
+    accounting can never drift from what the pools materialize)."""
+    from repro.core.vq import code_dtype
+
+    return np.dtype(code_dtype(codebook_size)).itemsize
+
+
 def _attn_layers(cfg: ModelConfig) -> int:
+    """Number of attention layers, counted from the actual stage layout (the
+    old closed-form undercounted/overcounted rg-pattern models whose layer
+    count is not a multiple of 3)."""
     if cfg.arch_type == "ssm":
         return 0
-    if cfg.layer_pattern == "rg":
-        return cfg.num_layers - 2 * (cfg.num_layers // 3)
-    return cfg.num_layers
+    from repro.models.transformer import ATTN_KINDS, stages
+
+    return sum(reps * sum(k in ATTN_KINDS for k in kinds)
+               for kinds, reps in stages(cfg))
 
 
 def memory_report(cfg: ModelConfig, seq_len: int, num_devices: int) -> Dict:
@@ -56,3 +110,233 @@ def memory_report(cfg: ModelConfig, seq_len: int, num_devices: int) -> Dict:
         "astra_fraction": kv_cache_bytes_astra(cfg, seq_len, num_devices) / fp
         if fp else 0.0,
     }
+
+
+# ---------------------------------------------------------------------------
+# Page-granular accounting (what the paged runtime actually materializes)
+# ---------------------------------------------------------------------------
+
+
+def paged_pool_bytes(cfg: ModelConfig, *, max_len: int, page_size: int,
+                     cache_mode: str = "paged", slots: int = 1,
+                     num_pages: Optional[int] = None,
+                     dtype_bytes: int = 4) -> int:
+    """Analytic byte size of the page pools a ``PagedKVCache`` materializes.
+
+    This is eq. 38 (or the codes-only eq.-39 remote term for "paged_vq")
+    rounded up to page granularity, plus one scratch page per pool.  Windowed
+    ("local") attention layers hold fp pages even under "paged_vq",
+    mirroring the dense "vq" mode which keeps them full-precision.
+    """
+    from repro.models.transformer import ATTN_KINDS, stages
+
+    max_pages = -(-max_len // page_size)
+    pages = int(num_pages) if num_pages else slots * max_pages + 1
+    total = 0
+    for kinds, reps in stages(cfg):
+        for kind in kinds:
+            if kind not in ATTN_KINDS:
+                continue
+            window = cfg.window_size if kind == "local" else 0
+            if cache_mode == "paged_vq" and not window:
+                per = pages * page_size * cfg.astra.groups * code_itemsize(
+                    cfg.astra.codebook_size)
+            else:
+                per = pages * page_size * cfg.d_kv * dtype_bytes
+            total += 2 * reps * per  # K and V pools
+    return total
+
+
+def is_paged_sub(sub: Dict[str, Any]) -> bool:
+    """True if a per-layer cache dict is a shared page pool (no batch dim)."""
+    return any(k in PAGED_LEAF_KEYS for k in sub)
+
+
+def adopt_pools(fresh: List[Dict], live: List[Dict]) -> List[Dict]:
+    """Replace the page-pool sub-dicts of a freshly initialized cache tree
+    with the live pools (prefill writes into the engine's pools in place of
+    a per-request slab; non-paged leaves keep their fresh batch-1 state)."""
+    out = []
+    for f_stage, l_stage in zip(fresh, live):
+        out.append({name: (l_stage[name] if is_paged_sub(sub) else sub)
+                    for name, sub in f_stage.items()})
+    return out
+
+
+def pool_bytes(caches: Sequence[Dict]) -> int:
+    """Measured bytes of the materialized page pools in a cache tree."""
+    total = 0
+    for stage in caches:
+        for sub in stage.values():
+            for name, leaf in sub.items():
+                if name in PAGED_LEAF_KEYS:
+                    total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Free-list allocator
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Free-list allocator over page ids shared by every layer's pools.
+
+    Pages ``[0, reserved)`` are never handed out — page 0 is the scratch
+    page absorbing writes from retired/padded rows.  ``alloc`` doubles as
+    append: allocating again for a live owner extends its page list.
+    """
+
+    def __init__(self, num_pages: int, reserved: int = 1):
+        if num_pages <= reserved:
+            raise ValueError(
+                f"num_pages={num_pages} must exceed reserved={reserved}")
+        self.num_pages = int(num_pages)
+        self.reserved = int(reserved)
+        self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
+        self._owned: Dict[Any, List[int]] = {}
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - self.reserved
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(v) for v in self._owned.values())
+
+    def owned(self, owner) -> List[int]:
+        return list(self._owned.get(owner, ()))
+
+    def alloc(self, owner, n_pages: int) -> Optional[List[int]]:
+        """Hand ``n_pages`` to ``owner`` (appending to any existing grant).
+        Returns the new pages, or None (state unchanged) on pressure."""
+        if n_pages < 0:
+            raise ValueError("n_pages must be >= 0")
+        if n_pages > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n_pages)]
+        self._owned.setdefault(owner, []).extend(pages)
+        return pages
+
+    def free(self, owner) -> List[int]:
+        """Return every page owned by ``owner`` to the free list."""
+        pages = self._owned.pop(owner, [])
+        self._free.extend(pages)
+        return pages
+
+    def check_invariants(self) -> None:
+        seen = set()
+        for pages in self._owned.values():
+            for p in pages:
+                assert self.reserved <= p < self.num_pages, p
+                assert p not in seen, f"page {p} double-assigned"
+                seen.add(p)
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        assert not (seen & free), "live page also on the free list"
+        assert self.num_free + self.pages_in_use == self.capacity
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache
+# ---------------------------------------------------------------------------
+
+
+class PagedKVCache:
+    """Block tables + page pools for the serving engines.
+
+    Host side: a ``PageAllocator`` and a ``(slots, max_pages)`` int32 block
+    table (row = slot, entry = page id, 0 = scratch).  Device side:
+    ``init_cache()`` builds the model cache tree whose attention leaves are
+    ``(num_pages, page_size, ...)`` pools — fp K/V pages for "paged", uint8/16
+    code pages for "paged_vq" — which the engines thread through the jitted
+    prefill/decode steps unchanged-shape.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int, ctx,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 dtype=None):
+        import jax.numpy as jnp
+
+        if ctx.cache_mode not in PAGED_CACHE_MODES:
+            raise ValueError(f"ctx.cache_mode={ctx.cache_mode!r} is not paged")
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len={max_len} must be a multiple of page_size="
+                f"{page_size} (the paged decode view spans max_len exactly)")
+        self.cfg = cfg
+        self.ctx = ctx
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.page_size = int(page_size)
+        self.max_pages = max_len // page_size
+        self.num_pages = (int(num_pages) if num_pages
+                          else self.slots * self.max_pages + 1)
+        self.dtype = jnp.float32 if dtype is None else dtype
+        self.allocator = PageAllocator(self.num_pages)
+        self.block_tables = np.zeros((self.slots, self.max_pages), np.int32)
+
+    # -- host-side bookkeeping ----------------------------------------------
+    def pages_for(self, num_tokens: int) -> int:
+        return -(-max(int(num_tokens), 1) // self.page_size)
+
+    def can_allocate(self, slot, num_tokens: int) -> bool:
+        need = self.pages_for(num_tokens) - len(self.allocator.owned(slot))
+        return need <= self.allocator.num_free
+
+    def allocate(self, slot, num_tokens: int) -> bool:
+        """Grow ``slot``'s grant to cover ``num_tokens`` total tokens.
+        False (state unchanged) on allocator pressure."""
+        need = self.pages_for(num_tokens)
+        have = len(self.allocator.owned(slot))
+        if need <= have:
+            return True
+        pages = self.allocator.alloc(slot, need - have)
+        if pages is None:
+            return False
+        self.block_tables[slot, have:need] = pages
+        return True
+
+    def free(self, slot) -> int:
+        """Retire a request: return all its pages, point the row at scratch."""
+        pages = self.allocator.free(slot)
+        self.block_tables[slot, :] = 0
+        return len(pages)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.allocator.pages_in_use
+
+    def table(self):
+        """Device copy of the block tables (fixed shape: compile-once)."""
+        import jax.numpy as jnp
+
+        return jnp.asarray(self.block_tables)
+
+    # -- device-side pools --------------------------------------------------
+    def init_cache(self, batch: Optional[int] = None):
+        """Model cache tree: shared page pools for attention layers, batched
+        dense state for ring/recurrent/ssm layers."""
+        from repro.models import transformer as tlm
+
+        return tlm.init_lm_cache(self.cfg, batch or self.slots, self.max_len,
+                                 self.ctx, self.dtype,
+                                 page_size=self.page_size,
+                                 num_pages=self.num_pages)
+
+    def pool_bytes(self, caches=None) -> int:
+        """Measured page-pool bytes (materialized if ``caches`` given, else
+        the analytic page-granular size)."""
+        if caches is not None:
+            return pool_bytes(caches)
+        return paged_pool_bytes(
+            self.cfg, max_len=self.max_len, page_size=self.page_size,
+            cache_mode=self.ctx.cache_mode, slots=self.slots,
+            num_pages=self.num_pages,
+            dtype_bytes=np.dtype(self.dtype).itemsize)

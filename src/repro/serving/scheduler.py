@@ -8,6 +8,13 @@ active slots together, and retires slots on EOS/max-new — vLLM-style
 iteration-level scheduling, with ASTRA's sequence-parallel prefill supplying
 the time-to-first-token acceleration.
 
+With ``cache_mode in {"paged", "paged_vq"}`` the cache is a block-granular
+page pool (``serving.kv_cache.PagedKVCache``): admission additionally blocks
+until the allocator can cover the request's prompt + budget, prefill writes
+pages directly (no per-slot slab copy), and retirement returns the pages.
+"paged_vq" stores uint8/16 VQ codes per page — the Appendix-G codes-only
+cache under a block table.
+
 All steps are fixed-shape (slot count and max_len are static), so the jitted
 prefill/decode compile once.  Decoding goes through the same jitted
 multi-token chunk as ``ServingEngine`` (``repro.serving.steps``): each
@@ -30,6 +37,7 @@ from repro.core.sequence_parallel import LOCAL, MeshContext
 from repro.models import model_factory as mf
 from repro.models import transformer as tlm
 from repro.models.context import StepCtx
+from repro.serving import kv_cache as kvc
 from repro.serving import steps as serving_steps
 
 
@@ -51,9 +59,12 @@ class ContinuousBatchingEngine:
                  max_len: int = 256, mesh_ctx: MeshContext = LOCAL,
                  astra_mode: str = "off", cache_mode: str = "fp",
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 decode_chunk: int = 4):
+                 decode_chunk: int = 4, page_size: int = 16,
+                 num_pages: Optional[int] = None):
         if cfg.arch_type in ("vit",):
             raise ValueError("classification models are not generative")
+        if cache_mode not in ("fp", "vq") + kvc.PAGED_CACHE_MODES:
+            raise ValueError(f"unknown cache_mode {cache_mode!r}")
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -67,8 +78,21 @@ class ContinuousBatchingEngine:
         self.decode_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="decode",
                                   astra_mode=astra_mode,
                                   cache_mode=cache_mode)
-        self.caches = tlm.init_lm_cache(cfg, slots, max_len, self.decode_ctx,
-                                        jnp.float32)
+        if cache_mode in kvc.PAGED_CACHE_MODES:
+            if mesh_ctx.seq_axis is not None:
+                raise NotImplementedError("paged cache modes are single-host")
+            # undersized num_pages => admission waits for pages, not slots
+            self.kv: Optional[kvc.PagedKVCache] = kvc.PagedKVCache(
+                cfg, slots=slots, max_len=max_len, ctx=self.decode_ctx,
+                page_size=page_size, num_pages=num_pages, dtype=jnp.float32)
+            self.caches = self.kv.init_cache()
+            self._bt = self.kv.table()
+        else:
+            self.kv = None
+            self._bt = None
+            self.caches = tlm.init_lm_cache(cfg, slots, max_len,
+                                            self.decode_ctx, jnp.float32)
+        self.admission_stalls = 0  # admissions deferred by page pressure
         self.lengths = jnp.zeros((slots,), jnp.int32)
         self.cur_token = jnp.zeros((slots,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * slots
@@ -82,12 +106,23 @@ class ContinuousBatchingEngine:
         self._uid = 0
 
     # -- jitted steps --------------------------------------------------------
-    def _prefill_impl(self, params, tokens, length):
-        """tokens: (1, max_len) padded prompt -> (last_logits, slot cache)."""
-        caches = tlm.init_lm_cache(self.cfg, 1, self.max_len,
-                                   self.prefill_ctx, jnp.float32)
+    def _prefill_impl(self, params, tokens, length, live_caches, block_table):
+        """tokens: (1, max_len) padded prompt -> (last_logits, slot cache).
+
+        Slab modes build a throwaway (1, max_len) cache that the caller
+        copies into the batch cache.  Paged modes adopt the engine's live
+        page pools instead and prefill scatters prompt K/V straight into the
+        slot's allocated pages — the only per-slot copies left are the tiny
+        recurrent/ring leaves."""
+        caches = tlm.init_lm_cache(
+            self.cfg, 1, self.max_len, self.prefill_ctx, jnp.float32,
+            page_size=self.kv.page_size if self.kv else 0,
+            num_pages=self.kv.num_pages if self.kv else 0)
+        if live_caches is not None:
+            caches = kvc.adopt_pools(caches, live_caches)
         logits, _, _, caches = tlm.lm_forward(
-            params, {"tokens": tokens}, ctx=self.prefill_ctx, caches=caches)
+            params, {"tokens": tokens}, ctx=self.prefill_ctx, caches=caches,
+            block_tables=block_table)
         last = jnp.take_along_axis(
             logits, (length - 1)[None, None, None].clip(0), axis=1)[:, 0]
         return last, caches
@@ -101,24 +136,52 @@ class ContinuousBatchingEngine:
         return self._uid
 
     def _write_slot_cache(self, slot: int, slot_cache) -> None:
-        """Insert a (1, ...) prefill cache into batch position ``slot``."""
+        """Merge a prefill result into the engine cache: shared page pools
+        are adopted wholesale (prefill already wrote the slot's pages);
+        batched (R, B, ...) leaves get the (R, 1, ...) slice inserted."""
         def one(batch_leaf, new_leaf):
-            # leaves are (R, B, S, ...) stacked per stage/sub
             return jax.lax.dynamic_update_slice_in_dim(
                 batch_leaf, new_leaf.astype(batch_leaf.dtype), slot, axis=1)
 
-        self.caches = jax.tree.map(one, self.caches, slot_cache)
+        merged = []
+        for b_stage, n_stage in zip(self.caches, slot_cache):
+            sub = {}
+            for name, n_sub in n_stage.items():
+                if kvc.is_paged_sub(n_sub):
+                    sub[name] = n_sub
+                else:
+                    sub[name] = jax.tree.map(one, b_stage[name], n_sub)
+            merged.append(sub)
+        self.caches = merged
 
     def _admit(self) -> None:
         for slot in range(self.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
+            n = min(len(self.queue[0].prompt),
+                    self.max_len - self.queue[0].max_new_tokens - 1)
+            if self.kv is not None:
+                # admission blocks on allocator pressure, not slot count:
+                # the request needs pages for its prompt + full budget.
+                tokens_needed = min(n + self.queue[0].max_new_tokens,
+                                    self.max_len)
+                if self.kv.pages_for(tokens_needed) > \
+                        self.kv.allocator.capacity:
+                    raise ValueError(
+                        f"request needs {self.kv.pages_for(tokens_needed)} "
+                        f"pages but the pool only has "
+                        f"{self.kv.allocator.capacity}")
+                if not self.kv.allocate(slot, tokens_needed):
+                    self.admission_stalls += 1
+                    break  # FIFO: wait for a retirement to free pages
+                self._bt = self.kv.table()
             req = self.queue.pop(0)
             toks = np.zeros((1, self.max_len), np.int32)
-            n = min(len(req.prompt), self.max_len - req.max_new_tokens - 1)
             toks[0, :n] = req.prompt[:n]
             last_logits, slot_cache = self._prefill(
-                self.params, jnp.asarray(toks), jnp.asarray(n, jnp.int32))
+                self.params, jnp.asarray(toks), jnp.asarray(n, jnp.int32),
+                self.caches if self.kv is not None else None,
+                self._bt[slot:slot + 1] if self.kv is not None else None)
             self._write_slot_cache(slot, slot_cache)
             self._rng, sub = jax.random.split(self._rng)
             eos_arr = serving_steps.as_eos_array(req.eos_id, 1)
@@ -144,6 +207,12 @@ class ContinuousBatchingEngine:
             req.done_step = self.step_count
             self.finished.append(req)
             self.active[slot] = None
+            if self.kv is not None:
+                # all of the request's pages go back to the free list; the
+                # slot's table row points at scratch so the fixed-shape
+                # decode step keeps writing harmlessly until re-admission.
+                self.kv.free(slot)
+                self._bt = self.kv.table()
             return True
         return False
 
@@ -168,7 +237,7 @@ class ContinuousBatchingEngine:
         toks_d, valid_d, cur, self.caches, self.lengths, _, _ = \
             self._decode_chunk(self.params, self.cur_token, self.caches,
                                self.lengths, remaining, eos_ids, done, sub,
-                               num_steps=self.decode_chunk,
+                               self._bt, num_steps=self.decode_chunk,
                                temperature=self.temperature,
                                top_k=self.top_k)
         self.cur_token = cur
@@ -183,7 +252,11 @@ class ContinuousBatchingEngine:
                 if valid_h[slot, j]:
                     req.output.append(int(toks_h[slot, j]))
                     emitted += 1
-            self._maybe_finish(slot, req.output[-1])
+            if valid_h[slot].any():
+                # only this chunk's tokens can retire the slot; a chunk that
+                # emitted nothing must not re-check a stale earlier token
+                # against EOS (it was already checked when it was emitted).
+                self._maybe_finish(slot, req.output[-1])
         return emitted
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict[str, Any]:
@@ -202,4 +275,6 @@ class ContinuousBatchingEngine:
             "mean_ttft_steps": float(np.mean(
                 [r.first_token_step - r.submitted_step
                  for r in self.finished])) if self.finished else 0.0,
+            "admission_stalls": self.admission_stalls,
+            "pages_in_use": self.kv.pages_in_use if self.kv else 0,
         }

@@ -37,11 +37,32 @@ from repro.models import transformer as tlm
 from repro.serving.sampler import sample_tokens
 
 
+class CountingJit:
+    """``jax.jit`` wrapper that counts retraces.
+
+    The wrapped python function only runs when jit (re)traces, so
+    ``trace_count`` exposes compilation behaviour to tests: the serving
+    engines assert the decode chunk stays at one trace across a whole
+    workload (fixed shapes + static chunk size => compile once)."""
+
+    def __init__(self, fn, *, static_argnames=()):
+        self.trace_count = 0
+
+        def counted(*args, **kwargs):
+            self.trace_count += 1
+            return fn(*args, **kwargs)
+
+        self._jit = jax.jit(counted, static_argnames=static_argnames)
+
+    def __call__(self, *args, **kwargs):
+        return self._jit(*args, **kwargs)
+
+
 def make_decode_chunk(ctx):
     """Jitted ``decode_chunk`` specialized to one StepCtx — the single
     compiled decode entry point both serving engines share."""
-    return jax.jit(functools.partial(decode_chunk, ctx=ctx),
-                   static_argnames=("num_steps", "temperature", "top_k"))
+    return CountingJit(functools.partial(decode_chunk, ctx=ctx),
+                       static_argnames=("num_steps", "temperature", "top_k"))
 
 
 def decode_chunk(
@@ -53,6 +74,7 @@ def decode_chunk(
     eos_ids: jax.Array,    # (B,) int32 — per-row EOS id, -1 = none
     done: jax.Array,       # (B,) bool — row finished (EOS seen / inactive)
     rng: jax.Array,
+    block_tables: jax.Array = None,  # (B, max_pages) int32 for paged modes
     *,
     ctx,                   # StepCtx (decode mode) — closed over via partial
     num_steps: int,
@@ -67,12 +89,17 @@ def decode_chunk(
     ``tokens[b, j]`` was actually emitted by row ``b`` (False once the row
     hit EOS, exhausted its budget, or was inactive on entry).  The returned
     ``done`` includes budget exhaustion, so callers can stop polling.
+
+    ``block_tables`` (paged cache modes) rides through the whole scan as a
+    fixed-shape constant: page allocation changes between chunks never
+    re-specialize the compiled graph, only the table *values* change.
     """
 
     def one(carry, step_rng):
         cur, caches, lengths, remaining, done = carry
         logits, caches = tlm.lm_decode_step(params, cur[:, None], caches,
-                                            lengths, ctx=ctx)
+                                            lengths, ctx=ctx,
+                                            block_tables=block_tables)
         nxt = sample_tokens(step_rng, logits[:, 0], temperature=temperature,
                             top_k=top_k)
         active = jnp.logical_and(~done, remaining > 0)

@@ -83,6 +83,39 @@ def test_eos_frees_slot_early(model):
     assert len(eng.finished[0].output) <= 8
 
 
+def test_zero_valid_chunk_never_rechecks_stale_token(model):
+    """Regression: a chunk that emits zero valid tokens for a slot must not
+    re-check that slot's stale last token against EOS — the token was
+    already EOS-checked when it was emitted.  Simulates an empty chunk
+    (preemption / speculative reject) whose slot's stale token happens to
+    collide with the request's EOS id."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=48,
+                                   decode_chunk=2)
+    eng.submit([1, 2, 3], max_new_tokens=6)
+    eng._admit()
+    req = eng.active[0]
+    assert req is not None and len(req.output) == 1
+    req.eos_id = req.output[-1]  # stale token == EOS id, budget remains
+
+    real = eng._decode_chunk
+
+    def empty_chunk(params, cur, caches, lengths, remaining, eos_ids, done,
+                    rng, block_tables=None, *, num_steps, **kw):
+        return (np.zeros((1, num_steps), np.int32),
+                np.zeros((1, num_steps), bool),
+                cur, caches, lengths, remaining, done)
+
+    eng._decode_chunk = empty_chunk
+    eng.step()
+    assert eng.active[0] is req, "retired on a stale, re-checked token"
+    assert len(req.output) == 1
+    eng._decode_chunk = real
+    eng.run_until_drained()
+    assert eng.finished and eng.finished[0] is req
+    assert req.output[-1] == req.eos_id or len(req.output) == 6
+
+
 def test_ttft_reported(model):
     cfg, params = model
     eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=48)

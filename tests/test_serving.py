@@ -79,6 +79,17 @@ def test_eos_stops_generation():
     assert out2.tokens[0][-1] == eos
 
 
+def test_generate_rejects_prompt_budget_overflow():
+    """Prompt + budget beyond max_len fails fast instead of silently
+    clamping (dense slab) or cycling the last page (paged)."""
+    cfg, params = small_lm()
+    for mode in ("fp", "paged"):
+        engine = ServingEngine(cfg, params, max_len=16, astra_mode="off",
+                               cache_mode=mode, page_size=8)
+        with pytest.raises(ValueError, match="max_len"):
+            engine.generate([[1] * 10], max_new_tokens=10)
+
+
 def test_sampler_greedy_and_topk():
     logits = jnp.asarray([[1.0, 3.0, 2.0, -1.0]])
     g = sample_tokens(jax.random.PRNGKey(0), logits, temperature=0.0)
