@@ -1,21 +1,29 @@
 """Paper Appendix G: VQ codebook overhead + KV-cache savings (exact), plus
 the *measured* page-pool bytes of the runtime's paged cache modes next to
-the eq. 38/39 predictions (page-granularity rounding + one scratch page)."""
+the per-layer eq. 38/39 predictions (page-granularity rounding + one
+scratch page per pool; windowed layers sized by their ``window/page_size``
+page ring instead of max_len)."""
 from __future__ import annotations
 
 import dataclasses
 
 from repro.configs import ASSIGNED, get_config
-from repro.serving.kv_cache import memory_report, paged_pool_bytes
+from repro.serving.kv_cache import (
+    memory_report,
+    page_group_spans,
+    paged_pool_bytes,
+)
 from benchmarks.common import fmt_table
 
 PAGE = 16  # tokens per KV page
 
 
-def _paged(cfg, seq_len: int, mode: str, bytes_per_val: int = 2) -> int:
+def _paged(cfg, seq_len: int, vq_codes: bool, bytes_per_val: int = 2,
+           window_cap: bool = True) -> int:
     return paged_pool_bytes(cfg, max_len=seq_len, page_size=PAGE,
-                            cache_mode=mode, slots=1,
-                            dtype_bytes=bytes_per_val)
+                            vq_codes=vq_codes, slots=1,
+                            dtype_bytes=bytes_per_val,
+                            window_cap=window_cap)
 
 
 def _measured_pools(cfg, seq_len: int) -> dict:
@@ -45,9 +53,10 @@ def main() -> str:
     rep = memory_report(cfg, seq_len=1024, num_devices=4)
     rows.append(["llama3-8b(paper)", 1024, rep["kv_fp_bytes"],
                  rep["kv_astra_bytes"], rep["astra_fraction"],
-                 rep["codebook_bytes"], _paged(cfg, 1024, "paged"),
-                 _paged(cfg, 1024, "paged_vq")])
+                 rep["codebook_bytes"], _paged(cfg, 1024, False),
+                 _paged(cfg, 1024, True)])
     # every assigned arch at decode_32k scale
+    windowed = []
     for arch in ASSIGNED:
         c = get_config(arch)
         if c.arch_type == "ssm":
@@ -55,11 +64,21 @@ def main() -> str:
         r = memory_report(c, seq_len=32768, num_devices=4)
         rows.append([arch, 32768, r["kv_fp_bytes"], r["kv_astra_bytes"],
                      r["astra_fraction"], r["codebook_bytes"],
-                     _paged(c, 32768, "paged"), _paged(c, 32768, "paged_vq")])
+                     _paged(c, 32768, False), _paged(c, 32768, True)])
+        if "window" in page_group_spans(c, 32768, PAGE):
+            windowed.append((arch, c))
     table = fmt_table(
         "Appendix G: KV-cache + codebook memory (bytes, batch=1)",
         ["arch", "seq", "kv_fp", "kv_astra", "astra_fraction",
          "codebook", "kv_paged_pool", "kv_paged_vq_pool"], rows)
+    # SWA architectures: per-layer window caps vs max_len-sized pools
+    for arch, c in windowed:
+        capped = _paged(c, 32768, False)
+        full = _paged(c, 32768, False, window_cap=False)
+        spans = page_group_spans(c, 32768, PAGE)
+        table += (f"\n# windowed page caps, {arch}: spans={spans} "
+                  f"paged pool {full} -> {capped} bytes "
+                  f"({capped / full:.2%} of uncapped)")
     # materialize the worked example's pools: measured == analytic columns
     measured = _measured_pools(cfg, 1024)
     table += ("\n# measured page pools, llama3-8b(paper) seq=1024 "

@@ -1,24 +1,33 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
 """Sharding/kernel autotuner: productionises the §Perf hillclimb.
 
-For one (arch x shape) it compiles the variant grid that the EXPERIMENTS.md
-§Perf pass found to matter — weight-sharding strategy, blocked-attention
-chunk, Appendix-G cache mode, last-token logits — ranks the candidates by
-roofline time (penalising any that exceed the HBM budget), and writes the
-winner to results/autotune/<arch>_<shape>.json.
+Two tuners share this entry point:
+
+* **Dry-run grid** (default): for one (arch x shape) it compiles the
+  variant grid that the EXPERIMENTS.md §Perf pass found to matter — weight
+  sharding, blocked-attention chunk, Appendix-G cache mode, last-token
+  logits — ranks the candidates by roofline time (penalising any that
+  exceed the HBM budget), and writes the winner to
+  results/autotune/<arch>_<shape>.json.  (Importing the dry-run machinery
+  forces the 512-device host platform, so it is imported lazily.)
+
+* **Decode-chunk sweep** (``--decode-chunk``): times real generates per
+  chunk size on this host through the serving engines' CacheBackend
+  interface and persists the winner
+  (results/autotune/decode_chunk_<arch>.json) that the engines read at
+  construction — see ``repro.serving.autotune``.
 
 Usage:
   python -m repro.launch.autotune --arch recurrentgemma-9b --shape decode_32k
   python -m repro.launch.autotune --arch all --shape decode_32k
+  python -m repro.launch.autotune --arch gpt2-small --decode-chunk \
+      --batch 4 --reduced
 """
 import argparse
 import itertools
 import json
+import os
 
 from repro.configs import ASSIGNED, SHAPE_BY_NAME, get_config
-from repro.launch.dryrun import run_combo
 
 HBM_BYTES = 16 * 2**30  # v5e
 
@@ -50,6 +59,8 @@ def score(rec) -> float:
 
 
 def tune(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    from repro.launch.dryrun import run_combo  # sets the 512-device flag
+
     shape = SHAPE_BY_NAME[shape_name]
     results = []
     for i, var in enumerate(variant_grid(shape.kind)):
@@ -83,13 +94,54 @@ def tune(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
     return out
 
 
+def tune_decode_chunk(arch: str, *, batch: int, reduced: bool,
+                      cache_mode: str = "fp", max_len: int = 128,
+                      candidates=(1, 2, 4, 8, 16)) -> dict:
+    """Sweep the on-device decode chunk for one (arch, batch) and persist
+    the winner for the engines to pick up."""
+    import jax
+
+    from repro.models import model_factory as mf
+    from repro.serving import autotune as serving_autotune
+
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    params = mf.init_params(jax.random.PRNGKey(0), cfg)
+    out = serving_autotune.sweep_decode_chunk(
+        cfg, params, batch=batch, cache_mode=cache_mode, max_len=max_len,
+        candidates=tuple(candidates))
+    for chunk, t in sorted(out["timings_s"].items()):
+        print(f"  decode_chunk={chunk:3d} -> {t:.3f}s/generate")
+    print(f"   best: decode_chunk={out['best_decode_chunk']} "
+          f"-> {out.get('path', '(not persisted)')}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--shape", default="")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--decode-chunk", action="store_true",
+                    help="sweep the serving decode-chunk size instead of "
+                         "the dry-run sharding grid")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch size for the decode-chunk sweep")
+    ap.add_argument("--cache-mode", default="fp",
+                    help="cache layout the decode-chunk sweep runs through")
+    ap.add_argument("--reduced", action="store_true",
+                    help="sweep the reduced config (CPU-sized)")
     args = ap.parse_args()
     archs = ASSIGNED if args.arch == "all" else [args.arch]
+    if args.decode_chunk:
+        for arch in archs:
+            print(f"== {arch} decode-chunk sweep (batch={args.batch})")
+            tune_decode_chunk(arch, batch=args.batch, reduced=args.reduced,
+                              cache_mode=args.cache_mode)
+        return
+    if not args.shape:
+        ap.error("--shape is required for the dry-run grid")
     for arch in archs:
         cfg = get_config(arch)
         from repro.launch.steps import combo_supported

@@ -37,6 +37,73 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
 
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8}
+
+
+def _largest_allgather_bytes(hlo: str) -> int:
+    """Max output size of any all-gather in the optimized HLO — the
+    decode-step guard against involuntary rematerialization of a sharded
+    table (the gather would show up as a table-sized all-gather).
+
+    HLO instructions read ``%all-gather.5 = bf16[...]{...} all-gather(...)``
+    — the op name on the left also contains "all-gather", so the result
+    shapes are what sits between the ``=`` and the *call* (the token
+    followed by ``(``)."""
+    import re
+
+    biggest = 0
+    call = re.compile(r"=\s*(.*?)\s*all-gather(?:-start|-done)?\(", re.S)
+    for line in hlo.splitlines():
+        m = call.search(line)
+        if not m:
+            continue
+        for dt, dims in re.findall(r"(\w+)\[([0-9,]*)\]", m.group(1)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            biggest = max(biggest, n * _DTYPE_BYTES[dt])
+    return biggest
+
+
+def _tree_bytes(tree) -> int:
+    import numpy as np
+
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def _donation_report(bundle, mem: dict, n_chips: int) -> dict:
+    """Did the compiled step alias its donated cache buffers?  The donated
+    pytree size is GLOBAL while ``alias_size_in_bytes`` is per device, so
+    compare against the per-device share.  On platforms without donation
+    support (CPU, incl. this forced-host dry-run) XLA copies instead, so
+    ``in_place`` is only asserted where it can hold."""
+    from repro.serving.cache_backend import donation_supported
+
+    donated = sum(_tree_bytes(bundle.abstract_args[i])
+                  for i in bundle.donate_argnums
+                  if bundle.abstract_args[i] is not None)
+    per_device = donated // max(n_chips, 1)
+    alias = int(mem.get("alias_size_in_bytes", 0) or 0)
+    supported = donation_supported()
+    rep = {"donate_argnums": list(bundle.donate_argnums),
+           "donated_bytes": donated,
+           "donated_bytes_per_device": per_device,
+           "alias_bytes_per_device": alias,
+           "platform_supports_donation": supported,
+           "in_place": bool(donated and alias >= per_device)}
+    if supported and donated:
+        assert rep["in_place"], (
+            f"donated cache buffers were copied, not aliased (per-device "
+            f"alias={alias} < donated share={per_device})")
+    return rep
+
+
 def _memory_analysis_dict(compiled):
     try:
         ma = compiled.memory_analysis()
@@ -101,6 +168,19 @@ def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
         wire_bytes = float(ha["wire_bytes"])
 
         n_chips = mesh.devices.size
+        if shape.kind == "decode":
+            # the lm_decode_step embedding lookup used to involuntarily
+            # rematerialize the FSDP-sharded table on jax 0.4.x; a stray
+            # all-gather of it would dwarf every legitimate decode
+            # collective, so pin its absence here.
+            embed_bytes = cfg.vocab_size * cfg.d_model * 2  # bf16 weights
+            big_ag = _largest_allgather_bytes(hlo)
+            rec["largest_allgather_bytes"] = big_ag
+            assert big_ag < embed_bytes, (
+                f"decode step all-gathers {big_ag} bytes (>= the "
+                f"{embed_bytes}-byte embedding table): the embedding "
+                f"lookup is rematerializing again")
+            rec["donation"] = _donation_report(bundle, mem, n_chips)
         terms = roofline_terms(flops, bytes_accessed, wire_bytes)
         tokens = shape.global_batch * (
             shape.seq_len if shape.kind != "decode" else 1)

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model_factory as mf
+from repro.serving.cache_backend import CACHE_MODES
 from repro.serving.engine import ServingEngine
 from repro.training import checkpoint
 
@@ -31,10 +32,13 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--cache-mode", default="fp",
-                    choices=["fp", "vq", "paged", "paged_vq"])
+    ap.add_argument("--cache-mode", default="fp", choices=list(CACHE_MODES))
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size (tokens) for the paged cache modes")
+    ap.add_argument("--decode-chunk", type=int, default=0,
+                    help="on-device decode chunk size; 0 = the persisted "
+                         "autotune winner (results/autotune/) or the "
+                         "engine default")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -53,7 +57,8 @@ def main() -> None:
     engine = ServingEngine(
         cfg, params, max_len=args.max_len,
         astra_mode="sim" if cfg.astra.enabled else "off",
-        cache_mode=args.cache_mode, page_size=args.page_size)
+        cache_mode=args.cache_mode, page_size=args.page_size,
+        decode_chunk=args.decode_chunk or None)
 
     rng = np.random.RandomState(args.seed)
     prompts = [

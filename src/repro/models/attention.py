@@ -1,5 +1,8 @@
 """Attention layer: GQA projections + RoPE + (ASTRA mixed-precision |
-full-precision) attention + KV-cache handling for prefill/decode.
+full-precision) attention.  KV-cache storage (slab / codes / paged / shard)
+is owned by ``serving.cache_backend`` — this module computes q/k/v and the
+attention math, and hands cache init/prefill-write/decode-attend to
+``ctx.backend`` so every layout shares one numerical epilogue.
 
 Layer kinds: "attn" (global), "attn_nope" (global, no RoPE — llama4 iRoPE),
 "local" (sliding window), "global" (gemma2 global half).
@@ -10,9 +13,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
 from repro.core import vq
 from repro.core.astra_block import (
     astra_kv_attention_sim,
@@ -21,7 +22,6 @@ from repro.core.astra_block import (
 )
 from repro.core.mixed_attention import (
     full_attention,
-    merge_partial_stats,
     partial_attention_stats,
 )
 from repro.models.context import StepCtx
@@ -99,7 +99,8 @@ def attention_forward(
     navq_stats: Optional[Dict] = None,
     rng: Optional[jax.Array] = None,
     cache: Optional[Dict] = None,
-    block_table: Optional[jax.Array] = None,
+    block_tables=None,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
     """Returns (y, aux, new_cache).  aux = dict(commit=.., navq=(per-dim
     residual mean/var for K and V) or zeros)."""
@@ -139,8 +140,9 @@ def attention_forward(
 
     new_cache = None
     if cache is not None:  # prefill writes the cache
-        new_cache = _prefill_write(cache, k, v, ctx, cfg, vq_params,
-                                   block_table)
+        new_cache = ctx.backend.prefill_write(
+            cache, k, v, ctx=ctx, kind=kind, vq_params=vq_params,
+            block_tables=block_tables, lengths=lengths)
     y = out.reshape(b, t, -1) @ params["wo"]
     return y, aux, new_cache
 
@@ -168,108 +170,17 @@ def _aux_from_sim(a, cfg) -> Dict[str, jax.Array]:
 
 
 # ---------------------------------------------------------------------------
-# KV cache: init / prefill-write / decode
+# KV cache: init / prefill-write / decode (delegated to ctx.backend)
 # ---------------------------------------------------------------------------
 
 
 def init_attn_cache(cfg, kind: str, batch: int, max_len: int, ctx: StepCtx,
                     dtype=jnp.bfloat16, *, page_size: int = 0,
-                    num_pages: int = 0) -> Dict[str, jax.Array]:
-    hkv, hd = cfg.num_kv_heads, cfg.head_dim
-    window = kind_window(kind, cfg)
-    s = min(window, max_len) if window else max_len
-    if ctx.cache_mode in ("paged", "paged_vq"):
-        # Shared page pools (no batch dim): a request's pages are resolved
-        # through its block-table row.  Windowed layers keep fp pages under
-        # paged_vq, mirroring dense "vq" which leaves them full-precision.
-        if page_size <= 0 or num_pages <= 0:
-            raise ValueError("paged cache modes need page_size/num_pages "
-                             "(build caches via serving.kv_cache.PagedKVCache)")
-        if ctx.cache_mode == "paged_vq" and not window:
-            g = cfg.astra.groups
-            cd = vq.code_dtype(cfg.astra.codebook_size)
-            return {
-                "k_code_pages": jnp.zeros((num_pages, page_size, g), cd),
-                "v_code_pages": jnp.zeros((num_pages, page_size, g), cd),
-            }
-        return {
-            "k_pages": jnp.zeros((num_pages, page_size, hkv, hd), dtype),
-            "v_pages": jnp.zeros((num_pages, page_size, hkv, hd), dtype),
-        }
-    if ctx.cache_mode == "vq" and not window:
-        spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
-        cd = vq.code_dtype(cfg.astra.codebook_size)
-        return {
-            "k_codes": jnp.zeros((batch, s, spec.groups), cd),
-            "v_codes": jnp.zeros((batch, s, spec.groups), cd),
-        }
-    return {
-        "k": jnp.zeros((batch, s, hkv, hd), dtype),
-        "v": jnp.zeros((batch, s, hkv, hd), dtype),
-    }
-
-
-def _prefill_write(cache, k, v, ctx: StepCtx, cfg, vq_params=None,
-                   block_table=None):
-    """Write prefill K/V into the cache (positions 0..T-1).  For ring (SWA)
-    caches keep the last W positions; for vq caches store codes; for page
-    pools scatter whole pages through the block table."""
-    if "k_pages" in cache or "k_code_pages" in cache:
-        return _prefill_write_paged(cache, k, v, cfg, vq_params, block_table)
-    if "k_codes" in cache:
-        spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
-        b, t = k.shape[0], k.shape[1]
-        kc = vq.encode(vq_params["k"], k.reshape(b, t, -1), spec)
-        vc = vq.encode(vq_params["v"], v.reshape(b, t, -1), spec)
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k_codes"], kc.astype(cache["k_codes"].dtype), 0, 1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v_codes"], vc.astype(cache["v_codes"].dtype), 0, 1)
-        return {"k_codes": ck, "v_codes": cv}
-    s = cache["k"].shape[1]
-    t = k.shape[1]
-    if t >= s:  # ring/window cache: keep the last s positions
-        return {"k": k[:, t - s:].astype(cache["k"].dtype),
-                "v": v[:, t - s:].astype(cache["v"].dtype)}
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, 1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, 1)
-    return {"k": ck, "v": cv}
-
-
-def _scatter_pages(pool: jax.Array, vals: jax.Array,
-                   block_table: jax.Array) -> jax.Array:
-    """Write ``vals`` (B, T, ...) into ``pool`` (P, ps, ...) page-by-page via
-    ``block_table`` (B, max_pages).  Rows whose table entries point at the
-    scratch page (0) dump there; those positions are never read (masked)."""
-    ps = pool.shape[1]
-    b, t = vals.shape[:2]
-    n_pages = -(-t // ps)
-    pad = n_pages * ps - t
-    if pad:
-        vals = jnp.pad(vals, [(0, 0), (0, pad)] + [(0, 0)] * (vals.ndim - 2))
-    vals = vals.reshape((b * n_pages, ps) + vals.shape[2:])
-    idx = block_table[:, :n_pages].reshape(-1)
-    return pool.at[idx].set(vals.astype(pool.dtype))
-
-
-def _prefill_write_paged(cache, k, v, cfg, vq_params, block_table):
-    """Prefill writes prompt K/V (or codes) directly into the page pools —
-    no (B, max_len) slab is ever materialized or copied."""
-    b, t = k.shape[:2]
-    if "k_code_pages" in cache:
-        spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
-        kc = vq.encode(vq_params["k"], k.reshape(b, t, -1), spec)
-        vc = vq.encode(vq_params["v"], v.reshape(b, t, -1), spec)
-        return {
-            "k_code_pages": _scatter_pages(cache["k_code_pages"], kc,
-                                           block_table),
-            "v_code_pages": _scatter_pages(cache["v_code_pages"], vc,
-                                           block_table),
-        }
-    return {
-        "k_pages": _scatter_pages(cache["k_pages"], k, block_table),
-        "v_pages": _scatter_pages(cache["v_pages"], v, block_table),
-    }
+                    num_pages=0) -> Dict[str, jax.Array]:
+    """Per-layer cache pytree for this step's backend (``num_pages`` may be
+    a per-page-group dict for the paged layouts)."""
+    return ctx.backend.init_cache(cfg, kind, batch, max_len, dtype,
+                                  page_size=page_size, num_pages=num_pages)
 
 
 def _write_at(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
@@ -297,52 +208,16 @@ def attention_decode(
     ctx: StepCtx,
     kind: str,
     vq_params: Optional[Dict] = None,
-    block_table: Optional[jax.Array] = None,
+    block_tables=None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decode step.  x: (B, 1, D); lengths: (B,) current sequence length
     (the new token's position).  Returns (y, new_cache)."""
     cfg = ctx.cfg
-    b = x.shape[0]
-    window = kind_window(kind, cfg)
-    theta = kind_theta(kind, cfg)
     positions = lengths[:, None]
-    q, k_new, v_new = qkv(params, x, cfg, positions, theta)
-    cap = cfg.attn_logit_softcap
-
-    if "k_pages" in cache or "k_code_pages" in cache:
-        # paged pools: scatter-write the current token's page slot, gather
-        # the request's pages through the block table, then run the same
-        # dense masked decode attention (window layers mask to their span).
-        cache, k_all, v_all = _paged_write_read(cache, k_new, v_new, lengths,
-                                                block_table, cfg, vq_params)
-        pos = jnp.arange(k_all.shape[1])[None, :]
-        valid = pos <= lengths[:, None]
-        if window:
-            valid &= pos >= lengths[:, None] - (window - 1)
-        return _masked_decode_attn(params, q, k_all, v_all, valid, cap), cache
-
-    if window:  # ring cache, replicated over the seq axis (small)
-        s = cache["k"].shape[1]
-        slot = jnp.mod(lengths, s)
-        ck = _write_at(cache["k"], k_new, slot)
-        cv = _write_at(cache["v"], v_new, slot)
-        pos = ring_positions(s, lengths)  # (B, S)
-        valid = (pos >= 0) & (pos >= (lengths[:, None] - window + 1)) & (
-            pos <= lengths[:, None])
-        y = _masked_decode_attn(params, q, ck, cv, valid, cap)
-        return y, {"k": ck, "v": cv}
-
-    if ctx.seq_sharded:
-        y, new_cache = _decode_sharded(params, q, k_new, v_new, cache, lengths,
-                                       ctx, cfg, cap, vq_params)
-        return y, new_cache
-
-    # plain single-device global cache
-    cache, k_all, v_all = _decode_write_and_read(cache, k_new, v_new, lengths,
-                                                 cfg, vq_params)
-    pos = jnp.arange(k_all.shape[1])[None, :]
-    valid = pos <= lengths[:, None]
-    return _masked_decode_attn(params, q, k_all, v_all, valid, cap), cache
+    q, k_new, v_new = qkv(params, x, cfg, positions, kind_theta(kind, cfg))
+    return ctx.backend.decode_attend(
+        params, q, k_new, v_new, cache, lengths, ctx=ctx, kind=kind,
+        vq_params=vq_params, block_tables=block_tables)
 
 
 def _masked_decode_attn(params, q, k_all, v_all, valid, cap) -> jax.Array:
@@ -354,145 +229,3 @@ def _masked_decode_attn(params, q, k_all, v_all, valid, cap) -> jax.Array:
                                       softcap=cap)
     out = o / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
     return out.reshape(b, 1, -1) @ params["wo"]
-
-
-def _paged_write_read(cache, k_new, v_new, lengths, block_table, cfg,
-                      vq_params):
-    """Paged decode: write the new token into its page, return the gathered
-    (B, max_pages * page_size, Hkv, hd) full-precision view (dequantizing
-    code pages on read)."""
-    if block_table is None:
-        raise ValueError("paged cache modes require a block table")
-    vq_pool = "k_code_pages" in cache
-    kp = cache["k_code_pages" if vq_pool else "k_pages"]
-    vp = cache["v_code_pages" if vq_pool else "v_pages"]
-    ps = kp.shape[1]
-    b = k_new.shape[0]
-    max_pages = block_table.shape[1]
-    page_slot = jnp.clip(lengths // ps, 0, max_pages - 1)
-    page_ids = jnp.take_along_axis(block_table, page_slot[:, None],
-                                   axis=1)[:, 0]
-    offs = jnp.mod(lengths, ps)
-    s = max_pages * ps
-    if vq_pool:
-        spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
-        kc = vq.encode(vq_params["k"], k_new.reshape(b, 1, -1), spec)[:, 0]
-        vc = vq.encode(vq_params["v"], v_new.reshape(b, 1, -1), spec)[:, 0]
-        kp = kp.at[page_ids, offs].set(kc.astype(kp.dtype))
-        vp = vp.at[page_ids, offs].set(vc.astype(vp.dtype))
-        k_codes = kp[block_table].reshape(b, s, spec.groups)
-        v_codes = vp[block_table].reshape(b, s, spec.groups)
-        k_all = vq.decode(vq_params["k"], k_codes.astype(jnp.int32), spec
-                          ).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
-        v_all = vq.decode(vq_params["v"], v_codes.astype(jnp.int32), spec
-                          ).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
-        return {"k_code_pages": kp, "v_code_pages": vp}, k_all, v_all
-    kp = kp.at[page_ids, offs].set(k_new[:, 0].astype(kp.dtype))
-    vp = vp.at[page_ids, offs].set(v_new[:, 0].astype(vp.dtype))
-    k_all = kp[block_table].reshape((b, s) + kp.shape[2:])
-    v_all = vp[block_table].reshape((b, s) + vp.shape[2:])
-    return {"k_pages": kp, "v_pages": vp}, k_all, v_all
-
-
-def _decode_write_and_read(cache, k_new, v_new, lengths, cfg, vq_params):
-    """Write the new token and return full-precision K/V views (dequantizing
-    a vq cache on read)."""
-    if "k_codes" in cache:
-        spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
-        b = k_new.shape[0]
-        kc_new = vq.encode(vq_params["k"], k_new.reshape(b, 1, -1), spec)
-        vc_new = vq.encode(vq_params["v"], v_new.reshape(b, 1, -1), spec)
-        ck = _write_at(cache["k_codes"], kc_new.astype(cache["k_codes"].dtype), lengths)
-        cv = _write_at(cache["v_codes"], vc_new.astype(cache["v_codes"].dtype), lengths)
-        s = ck.shape[1]
-        k_all = vq.decode(vq_params["k"], ck.astype(jnp.int32), spec).reshape(
-            b, s, cfg.num_kv_heads, cfg.head_dim)
-        v_all = vq.decode(vq_params["v"], cv.astype(jnp.int32), spec).reshape(
-            b, s, cfg.num_kv_heads, cfg.head_dim)
-        return {"k_codes": ck, "v_codes": cv}, k_all, v_all
-    ck = _write_at(cache["k"], k_new, lengths)
-    cv = _write_at(cache["v"], v_new, lengths)
-    return {"k": ck, "v": cv}, ck, cv
-
-
-def _decode_sharded(params, q, k_new, v_new, cache, lengths, ctx: StepCtx,
-                    cfg, cap, vq_params):
-    """Distributed decode: cache sharded over mesh.seq_axis on the sequence
-    dim; flash-decoding partial-softmax merge (beyond-paper, DESIGN.md §2)."""
-    axis = ctx.mesh.seq_axis
-    bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
-    b = q.shape[0]
-    vq_cache = "k_codes" in cache
-    # the Pallas decode kernel needs whole groups per kv head
-    kernel_ok = (ctx.use_pallas_decode and vq_cache
-                 and cfg.num_kv_heads > 0
-                 and cfg.astra.groups % cfg.num_kv_heads == 0)
-    s_total = (cache["k_codes"] if vq_cache else cache["k"]).shape[1]
-
-    def body(q_l, k_n, v_n, ck, cv, lens, cb_k, cb_v):
-        s_loc = ck.shape[1]
-        off = jax.lax.axis_index(axis) * s_loc
-        local_idx = jnp.clip(lens - off, 0, s_loc - 1)
-        mine = (lens >= off) & (lens < off + s_loc)
-        if vq_cache:
-            spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
-            bl = q_l.shape[0]
-            kc_n = vq.encode({"codebook": cb_k}, k_n.reshape(bl, 1, -1), spec)
-            vc_n = vq.encode({"codebook": cb_v}, v_n.reshape(bl, 1, -1), spec)
-            ck2 = jnp.where(mine[:, None, None],
-                            _write_at(ck, kc_n.astype(ck.dtype), local_idx), ck)
-            cv2 = jnp.where(mine[:, None, None],
-                            _write_at(cv, vc_n.astype(cv.dtype), local_idx), cv)
-            if kernel_ok:
-                # Pallas flash-decode over the coded cache: codes are never
-                # dequantized in HBM (kernels/vq_decode_attn.py)
-                from repro.kernels.ops import decode_attention_partials
-
-                lens_local = lens - off  # negative => nothing valid here
-                m_, l_, acc_ = decode_attention_partials(
-                    q_l[:, 0], ck2.astype(jnp.int32), cv2.astype(jnp.int32),
-                    cb_k, cb_v, lens_local, use_pallas=True)
-                m = m_[..., None]  # (B, H, 1)
-                l = l_[..., None]
-                o = acc_[:, None]  # (B, 1, H, hd)
-                out = merge_partial_stats(m, l, o, axis)
-                return out, ck2, cv2
-            k_shard = vq.decode({"codebook": cb_k}, ck2.astype(jnp.int32), spec
-                                ).reshape(bl, s_loc, cfg.num_kv_heads, cfg.head_dim)
-            v_shard = vq.decode({"codebook": cb_v}, cv2.astype(jnp.int32), spec
-                                ).reshape(bl, s_loc, cfg.num_kv_heads, cfg.head_dim)
-        else:
-            ck2 = jnp.where(mine[:, None, None, None],
-                            _write_at(ck, k_n, local_idx), ck)
-            cv2 = jnp.where(mine[:, None, None, None],
-                            _write_at(cv, v_n, local_idx), cv)
-            k_shard, v_shard = ck2, cv2
-        pos = off + jnp.arange(s_loc)[None, :]
-        valid = pos <= lens[:, None]
-        m, l, o = partial_attention_stats(q_l, k_shard, v_shard,
-                                          k_valid=valid, softcap=cap)
-        out = merge_partial_stats(m, l, o, axis)
-        return out, ck2, cv2
-
-    qspec = P(bspec, None, None, None)
-    cspec4 = P(bspec, axis, None, None)
-    cspec3 = P(bspec, axis, None)
-    if vq_cache:
-        in_specs = (qspec, qspec, qspec, cspec3, cspec3, P(bspec), P(), P())
-        out_specs = (qspec, cspec3, cspec3)
-        cb_k = vq_params["k"]["codebook"]
-        cb_v = vq_params["v"]["codebook"]
-        ck_in, cv_in = cache["k_codes"], cache["v_codes"]
-    else:
-        in_specs = (qspec, qspec, qspec, cspec4, cspec4, P(bspec), P(), P())
-        out_specs = (qspec, cspec4, cspec4)
-        cb_k = cb_v = jnp.zeros((1,), jnp.float32)
-        ck_in, cv_in = cache["k"], cache["v"]
-
-    out, ck2, cv2 = shard_map(
-        body, mesh=ctx.mesh.mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False)(q, k_new, v_new, ck_in, cv_in, lengths, cb_k, cb_v)
-    y = out.reshape(b, 1, -1) @ params["wo"]
-    new_cache = ({"k_codes": ck2, "v_codes": cv2} if vq_cache
-                 else {"k": ck2, "v": cv2})
-    return y, new_cache

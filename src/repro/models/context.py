@@ -20,12 +20,13 @@ class StepCtx:
     astra_mode: str = "sim"
     train: bool = False
     num_sim_shards: int = 4
-    # KV-cache storage:
+    # KV-cache storage mode (resolved to a serving.cache_backend backend
+    # via the ``backend`` property — layers never branch on the string):
     #   fp       — contiguous full-precision slab per sequence
     #   vq       — codes-only slab (Appendix G analogue)
     #   paged    — block-table page pools, fp value pages
     #   paged_vq — block-table page pools, uint8/16 VQ code pages
-    # Paged modes need a block table (serving.kv_cache.PagedKVCache) and are
+    # Paged modes need block tables (serving.kv_cache.PagedKVCache) and are
     # single-host (seq-sharded decode keeps the fp/vq shard cache).
     cache_mode: str = "fp"
     # rematerialise layer activations in the backward pass (big-model train)
@@ -37,6 +38,15 @@ class StepCtx:
     # route the sharded vq-cache decode through the Pallas flash-decode
     # kernel (kernels/vq_decode_attn.py); interpret-mode on CPU
     use_pallas_decode: bool = False
+
+    @property
+    def backend(self):
+        """The CacheBackend implementing this step's KV-cache layout
+        (singleton per (cache_mode, sharded-ness); import is deferred so
+        models/ does not import serving/ at module load)."""
+        from repro.serving.cache_backend import get_backend
+
+        return get_backend(self.cache_mode, seq_sharded=self.seq_sharded)
 
     @property
     def astra_on(self) -> bool:

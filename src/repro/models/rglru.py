@@ -62,7 +62,11 @@ def _gates(params, x):
 
 def rglru_scan(params, x: jax.Array, init_state: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """x: (B, T, W). Returns (h (B,T,W), final_state (B,W), total_decay (B,W))."""
+    """x: (B, T, W). Returns (h (B,T,W) in x.dtype, per-position f32 states
+    (B,T,W), total_decay (B,W)).  The f32 states are what a decode cache
+    must carry (states[:, -1] is the old final-state return) — gathering
+    from the downcast ``h`` instead would round the recurrence through the
+    activation dtype at the prefill->decode handoff."""
     a, b_in = _gates(params, x)
 
     def comb(e1, e2):
@@ -74,7 +78,7 @@ def rglru_scan(params, x: jax.Array, init_state: Optional[jax.Array] = None
     if init_state is not None:
         h_s = h_s + a_s * init_state[:, None, :].astype(jnp.float32)
     total_a = a_s[:, -1]
-    return h_s.astype(x.dtype), h_s[:, -1], total_a
+    return h_s.astype(x.dtype), h_s, total_a
 
 
 def rglru_step(params, x_t: jax.Array, state: jax.Array
@@ -91,6 +95,7 @@ def rg_block_forward(
     *,
     ctx: StepCtx,
     cache: Optional[Dict] = None,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Griffin recurrent block: conv -> RG-LRU on one branch, GeLU gate on
     the other."""
@@ -112,8 +117,8 @@ def rg_block_forward(
             first = jax.lax.axis_index(axis) == 0
             prev = jnp.where(first, jnp.zeros_like(prev), prev)
             xc = causal_conv(xr_l, params["conv_w"], params["conv_b"], prev)
-            h0, fin, total_a = rglru_scan(params, xc, None)
-            a_in, s_in = distributed_carry(total_a, fin.astype(jnp.float32), axis)
+            h0, states, total_a = rglru_scan(params, xc, None)
+            a_in, s_in = distributed_carry(total_a, states[:, -1], axis)
             del a_in
             # propagate incoming state through the local positions
             a, _ = _gates(params, xc)
@@ -128,13 +133,31 @@ def rg_block_forward(
     prev_conv = cache["conv"] if cache else None
     xc = causal_conv(xr, params["conv_w"], params["conv_b"], prev_conv)
     init_state = cache["state"] if cache else None
-    h, fin, _ = rglru_scan(params, xc, init_state)
+    h, states, _ = rglru_scan(params, xc, init_state)
     y = (h * gate) @ params["w_out"]
     new_cache = None
     if cache is not None:
         width = cfg.conv_width
-        new_cache = {"conv": xr[:, -(width - 1):, :].astype(cache["conv"].dtype),
-                     "state": fin.astype(jnp.float32)}
+        if lengths is None:
+            conv_tail = xr[:, -(width - 1):, :]
+            state = states[:, -1]
+        else:
+            # the recurrence is position-less, so the serving prefill must
+            # carry the state at each row's *real* prompt end — folding the
+            # buffer tail would pollute the state with right-padding junk
+            # whenever a row is shorter than the padded buffer.
+            t = xr.shape[1]
+            last = jnp.clip(lengths - 1, 0, t - 1)
+            state = jnp.take_along_axis(
+                states, last[:, None, None], axis=1)[:, 0]
+            pos = lengths[:, None] - (width - 1) + jnp.arange(width - 1)[None]
+            conv_tail = jnp.where(
+                (pos >= 0)[..., None],
+                jnp.take_along_axis(xr, jnp.clip(pos, 0, t - 1)[..., None],
+                                    axis=1),
+                0)
+        new_cache = {"conv": conv_tail.astype(cache["conv"].dtype),
+                     "state": state.astype(jnp.float32)}
     return y, new_cache
 
 

@@ -104,7 +104,7 @@ def init_block_navq(cfg, kind: str) -> Dict:
 
 def init_block_cache(cfg, kind: str, batch: int, max_len: int, ctx: StepCtx,
                      dtype=jnp.bfloat16, *, page_size: int = 0,
-                     num_pages: int = 0) -> Dict:
+                     num_pages=0) -> Dict:
     if kind in ATTN_KINDS:
         return attn.init_attn_cache(cfg, kind, batch, max_len, ctx, dtype,
                                     page_size=page_size, num_pages=num_pages)
@@ -131,7 +131,7 @@ def block_forward(
     navq_stats: Optional[Dict],
     cache: Optional[Dict],
     lengths: Optional[jax.Array],
-    block_table: Optional[jax.Array] = None,
+    block_tables=None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array], Dict, Optional[Dict]]:
     cfg = ctx.cfg
     aux = {"commit": jnp.zeros((), jnp.float32),
@@ -148,12 +148,13 @@ def block_forward(
         if ctx.mode == "decode":
             y, new_cache = attn.attention_decode(
                 p["attn"], h, cache, lengths, ctx=ctx, kind=kind,
-                vq_params=p.get("vq"), block_table=block_table)
+                vq_params=p.get("vq"), block_tables=block_tables)
         else:
             y, a, new_cache = attn.attention_forward(
                 p["attn"], h, ctx=ctx, kind=kind, causal=causal,
                 vq_params=p.get("vq"), navq_stats=navq_stats or None,
-                rng=rng, cache=cache, block_table=block_table)
+                rng=rng, cache=cache, block_tables=block_tables,
+                lengths=lengths)
             aux["commit"] = a["commit"]
             if navq_stats:
                 new_navq = {
@@ -180,7 +181,8 @@ def block_forward(
             y, new_cache = rglru.rg_block_decode(p["rec"], h, cache, ctx=ctx)
         else:
             y, new_cache = rglru.rg_block_forward(p["rec"], h, ctx=ctx,
-                                                  cache=cache)
+                                                  cache=cache,
+                                                  lengths=lengths)
         x = x + y.astype(x.dtype)
         h2 = apply_norm(p["norm2"], x, cfg.norm)
         y2 = apply_mlp(p["mlp"], h2, cfg.activation)
@@ -256,7 +258,10 @@ def init_lm_navq(cfg) -> List[Dict]:
 
 def init_lm_cache(cfg, batch: int, max_len: int, ctx: StepCtx,
                   dtype=jnp.bfloat16, *, page_size: int = 0,
-                  num_pages: int = 0) -> List[Dict]:
+                  num_pages=0) -> List[Dict]:
+    """``num_pages`` is an int for a single shared pool size or a
+    per-page-group dict (``serving.kv_cache.PagedKVCache.num_pages_by_group``)
+    so windowed layers get their capped pools."""
     out = []
     for kinds, reps in stages(cfg):
         sub = {}
@@ -299,7 +304,7 @@ def run_stages(
     navq_state: Optional[List[Dict]],
     caches: Optional[List[Dict]],
     lengths: Optional[jax.Array],
-    block_tables: Optional[jax.Array] = None,
+    block_tables=None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array], List[Dict], Optional[List[Dict]]]:
     commit = jnp.zeros((), jnp.float32)
     moe_aux = jnp.zeros((), jnp.float32)
@@ -322,7 +327,7 @@ def run_stages(
                 xx, aux, n_new, c_new = block_forward(
                     p_l[f"sub{j}"], xx, ctx=ctx, kind=kind, causal=causal,
                     rng=jax.random.fold_in(rng_l, j), navq_stats=nst,
-                    cache=cst, lengths=lengths, block_table=block_tables)
+                    cache=cst, lengths=lengths, block_tables=block_tables)
                 cm = cm + aux["commit"]
                 ma = ma + aux["moe_aux"]
                 if n_new:
@@ -351,7 +356,7 @@ def lm_forward(
     navq_state: Optional[List[Dict]] = None,
     caches: Optional[List[Dict]] = None,
     lengths: Optional[jax.Array] = None,
-    block_tables: Optional[jax.Array] = None,
+    block_tables=None,
 ) -> Tuple[jax.Array, Dict, List[Dict], Optional[List[Dict]]]:
     """Returns (logits, aux, new_navq_state, new_caches)."""
     cfg = ctx.cfg
@@ -375,6 +380,60 @@ def lm_forward(
     return logits, aux, new_navq, new_caches
 
 
+def _dim_axes(mesh, dim_size: int, candidates=("data", "model")):
+    """The mesh-axis group (of ``candidates`` present in the mesh) that can
+    shard a dim of ``dim_size``; () => replicate."""
+    axes = tuple(a for a in candidates if a in mesh.shape)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return axes if axes and dim_size % n == 0 else ()
+
+
+def _constrain(x, mesh, spec):
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _decode_embed(params: Dict, token: jax.Array, lengths: jax.Array,
+                  ctx: StepCtx) -> jax.Array:
+    """Decode-step input embeddings (B, 1, D).
+
+    Single host: a plain gather.  Under a mesh the embedding table is
+    FSDP-sharded, and GSPMD used to lower the 1-token gather with an
+    "Involuntary full rematerialization" (jax 0.4.x dry-run).  The one-hot
+    contraction keeps the sharded table local (the dot's output inherits
+    the table's d_model sharding), and the two-hop reshard — first onto the
+    model axis, then replicated — walks the tiny (B, 1, D) activation into
+    the batch-sharded layout the decoder scan consumes without the
+    partitioner ever touching the table.
+    """
+    cfg = ctx.cfg
+    if ctx.mesh.mesh is None:
+        x = jnp.take(params["embed"], token, axis=0)
+        if "pos_embed" in params:
+            x = x + jnp.take(params["pos_embed"],
+                             jnp.clip(lengths, 0, cfg.max_seq_len - 1),
+                             axis=0)[:, None]
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh.mesh
+    emb = params["embed"]
+    oh = jax.nn.one_hot(token, cfg.vocab_size, dtype=emb.dtype)
+    x = oh @ emb
+    if "pos_embed" in params:
+        pe = params["pos_embed"]
+        oh_p = jax.nn.one_hot(jnp.clip(lengths, 0, cfg.max_seq_len - 1),
+                              pe.shape[0], dtype=pe.dtype)
+        x = x + (oh_p @ pe)[:, None]
+    bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+    hop = _dim_axes(mesh, cfg.d_model, ("model",))
+    x = _constrain(x, mesh, P(bspec, None, hop or None))
+    return _constrain(x, mesh, P(bspec, None, None))
+
+
 def lm_decode_step(
     params: Dict,
     token: jax.Array,  # (B, 1)
@@ -382,21 +441,32 @@ def lm_decode_step(
     lengths: jax.Array,  # (B,)
     *,
     ctx: StepCtx,
-    block_tables: Optional[jax.Array] = None,
+    block_tables=None,
 ) -> Tuple[jax.Array, List[Dict]]:
     cfg = ctx.cfg
-    x = jnp.take(params["embed"], token, axis=0)
-    if "pos_embed" in params:
-        x = x + jnp.take(params["pos_embed"],
-                         jnp.clip(lengths, 0, cfg.max_seq_len - 1), axis=0)[:, None]
-    x = x.astype(_adtype(cfg, ctx))
+    x = _decode_embed(params, token, lengths, ctx).astype(_adtype(cfg, ctx))
     x, aux, _, new_caches = run_stages(
         params["stages"], x, ctx=ctx, cfg=cfg, causal=True, rng=None,
         navq_state=None, caches=caches, lengths=lengths,
         block_tables=block_tables)
     x = apply_norm(params["final_norm"], x, cfg.norm)
     head = params["lm_head"] if "lm_head" in params else params["embed"].T
-    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    if ctx.mesh.mesh is not None:
+        # match x's d_model sharding to the head's (FSDP shards the head on
+        # d_model): the logits matmul then runs as local partial dots plus
+        # one tiny (B, 1, V) reduce, instead of materializing the full
+        # (D, V) head per device — a table-sized all-gather the dry-run
+        # decode assert forbids.
+        from jax.sharding import PartitionSpec as P
+
+        mesh = ctx.mesh.mesh
+        bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+        d_axes = _dim_axes(mesh, cfg.d_model)
+        x = _constrain(x, mesh, P(None, None, d_axes or None))
+        logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+        logits = _constrain(logits, mesh, P(bspec, None, None))
+    else:
+        logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
     logits = softcap(logits, cfg.final_logit_softcap)
     return logits, new_caches
 

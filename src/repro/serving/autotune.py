@@ -1,0 +1,96 @@
+"""Decode-chunk autotune: sweep + persisted winners (results/autotune/).
+
+The decode chunk size trades host-sync frequency against wasted tail work
+(a retired row keeps burning flops until its chunk ends), and the best
+value depends on (arch, batch).  ``sweep_decode_chunk`` times real
+generates through the serving engines — i.e. through the ``CacheBackend``
+interface, so every cache layout is sweepable — and persists the winner as
+``results/autotune/decode_chunk_<arch>.json``.  Both engines read the
+persisted value at construction when ``decode_chunk`` is not given
+(``load_decode_chunk``), falling back to their static defaults.
+
+The CLI entry point is ``python -m repro.launch.autotune --decode-chunk``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional, Sequence
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "autotune")
+
+
+def _path(arch: str) -> str:
+    return os.path.join(RESULTS_DIR, f"decode_chunk_{arch}.json")
+
+
+def load_decode_chunk(arch: str, batch: Optional[int] = None) -> Optional[int]:
+    """Persisted winner for (arch, batch): the exact-batch entry when one
+    exists, else the arch-wide default; None when nothing was tuned."""
+    try:
+        with open(_path(arch)) as f:
+            rec = json.load(f)
+    except (OSError, ValueError):
+        return None
+    per_batch = rec.get("per_batch", {})
+    if batch is not None and str(int(batch)) in per_batch:
+        return int(per_batch[str(int(batch))]["decode_chunk"])
+    return int(rec["default"]) if rec.get("default") else None
+
+
+def save_decode_chunk(arch: str, batch: int, decode_chunk: int,
+                      timings: Optional[Dict[int, float]] = None) -> str:
+    """Record a sweep winner; the most recent sweep also becomes the
+    arch-wide default that batch-agnostic engines read."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = _path(arch)
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError):
+        rec = {"arch": arch, "per_batch": {}}
+    rec.setdefault("per_batch", {})[str(int(batch))] = {
+        "decode_chunk": int(decode_chunk),
+        "timings_s": {str(c): float(t) for c, t in (timings or {}).items()},
+    }
+    rec["default"] = int(decode_chunk)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def sweep_decode_chunk(cfg, params, *, batch: int = 4,
+                       cache_mode: str = "fp", max_len: int = 128,
+                       prompt_len: int = 8, max_new_tokens: int = 32,
+                       candidates: Sequence[int] = (1, 2, 4, 8, 16),
+                       page_size: int = 16, repeats: int = 2, seed: int = 0,
+                       persist: bool = True) -> Dict:
+    """Time ``ServingEngine.generate`` for each candidate chunk size on one
+    (arch, batch) and persist the fastest.  The first generate per candidate
+    is a discarded compile warmup; the engine's compile-once behaviour means
+    the timed runs measure steady-state decode only."""
+    import numpy as np
+
+    from repro.serving.engine import ServingEngine
+
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(1, cfg.vocab_size, size=prompt_len).tolist()
+               for _ in range(batch)]
+    timings: Dict[int, float] = {}
+    for chunk in candidates:
+        eng = ServingEngine(cfg, params, max_len=max_len, astra_mode="off",
+                            cache_mode=cache_mode, decode_chunk=int(chunk),
+                            page_size=page_size)
+        eng.generate(prompts, max_new_tokens=max_new_tokens)  # compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            eng.generate(prompts, max_new_tokens=max_new_tokens, seed=seed)
+        timings[int(chunk)] = (time.perf_counter() - t0) / repeats
+    best = min(timings, key=timings.get)
+    out = {"arch": cfg.name, "batch": int(batch), "cache_mode": cache_mode,
+           "best_decode_chunk": best, "timings_s": timings}
+    if persist:
+        out["path"] = save_decode_chunk(cfg.name, batch, best, timings)
+    return out

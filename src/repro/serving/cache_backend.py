@@ -1,0 +1,603 @@
+"""CacheBackend: one interface in front of every KV-cache layout.
+
+The four cache modes (fp / vq slabs, paged / paged_vq page pools) plus the
+sequence-sharded shard cache used to be string-dispatched at five call
+sites (attention init/prefill/decode, both engines, the scheduler, the
+launcher).  This module is now the single owner of that dispatch: a
+``CacheBackend`` implements
+
+  * ``init_cache``     — per-layer cache pytree for one attention kind,
+  * ``prefill_write``  — write prompt K/V into that cache (traced),
+  * ``decode_attend``  — one decode step: write the new token, attend over
+                         the cached history, return (y, new_cache) (traced),
+  * ``make_state``     — host-side engine handle (page allocator + block
+                         tables for paged layouts, a trivial slab handle
+                         otherwise),
+  * ``advance``        — host-side capacity bookkeeping between chunks
+                         (page-grant growth; no-op for slabs),
+  * ``bytes_report``   — analytic memory accounting for this layout,
+  * ``donate_argnums`` — which jitted-step arguments may be donated so the
+                         compiled update is in-place (vLLM/TensorRT-LLM
+                         style); filtered to () on platforms where XLA
+                         cannot alias (CPU) so donation stays a no-op there.
+
+Everything outside this file talks to ``ctx.backend`` (resolved from
+``StepCtx.cache_mode``); a tokenize-based grep test forbids ``cache_mode``
+string dispatch anywhere else, so adding a cache layout is one new class
+here, not five call-site edits.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import vq
+from repro.core.mixed_attention import (
+    merge_partial_stats,
+    partial_attention_stats,
+)
+from repro.models import attention as attn
+from repro.serving import kv_cache as kvc
+
+CACHE_MODES = ("fp", "vq", "paged", "paged_vq")
+
+
+def donation_supported(platform: Optional[str] = None) -> bool:
+    """True when XLA can alias donated buffers on this platform (TPU/GPU).
+    CPU rejects donation (warns and copies), so we never request it there."""
+    if platform is None:
+        platform = jax.default_backend()
+    return platform != "cpu"
+
+
+# ---------------------------------------------------------------------------
+# Shared traced helpers
+# ---------------------------------------------------------------------------
+
+
+def _ring_decode(params, q, k_new, v_new, cache, lengths, window, cap):
+    """Dense ring cache decode (windowed layers): write slot ``l % S``,
+    mask to the last ``window`` positions."""
+    s = cache["k"].shape[1]
+    slot = jnp.mod(lengths, s)
+    ck = attn._write_at(cache["k"], k_new, slot)
+    cv = attn._write_at(cache["v"], v_new, slot)
+    pos = attn.ring_positions(s, lengths)  # (B, S)
+    valid = (pos >= 0) & (pos >= (lengths[:, None] - window + 1)) & (
+        pos <= lengths[:, None])
+    y = attn._masked_decode_attn(params, q, ck, cv, valid, cap)
+    return y, {"k": ck, "v": cv}
+
+
+def _slab_prefill_fp(cache, k, v, lengths=None):
+    """Positions 0..T-1 into a dense slab.
+
+    When the prompt buffer overflows a ring (SWA) slab, each ring slot j
+    must hold the *real* position p ≡ j (mod S) closest below ``lengths``
+    — naively keeping the last S buffer positions would fill the ring with
+    right-padding junk whenever the per-row prompt is shorter than the
+    padded buffer (the scheduler always pads to max_len).  Slots beyond a
+    row's prompt end up with clipped junk that the decode validity mask
+    (ring_positions) already rejects."""
+    s = cache["k"].shape[1]
+    t = k.shape[1]
+    if t == s:
+        return {"k": k.astype(cache["k"].dtype),
+                "v": v.astype(cache["v"].dtype)}
+    if t > s:  # ring overflow
+        if lengths is None:  # no row lengths: buffer tail == prompt tail
+            return {"k": k[:, t - s:].astype(cache["k"].dtype),
+                    "v": v[:, t - s:].astype(cache["v"].dtype)}
+        # ring slot j must hold the greatest real position ≡ j (mod S)
+        # below `lengths` — exactly the decode-side slot->position map
+        # evaluated at the last written position.
+        p = jnp.clip(attn.ring_positions(s, lengths - 1), 0, t - 1)  # (B, S)
+        idx = p[:, :, None, None]
+        return {"k": jnp.take_along_axis(k, idx, axis=1).astype(
+                    cache["k"].dtype),
+                "v": jnp.take_along_axis(v, idx, axis=1).astype(
+                    cache["v"].dtype)}
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), 0, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), 0, 1)
+    return {"k": ck, "v": cv}
+
+
+def _encode_pair(k, v, cfg, vq_params):
+    spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
+    b, t = k.shape[0], k.shape[1]
+    kc = vq.encode(vq_params["k"], k.reshape(b, t, -1), spec)
+    vc = vq.encode(vq_params["v"], v.reshape(b, t, -1), spec)
+    return kc, vc, spec
+
+
+def _decode_codes(codes, cfg, vq_params, which):
+    spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups, cfg.astra.codebook_size)
+    b, s = codes.shape[:2]
+    return vq.decode(vq_params[which], codes.astype(jnp.int32), spec
+                     ).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+
+
+def _table_for(block_tables, kind: str, cfg) -> jax.Array:
+    if block_tables is None:
+        raise ValueError("paged cache modes require block tables")
+    if isinstance(block_tables, dict):
+        return block_tables[kvc.page_group_for(kind, cfg)]
+    return block_tables  # single pre-selected table
+
+
+def _scatter_pages(pool: jax.Array, vals: jax.Array, table: jax.Array,
+                   lengths: Optional[jax.Array]) -> jax.Array:
+    """Write ``vals`` (B, T, ...) into ``pool`` (N, ps, ...) through a
+    block table whose span may be a ring (capped window tables).
+
+    Fast path (prompt buffer fits the ring, the only case for full-span
+    global tables): page ``i`` lands on table entry ``i`` wholesale; pages
+    holding no real token (page start >= ``lengths``) are routed to the
+    scratch page 0 so prompt-padding junk can never clobber a live slot.
+
+    Ring-overflow path (T > span * ps): duplicate page destinations would
+    make a page-wise scatter order-dependent, and a straddling page would
+    mix old and new positions — so write token-granular instead: ring slot
+    ``j`` gets the greatest real position ≡ j (mod ring) below ``lengths``,
+    exactly the dense ring slab's semantics (slots with no real source go
+    to scratch; the decode validity mask rejects them anyway)."""
+    ps = pool.shape[1]
+    b, t = vals.shape[:2]
+    n_pages = -(-t // ps)
+    span = table.shape[1]
+    if n_pages > span:  # ring overflow: token-granular keep-latest
+        s = span * ps
+        lens = lengths if lengths is not None else jnp.full((b,), t)
+        # slot->source-position map shared with the decode validity mask
+        p = attn.ring_positions(s, lens - 1)  # (B, s), <0 = no real source
+        real = p >= 0
+        src = jnp.clip(p, 0, t - 1)[(...,) + (None,) * (vals.ndim - 2)]
+        gathered = jnp.take_along_axis(vals, src, axis=1)  # (B, s, ...)
+        dest = jnp.where(real, table[:, np.arange(s) // ps], 0)
+        offs = jnp.broadcast_to(np.arange(s) % ps, (b, s))
+        return pool.at[dest.reshape(-1), offs.reshape(-1)].set(
+            gathered.reshape((b * s,) + gathered.shape[2:]).astype(
+                pool.dtype))
+    pad = n_pages * ps - t
+    if pad:
+        vals = jnp.pad(vals, [(0, 0), (0, pad)] + [(0, 0)] * (vals.ndim - 2))
+    vals = vals.reshape((b * n_pages, ps) + vals.shape[2:])
+    dest = table[:, np.arange(n_pages)]  # (B, n_pages)
+    if lengths is not None:
+        real = (np.arange(n_pages) * ps)[None, :] < lengths[:, None]
+        dest = jnp.where(real, dest, 0)
+    return pool.at[dest.reshape(-1)].set(vals.astype(pool.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Backend protocol + concrete layouts
+# ---------------------------------------------------------------------------
+
+
+class CacheBackend:
+    """Base class: engine-level behaviour shared by every layout."""
+
+    name = "?"
+    paged = False      # block-table page pools (vs contiguous slabs)
+    vq_codes = False   # global layers store VQ codes (Appendix G)
+    sharded = False    # decode runs the seq-sharded shard_map path
+
+    # -- layer level (jit-traced) -------------------------------------------
+    def init_cache(self, cfg, kind: str, batch: int, max_len: int, dtype, *,
+                   page_size: int = 0, num_pages=0) -> Dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def prefill_write(self, cache, k, v, *, ctx, kind: str, vq_params=None,
+                      block_tables=None, lengths=None) -> Dict:
+        raise NotImplementedError
+
+    def decode_attend(self, params, q, k_new, v_new, cache, lengths, *, ctx,
+                      kind: str, vq_params=None,
+                      block_tables=None) -> Tuple[jax.Array, Dict]:
+        raise NotImplementedError
+
+    # -- engine level (host) ------------------------------------------------
+    def make_state(self, cfg, *, slots: int, max_len: int, ctx, dtype=None,
+                   page_size: int = 16, num_pages: Optional[int] = None):
+        return kvc.SlabCache(cfg, slots=slots, max_len=max_len, ctx=ctx,
+                             dtype=dtype)
+
+    def advance(self, state, slot, num_tokens: int) -> bool:
+        """Grow ``slot``'s cache grant to cover ``num_tokens`` total tokens;
+        False (state unchanged) on capacity pressure.  Slabs only check the
+        static bound; paged layouts allocate pages in every group."""
+        return state.advance(slot, num_tokens)
+
+    def release(self, state, slot) -> int:
+        """Retire a request's cache grant; returns the pages freed."""
+        return state.free(slot)
+
+    def donate_argnums(self, argnums: Tuple[int, ...],
+                       platform: Optional[str] = None) -> Tuple[int, ...]:
+        """Filter a jitted step's cache argnums to what may be donated: all
+        of them when the platform aliases donated buffers, none on CPU."""
+        return tuple(argnums) if donation_supported(platform) else ()
+
+    def bytes_report(self, cfg, *, max_len: int, slots: int = 1,
+                     page_size: int = 16, num_pages: Optional[int] = None,
+                     dtype_bytes: int = 4) -> Dict[str, Any]:
+        return {
+            "mode": self.name,
+            "cache_bytes": kvc.slab_cache_bytes(
+                cfg, max_len=max_len, slots=slots, vq_codes=self.vq_codes,
+                dtype_bytes=dtype_bytes),
+        }
+
+
+class FPSlabBackend(CacheBackend):
+    """Contiguous full-precision slab: (B, S, Hkv, hd) per layer; windowed
+    layers keep a (B, min(W, S)) ring."""
+
+    name = "fp"
+
+    def init_cache(self, cfg, kind, batch, max_len, dtype, *, page_size=0,
+                   num_pages=0):
+        window = attn.kind_window(kind, cfg)
+        s = min(window, max_len) if window else max_len
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        return {"k": jnp.zeros((batch, s, hkv, hd), dtype),
+                "v": jnp.zeros((batch, s, hkv, hd), dtype)}
+
+    def prefill_write(self, cache, k, v, *, ctx, kind, vq_params=None,
+                      block_tables=None, lengths=None):
+        return _slab_prefill_fp(cache, k, v, lengths)
+
+    def decode_attend(self, params, q, k_new, v_new, cache, lengths, *, ctx,
+                      kind, vq_params=None, block_tables=None):
+        cfg = ctx.cfg
+        cap = cfg.attn_logit_softcap
+        window = attn.kind_window(kind, cfg)
+        if window:
+            return _ring_decode(params, q, k_new, v_new, cache, lengths,
+                                window, cap)
+        ck = attn._write_at(cache["k"], k_new, lengths)
+        cv = attn._write_at(cache["v"], v_new, lengths)
+        pos = jnp.arange(ck.shape[1])[None, :]
+        valid = pos <= lengths[:, None]
+        y = attn._masked_decode_attn(params, q, ck, cv, valid, cap)
+        return y, {"k": ck, "v": cv}
+
+
+class VQSlabBackend(CacheBackend):
+    """Codes-only slab (Appendix G): global layers hold (B, S, G) VQ codes,
+    dequantized on read; windowed layers stay full-precision rings exactly
+    like the fp slab (their footprint is already bounded by W)."""
+
+    name = "vq"
+    vq_codes = True
+
+    def init_cache(self, cfg, kind, batch, max_len, dtype, *, page_size=0,
+                   num_pages=0):
+        window = attn.kind_window(kind, cfg)
+        if window:
+            return FPSlabBackend.init_cache(self, cfg, kind, batch, max_len,
+                                            dtype)
+        cd = vq.code_dtype(cfg.astra.codebook_size)
+        g = cfg.astra.groups
+        return {"k_codes": jnp.zeros((batch, max_len, g), cd),
+                "v_codes": jnp.zeros((batch, max_len, g), cd)}
+
+    def prefill_write(self, cache, k, v, *, ctx, kind, vq_params=None,
+                      block_tables=None, lengths=None):
+        if "k_codes" not in cache:  # windowed fp ring
+            return _slab_prefill_fp(cache, k, v, lengths)
+        kc, vc, _ = _encode_pair(k, v, ctx.cfg, vq_params)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_codes"], kc.astype(cache["k_codes"].dtype), 0, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_codes"], vc.astype(cache["v_codes"].dtype), 0, 1)
+        return {"k_codes": ck, "v_codes": cv}
+
+    def decode_attend(self, params, q, k_new, v_new, cache, lengths, *, ctx,
+                      kind, vq_params=None, block_tables=None):
+        cfg = ctx.cfg
+        cap = cfg.attn_logit_softcap
+        window = attn.kind_window(kind, cfg)
+        if window:
+            return _ring_decode(params, q, k_new, v_new, cache, lengths,
+                                window, cap)
+        b = k_new.shape[0]
+        kc, vc, _ = _encode_pair(k_new, v_new, cfg, vq_params)
+        ck = attn._write_at(cache["k_codes"],
+                            kc.astype(cache["k_codes"].dtype), lengths)
+        cv = attn._write_at(cache["v_codes"],
+                            vc.astype(cache["v_codes"].dtype), lengths)
+        k_all = _decode_codes(ck, cfg, vq_params, "k")
+        v_all = _decode_codes(cv, cfg, vq_params, "v")
+        pos = jnp.arange(k_all.shape[1])[None, :]
+        valid = pos <= lengths[:, None]
+        y = attn._masked_decode_attn(params, q, k_all, v_all, valid, cap)
+        return y, {"k_codes": ck, "v_codes": cv}
+
+
+class PagedBackend(CacheBackend):
+    """Block-table page pools, fp value pages.  Global layers address a
+    full-span table; windowed layers address the capped "window" table as a
+    page ring over the last ``span * page_size`` positions."""
+
+    name = "paged"
+    paged = True
+
+    def _group_num_pages(self, num_pages, kind, cfg) -> int:
+        if isinstance(num_pages, dict):
+            return int(num_pages[kvc.page_group_for(kind, cfg)])
+        return int(num_pages)
+
+    def init_cache(self, cfg, kind, batch, max_len, dtype, *, page_size=0,
+                   num_pages=0):
+        n = self._group_num_pages(num_pages, kind, cfg) if num_pages else 0
+        if page_size <= 0 or n <= 0:
+            raise ValueError("paged cache modes need page_size/num_pages "
+                             "(build caches via serving.kv_cache.PagedKVCache)")
+        window = attn.kind_window(kind, cfg)
+        if self.vq_codes and not window:
+            g = cfg.astra.groups
+            cd = vq.code_dtype(cfg.astra.codebook_size)
+            return {"k_code_pages": jnp.zeros((n, page_size, g), cd),
+                    "v_code_pages": jnp.zeros((n, page_size, g), cd)}
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        return {"k_pages": jnp.zeros((n, page_size, hkv, hd), dtype),
+                "v_pages": jnp.zeros((n, page_size, hkv, hd), dtype)}
+
+    def prefill_write(self, cache, k, v, *, ctx, kind, vq_params=None,
+                      block_tables=None, lengths=None):
+        """Prompt K/V (or codes) straight into the page pools — no
+        (B, max_len) slab is ever materialized or copied."""
+        cfg = ctx.cfg
+        table = _table_for(block_tables, kind, cfg)
+        if "k_code_pages" in cache:
+            kc, vc, _ = _encode_pair(k, v, cfg, vq_params)
+            return {
+                "k_code_pages": _scatter_pages(cache["k_code_pages"], kc,
+                                               table, lengths),
+                "v_code_pages": _scatter_pages(cache["v_code_pages"], vc,
+                                               table, lengths),
+            }
+        return {
+            "k_pages": _scatter_pages(cache["k_pages"], k, table, lengths),
+            "v_pages": _scatter_pages(cache["v_pages"], v, table, lengths),
+        }
+
+    def decode_attend(self, params, q, k_new, v_new, cache, lengths, *, ctx,
+                      kind, vq_params=None, block_tables=None):
+        """Scatter-write the token's page slot (ring over the table span),
+        gather the request's pages through the block table, then run the
+        same dense masked decode attention as every other layout."""
+        cfg = ctx.cfg
+        cap = cfg.attn_logit_softcap
+        window = attn.kind_window(kind, cfg)
+        table = _table_for(block_tables, kind, cfg)
+        vq_pool = "k_code_pages" in cache
+        kp = cache["k_code_pages" if vq_pool else "k_pages"]
+        vp = cache["v_code_pages" if vq_pool else "v_pages"]
+        ps = kp.shape[1]
+        b = k_new.shape[0]
+        s = table.shape[1] * ps  # ring length (== max_len for global tables)
+        flat = jnp.mod(lengths, s)
+        page_ids = jnp.take_along_axis(table, (flat // ps)[:, None],
+                                       axis=1)[:, 0]
+        offs = jnp.mod(flat, ps)
+        if vq_pool:
+            kc, vc, spec = _encode_pair(k_new, v_new, cfg, vq_params)
+            kp = kp.at[page_ids, offs].set(kc[:, 0].astype(kp.dtype))
+            vp = vp.at[page_ids, offs].set(vc[:, 0].astype(vp.dtype))
+            k_all = _decode_codes(kp[table].reshape(b, s, spec.groups),
+                                  cfg, vq_params, "k")
+            v_all = _decode_codes(vp[table].reshape(b, s, spec.groups),
+                                  cfg, vq_params, "v")
+            new_cache = {"k_code_pages": kp, "v_code_pages": vp}
+        else:
+            kp = kp.at[page_ids, offs].set(k_new[:, 0].astype(kp.dtype))
+            vp = vp.at[page_ids, offs].set(v_new[:, 0].astype(vp.dtype))
+            k_all = kp[table].reshape((b, s) + kp.shape[2:])
+            v_all = vp[table].reshape((b, s) + vp.shape[2:])
+            new_cache = {"k_pages": kp, "v_pages": vp}
+        pos = attn.ring_positions(s, lengths)  # (B, s)
+        valid = (pos >= 0) & (pos <= lengths[:, None])
+        if window:
+            valid &= pos >= lengths[:, None] - (window - 1)
+        y = attn._masked_decode_attn(params, q, k_all, v_all, valid, cap)
+        return y, new_cache
+
+    def make_state(self, cfg, *, slots, max_len, ctx, dtype=None,
+                   page_size=16, num_pages=None):
+        return kvc.PagedKVCache(cfg, slots=slots, max_len=max_len, ctx=ctx,
+                                page_size=page_size, num_pages=num_pages,
+                                dtype=dtype)
+
+    def bytes_report(self, cfg, *, max_len, slots=1, page_size=16,
+                     num_pages=None, dtype_bytes=4):
+        return {
+            "mode": self.name,
+            "cache_bytes": kvc.paged_pool_bytes(
+                cfg, max_len=max_len, page_size=page_size,
+                vq_codes=self.vq_codes, slots=slots, num_pages=num_pages,
+                dtype_bytes=dtype_bytes),
+            "page_group_spans": kvc.page_group_spans(cfg, max_len, page_size),
+        }
+
+
+class PagedVQBackend(PagedBackend):
+    """Paged pools with uint8/16 VQ code pages on global layers (the
+    Appendix-G codes-only cache under a block table); windowed layers keep
+    fp pages, mirroring the dense "vq" slab."""
+
+    name = "paged_vq"
+    vq_codes = True
+
+
+class ShardedBackend(CacheBackend):
+    """Sequence-sharded shard cache: the slab layouts with the global-layer
+    decode running under shard_map over ``mesh.seq_axis`` — each device owns
+    a disjoint sequence shard and partial-softmax stats are merged
+    flash-decoding style (windowed layers keep the replicated ring; prefill
+    and init are the inner slab's)."""
+
+    sharded = True
+
+    def __init__(self, inner: CacheBackend):
+        self.inner = inner
+        self.name = f"sharded_{inner.name}"
+        self.vq_codes = inner.vq_codes
+
+    def init_cache(self, cfg, kind, batch, max_len, dtype, *, page_size=0,
+                   num_pages=0):
+        return self.inner.init_cache(cfg, kind, batch, max_len, dtype,
+                                     page_size=page_size, num_pages=num_pages)
+
+    def prefill_write(self, cache, k, v, *, ctx, kind, vq_params=None,
+                      block_tables=None, lengths=None):
+        return self.inner.prefill_write(cache, k, v, ctx=ctx, kind=kind,
+                                        vq_params=vq_params,
+                                        block_tables=block_tables,
+                                        lengths=lengths)
+
+    def decode_attend(self, params, q, k_new, v_new, cache, lengths, *, ctx,
+                      kind, vq_params=None, block_tables=None):
+        cfg = ctx.cfg
+        window = attn.kind_window(kind, cfg)
+        if window:  # ring cache, replicated over the seq axis (small)
+            return _ring_decode(params, q, k_new, v_new, cache, lengths,
+                                window, cfg.attn_logit_softcap)
+        return _decode_sharded(params, q, k_new, v_new, cache, lengths,
+                               ctx, cfg, cfg.attn_logit_softcap, vq_params)
+
+    def bytes_report(self, cfg, *, max_len, slots=1, page_size=16,
+                     num_pages=None, dtype_bytes=4):
+        rep = self.inner.bytes_report(cfg, max_len=max_len, slots=slots,
+                                      page_size=page_size,
+                                      num_pages=num_pages,
+                                      dtype_bytes=dtype_bytes)
+        rep["mode"] = self.name
+        rep["note"] = "sequence-sharded: divide cache_bytes by shard count"
+        return rep
+
+
+def _decode_sharded(params, q, k_new, v_new, cache, lengths, ctx, cfg, cap,
+                    vq_params):
+    """Distributed decode: cache sharded over mesh.seq_axis on the sequence
+    dim; flash-decoding partial-softmax merge (beyond-paper, DESIGN.md §2)."""
+    axis = ctx.mesh.seq_axis
+    bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+    b = q.shape[0]
+    vq_cache = "k_codes" in cache
+    # the Pallas decode kernel needs whole groups per kv head
+    kernel_ok = (ctx.use_pallas_decode and vq_cache
+                 and cfg.num_kv_heads > 0
+                 and cfg.astra.groups % cfg.num_kv_heads == 0)
+
+    def body(q_l, k_n, v_n, ck, cv, lens, cb_k, cb_v):
+        s_loc = ck.shape[1]
+        off = jax.lax.axis_index(axis) * s_loc
+        local_idx = jnp.clip(lens - off, 0, s_loc - 1)
+        mine = (lens >= off) & (lens < off + s_loc)
+        if vq_cache:
+            spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups,
+                             cfg.astra.codebook_size)
+            bl = q_l.shape[0]
+            kc_n = vq.encode({"codebook": cb_k}, k_n.reshape(bl, 1, -1), spec)
+            vc_n = vq.encode({"codebook": cb_v}, v_n.reshape(bl, 1, -1), spec)
+            ck2 = jnp.where(mine[:, None, None],
+                            attn._write_at(ck, kc_n.astype(ck.dtype),
+                                           local_idx), ck)
+            cv2 = jnp.where(mine[:, None, None],
+                            attn._write_at(cv, vc_n.astype(cv.dtype),
+                                           local_idx), cv)
+            if kernel_ok:
+                # Pallas flash-decode over the coded cache: codes are never
+                # dequantized in HBM (kernels/vq_decode_attn.py)
+                from repro.kernels.ops import decode_attention_partials
+
+                lens_local = lens - off  # negative => nothing valid here
+                m_, l_, acc_ = decode_attention_partials(
+                    q_l[:, 0], ck2.astype(jnp.int32), cv2.astype(jnp.int32),
+                    cb_k, cb_v, lens_local, use_pallas=True)
+                m = m_[..., None]  # (B, H, 1)
+                l = l_[..., None]
+                o = acc_[:, None]  # (B, 1, H, hd)
+                out = merge_partial_stats(m, l, o, axis)
+                return out, ck2, cv2
+            k_shard = vq.decode({"codebook": cb_k}, ck2.astype(jnp.int32),
+                                spec).reshape(bl, s_loc, cfg.num_kv_heads,
+                                              cfg.head_dim)
+            v_shard = vq.decode({"codebook": cb_v}, cv2.astype(jnp.int32),
+                                spec).reshape(bl, s_loc, cfg.num_kv_heads,
+                                              cfg.head_dim)
+        else:
+            ck2 = jnp.where(mine[:, None, None, None],
+                            attn._write_at(ck, k_n, local_idx), ck)
+            cv2 = jnp.where(mine[:, None, None, None],
+                            attn._write_at(cv, v_n, local_idx), cv)
+            k_shard, v_shard = ck2, cv2
+        pos = off + jnp.arange(s_loc)[None, :]
+        valid = pos <= lens[:, None]
+        m, l, o = partial_attention_stats(q_l, k_shard, v_shard,
+                                          k_valid=valid, softcap=cap)
+        out = merge_partial_stats(m, l, o, axis)
+        return out, ck2, cv2
+
+    qspec = P(bspec, None, None, None)
+    cspec4 = P(bspec, axis, None, None)
+    cspec3 = P(bspec, axis, None)
+    if vq_cache:
+        in_specs = (qspec, qspec, qspec, cspec3, cspec3, P(bspec), P(), P())
+        out_specs = (qspec, cspec3, cspec3)
+        cb_k = vq_params["k"]["codebook"]
+        cb_v = vq_params["v"]["codebook"]
+        ck_in, cv_in = cache["k_codes"], cache["v_codes"]
+    else:
+        in_specs = (qspec, qspec, qspec, cspec4, cspec4, P(bspec), P(), P())
+        out_specs = (qspec, cspec4, cspec4)
+        cb_k = cb_v = jnp.zeros((1,), jnp.float32)
+        ck_in, cv_in = cache["k"], cache["v"]
+
+    out, ck2, cv2 = shard_map(
+        body, mesh=ctx.mesh.mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(q, k_new, v_new, ck_in, cv_in, lengths, cb_k, cb_v)
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    new_cache = ({"k_codes": ck2, "v_codes": cv2} if vq_cache
+                 else {"k": ck2, "v": cv2})
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def get_backend(cache_mode: str, *, seq_sharded: bool = False) -> CacheBackend:
+    """The singleton backend for one (cache_mode, sharded-ness) — the only
+    place a cache-mode string is ever compared."""
+    if cache_mode == "fp":
+        base: CacheBackend = FPSlabBackend()
+    elif cache_mode == "vq":
+        base = VQSlabBackend()
+    elif cache_mode == "paged":
+        base = PagedBackend()
+    elif cache_mode == "paged_vq":
+        base = PagedVQBackend()
+    else:
+        raise ValueError(
+            f"unknown cache_mode {cache_mode!r}; expected one of "
+            f"{CACHE_MODES}")
+    if seq_sharded:
+        if base.paged:
+            raise NotImplementedError(
+                "paged cache modes are single-host; the seq-sharded decode "
+                "path keeps the fp/vq shard cache")
+        return ShardedBackend(base)
+    return base

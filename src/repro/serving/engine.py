@@ -4,20 +4,24 @@ The paper's serving story (§3.1, §5): prefill is distributed across devices
 with ASTRA's compressed exchange (time-to-first-token acceleration); decode
 is autoregressive.  This engine supports:
   * static-batch generate() with per-request lengths,
-  * fp or vq (Appendix G) slab caches, or their paged page-pool variants
-    ("paged" / "paged_vq", block tables via serving.kv_cache.PagedKVCache),
-  * plain single-host execution or a sequence-sharded mesh (slab modes).
+  * every ``serving.cache_backend`` layout: fp or vq (Appendix G) slab
+    caches, their paged page-pool variants ("paged" / "paged_vq", per-group
+    block tables via serving.kv_cache.PagedKVCache), and the seq-sharded
+    shard cache when a mesh with a sequence axis is given.
 
 Decode runs through the shared jitted multi-token loop in
 ``repro.serving.steps``: the host dispatches one chunk of ``decode_chunk``
 steps at a time and syncs once per chunk (``host_syncs`` counts the
 device->host transfers so tests can pin the O(max_new_tokens / chunk)
-behaviour).
+behaviour).  The chunk size comes from the persisted autotune winner when
+one exists (``serving.autotune``); cache buffers are donated into the
+jitted steps so updates are in-place on platforms that alias (no-op on
+CPU).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +29,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.sequence_parallel import LOCAL, MeshContext
-from repro.models import model_factory as mf
 from repro.models import transformer as tlm
 from repro.models.context import StepCtx
-from repro.serving import kv_cache as kvc
+from repro.serving import autotune as serving_autotune
+from repro.serving import cache_backend as cbe
 from repro.serving import steps as serving_steps
+
+DEFAULT_DECODE_CHUNK = 8
 
 
 @dataclasses.dataclass
@@ -49,28 +55,35 @@ class ServingEngine:
         astra_mode: str = "sim",
         cache_mode: str = "fp",
         cache_dtype=jnp.float32,
-        decode_chunk: int = 8,
+        decode_chunk: Optional[int] = None,
         page_size: int = 16,
+        donate: Optional[bool] = None,
     ):
-        if cache_mode not in ("fp", "vq") + kvc.PAGED_CACHE_MODES:
-            raise ValueError(f"unknown cache_mode {cache_mode!r}")
+        seq_sharded = (mesh_ctx.seq_axis is not None
+                       and mesh_ctx.mesh is not None)
+        # resolves the layout (and rejects unknown modes / paged+sharded)
+        self.backend = cbe.get_backend(cache_mode, seq_sharded=seq_sharded)
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.cache_dtype = cache_dtype
+        if decode_chunk is None:
+            decode_chunk = (serving_autotune.load_decode_chunk(cfg.name)
+                            or DEFAULT_DECODE_CHUNK)
         self.decode_chunk = max(int(decode_chunk), 1)
-        self.paged = cache_mode in kvc.PAGED_CACHE_MODES
         self.page_size = page_size
-        if self.paged and mesh_ctx.seq_axis is not None:
-            raise NotImplementedError(
-                "paged cache modes are single-host; the seq-sharded decode "
-                "path keeps the fp/vq shard cache")
         self.prefill_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="prefill",
                                    astra_mode=astra_mode, cache_mode=cache_mode)
         self.decode_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="decode",
                                   astra_mode=astra_mode, cache_mode=cache_mode)
-        self._prefill = jax.jit(self._prefill_impl)
-        self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx)
+        # prefill donates the incoming cache pytree (the paged pools are
+        # rewritten in place; slab modes pass None and donation is a no-op)
+        prefill_donate = (self.backend.donate_argnums((3,)) if donate is None
+                          else ((3,) if donate else ()))
+        self._prefill = serving_steps.CountingJit(
+            self._prefill_impl, donate_argnums=prefill_donate)
+        self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx,
+                                                             donate=donate)
         # device->host transfer counter (one increment per blocking fetch)
         self.host_syncs = 0
 
@@ -84,7 +97,7 @@ class ServingEngine:
                                        self.prefill_ctx, self.cache_dtype)
         logits, _, _, caches = tlm.lm_forward(
             params, {"tokens": tokens}, ctx=self.prefill_ctx, caches=caches,
-            block_tables=block_tables)
+            lengths=lengths, block_tables=block_tables)
         last = jnp.take_along_axis(
             logits, (lengths - 1)[:, None, None].clip(0), axis=1)[:, 0]
         return last, caches
@@ -114,18 +127,18 @@ class ServingEngine:
         for i, p in enumerate(prompts):
             toks[i, : len(p)] = p
 
-        kv = block_tables = caches0 = None
-        if self.paged:
-            # one PagedKVCache per generate(): each request gets exactly the
+        block_tables = caches0 = None
+        if self.backend.paged:
+            # one per-generate cache state: each request gets exactly the
             # pages its prompt + budget needs, all layers share the tables.
-            kv = kvc.PagedKVCache(
+            kv = self.backend.make_state(
                 self.cfg, slots=b, max_len=self.max_len, ctx=self.decode_ctx,
                 page_size=self.page_size, dtype=self.cache_dtype)
             for i in range(b):
-                ok = kv.allocate(i, min(int(lens[i]) + max_new_tokens,
-                                        self.max_len))
-                assert ok, "pool sized for slots*max_pages can't run dry"
-            block_tables = kv.table()
+                ok = self.backend.advance(
+                    kv, i, min(int(lens[i]) + max_new_tokens, self.max_len))
+                assert ok, "pool sized for slots*span can't run dry"
+            block_tables = kv.tables()
             caches0 = kv.init_cache(b)
         last_logits, caches = self._prefill(self.params, jnp.asarray(toks),
                                             jnp.asarray(lens), caches0,
@@ -136,7 +149,8 @@ class ServingEngine:
         cur, done = serving_steps.first_token(sub, last_logits, eos_arr,
                                               temperature=temperature,
                                               top_k=top_k)
-        first, done_h = jax.device_get((cur, done))
+        first, done_h, prefill_logits = jax.device_get(
+            (cur, done, last_logits))
         self.host_syncs += 1
         out = [[int(first[i])] for i in range(b)]
 
@@ -162,9 +176,9 @@ class ServingEngine:
                     if valid_h[i, j]:
                         out[i].append(int(toks_h[i, j]))
             emitted += chunk
-        self.host_syncs += 1  # prefill_logits fetch below
+        self.host_syncs += 1  # prefill_logits fetch above rides this budget
         return GenerationResult(tokens=out,
-                                prefill_logits=np.asarray(last_logits))
+                                prefill_logits=np.asarray(prefill_logits))
 
     # -- metrics ---------------------------------------------------------
     def prefill_comm_bits_per_device(self, seq_len: int,

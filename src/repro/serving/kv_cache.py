@@ -1,5 +1,5 @@
 """KV-cache subsystem: Appendix-G memory accounting + the paged page-pool
-cache behind ``cache_mode in {"paged", "paged_vq"}``.
+cache behind the paged ``CacheBackend``s.
 
 Two halves:
 
@@ -8,29 +8,38 @@ Two halves:
   the roofline tables.
 
 * **Paged runtime cache**: ``PageAllocator`` (free-list over page ids) +
-  ``PagedKVCache`` (block tables, per-layer page pools).  Every attention
-  layer's K/V pool is a ``(num_pages, page_size, ...)`` array; a request owns
-  a list of pages recorded in its slot's block-table row, so engine memory
-  scales with *allocated tokens* (page-granular) instead of
-  ``slots * max_len``.  One allocator/block table serves every layer: fp16/32
-  value pages ("paged") and uint8/16 VQ code pages ("paged_vq",
-  the codes-only Appendix-G cache) share the same page ids.
+  ``PagedKVCache`` (per-group block tables, per-layer page pools).  Every
+  attention layer's K/V pool is a ``(num_pages, page_size, ...)`` array; a
+  request owns a list of pages recorded in its slot's block-table row, so
+  engine memory scales with *allocated tokens* (page-granular) instead of
+  ``slots * max_len``.  fp16/32 value pages ("paged") and uint8/16 VQ code
+  pages ("paged_vq", the codes-only Appendix-G cache) share the same layout.
 
-Page 0 is a reserved scratch page: block-table rows of retired or
-never-admitted slots point at it, so the fixed-shape decode step can keep
+Layers are partitioned into **page groups** with their own allocator, id
+space and block-table width:
+
+* ``"global"`` — full-attention layers; ``max_len / page_size`` table
+  entries per request.
+* ``"window"`` — sliding-window (SWA) layers; capped at
+  ``ceil(window / page_size)`` entries per request, used as a page-granular
+  ring over the last ``window`` positions.  Windowed pools are therefore
+  sized by the window, not ``max_len`` — the per-layer eq. 38/39 accounting
+  below reflects that.
+
+Page 0 of each group is a reserved scratch page: block-table rows of retired
+or never-admitted slots point at it, so the fixed-shape decode step can keep
 writing without corrupting live requests, and page-pool reads beyond a row's
 allocation are masked by the attention validity mask.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 
-PAGED_CACHE_MODES = ("paged", "paged_vq")
 # leaf names marking a cache sub-dict as a shared page pool (no batch dim)
 PAGED_LEAF_KEYS = frozenset(
     {"k_pages", "v_pages", "k_code_pages", "v_code_pages"})
@@ -113,37 +122,115 @@ def memory_report(cfg: ModelConfig, seq_len: int, num_devices: int) -> Dict:
 
 
 # ---------------------------------------------------------------------------
+# Page groups: per-layer block-table widths
+# ---------------------------------------------------------------------------
+
+
+def _attn_kind_window(kind: str, cfg: ModelConfig) -> int:
+    """Deferred alias of models.attention.kind_window — the single source
+    of truth for which layer kinds are windowed (import deferred like the
+    transformer imports above, to keep serving importable standalone)."""
+    from repro.models.attention import kind_window
+
+    return kind_window(kind, cfg)
+
+
+def page_group_for(kind: str, cfg: ModelConfig) -> str:
+    """Block-table group a layer kind reads/writes through."""
+    return "window" if _attn_kind_window(kind, cfg) else "global"
+
+
+def page_group_spans(cfg: ModelConfig, max_len: int,
+                     page_size: int) -> Dict[str, int]:
+    """Per-request block-table width (pages) for every page group this model
+    needs.  Windowed layers are capped at ``ceil(window / page_size)`` — the
+    table is a page-granular ring over the last ``span * page_size``
+    positions, so a window never costs ``max_len`` worth of pages."""
+    from repro.models.transformer import ATTN_KINDS, stages
+
+    max_pages = -(-max_len // page_size)
+    spans: Dict[str, int] = {}
+    for kinds, _ in stages(cfg):
+        for kind in kinds:
+            if kind not in ATTN_KINDS:
+                continue
+            window = _attn_kind_window(kind, cfg)
+            if window:
+                spans["window"] = min(-(-window // page_size), max_pages)
+            else:
+                spans["global"] = max_pages
+    return dict(sorted(spans.items()))
+
+
+def dominant_group(spans: Dict[str, int]) -> str:
+    """The group the engine-level ``num_pages`` knob applies to: the
+    full-span one when present (windowed pools are bounded by construction,
+    so admission pressure is only meaningful on the global pool)."""
+    return "global" if "global" in spans else next(iter(spans))
+
+
+# ---------------------------------------------------------------------------
 # Page-granular accounting (what the paged runtime actually materializes)
 # ---------------------------------------------------------------------------
 
 
 def paged_pool_bytes(cfg: ModelConfig, *, max_len: int, page_size: int,
-                     cache_mode: str = "paged", slots: int = 1,
+                     vq_codes: bool = False, slots: int = 1,
                      num_pages: Optional[int] = None,
-                     dtype_bytes: int = 4) -> int:
+                     dtype_bytes: int = 4, window_cap: bool = True) -> int:
     """Analytic byte size of the page pools a ``PagedKVCache`` materializes.
 
-    This is eq. 38 (or the codes-only eq.-39 remote term for "paged_vq")
-    rounded up to page granularity, plus one scratch page per pool.  Windowed
-    ("local") attention layers hold fp pages even under "paged_vq",
-    mirroring the dense "vq" mode which keeps them full-precision.
+    Per-layer eq. 38 (or the codes-only eq.-39 remote term with
+    ``vq_codes=True``) rounded up to page granularity, plus one scratch page
+    per pool; windowed ("local") attention layers are sized by their page
+    ring (``window_cap=True``, the runtime behaviour) instead of ``max_len``,
+    and hold fp pages even under VQ codes, mirroring the dense "vq" mode
+    which keeps them full-precision.  ``num_pages`` overrides the dominant
+    group's pool size (the scheduler's admission-pressure knob).
     """
     from repro.models.transformer import ATTN_KINDS, stages
 
-    max_pages = -(-max_len // page_size)
-    pages = int(num_pages) if num_pages else slots * max_pages + 1
+    spans = page_group_spans(cfg, max_len, page_size)
+    if not window_cap:  # pre-cap accounting: every layer spans max_len
+        spans = {name: -(-max_len // page_size) for name in spans}
+    dom = dominant_group(spans) if spans else None
     total = 0
     for kinds, reps in stages(cfg):
         for kind in kinds:
             if kind not in ATTN_KINDS:
                 continue
-            window = cfg.window_size if kind == "local" else 0
-            if cache_mode == "paged_vq" and not window:
+            group = page_group_for(kind, cfg)
+            span = spans[group]
+            pages = (int(num_pages) if num_pages and group == dom
+                     else slots * span + 1)
+            if vq_codes and not _attn_kind_window(kind, cfg):
                 per = pages * page_size * cfg.astra.groups * code_itemsize(
                     cfg.astra.codebook_size)
             else:
                 per = pages * page_size * cfg.d_kv * dtype_bytes
             total += 2 * reps * per  # K and V pools
+    return total
+
+
+def slab_cache_bytes(cfg: ModelConfig, *, max_len: int, slots: int = 1,
+                     vq_codes: bool = False, dtype_bytes: int = 4) -> int:
+    """Byte size of the contiguous slab caches ("fp"/"vq"): per-layer eq. 38
+    with windowed layers holding only their ``min(window, max_len)`` ring."""
+    from repro.models.transformer import ATTN_KINDS, stages
+
+    total = 0
+    for kinds, reps in stages(cfg):
+        for kind in kinds:
+            if kind not in ATTN_KINDS:
+                continue
+            window = _attn_kind_window(kind, cfg)
+            s = min(window, max_len) if window else max_len
+            if vq_codes and not window:
+                per = s * cfg.astra.groups * code_itemsize(
+                    cfg.astra.codebook_size)
+            else:
+                per = s * cfg.d_kv * dtype_bytes
+            total += 2 * reps * slots * per
     return total
 
 
@@ -160,6 +247,33 @@ def adopt_pools(fresh: List[Dict], live: List[Dict]) -> List[Dict]:
     for f_stage, l_stage in zip(fresh, live):
         out.append({name: (l_stage[name] if is_paged_sub(sub) else sub)
                     for name, sub in f_stage.items()})
+    return out
+
+
+def merge_slot(live: List[Dict], fresh: List[Dict], slot) -> List[Dict]:
+    """Merge a batch-1 prefill cache into row ``slot`` of the live batched
+    cache, on device (jit-traced; ``slot`` may be a traced scalar).  Shared
+    page-pool sub-dicts are adopted wholesale — prefill already wrote the
+    slot's pages in place — while batched (R, B, ...) leaves get the
+    (R, 1, ...) slice inserted at ``slot``."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def one(batch_leaf, new_leaf):
+        return lax.dynamic_update_slice_in_dim(
+            batch_leaf, new_leaf.astype(batch_leaf.dtype),
+            jnp.asarray(slot), axis=1)
+
+    out = []
+    for l_stage, f_stage in zip(live, fresh):
+        sub = {}
+        for name, f_sub in f_stage.items():
+            if is_paged_sub(f_sub):
+                sub[name] = f_sub
+            else:
+                sub[name] = jax.tree.map(one, l_stage[name], f_sub)
+        out.append(sub)
     return out
 
 
@@ -180,7 +294,7 @@ def pool_bytes(caches: Sequence[Dict]) -> int:
 
 
 class PageAllocator:
-    """Free-list allocator over page ids shared by every layer's pools.
+    """Free-list allocator over one page group's ids.
 
     Pages ``[0, reserved)`` are never handed out — page 0 is the scratch
     page absorbing writes from retired/padded rows.  ``alloc`` doubles as
@@ -246,15 +360,27 @@ class PageAllocator:
 # ---------------------------------------------------------------------------
 
 
-class PagedKVCache:
-    """Block tables + page pools for the serving engines.
+class _PageGroup:
+    """One block-table group: its own id space, allocator and table width."""
 
-    Host side: a ``PageAllocator`` and a ``(slots, max_pages)`` int32 block
-    table (row = slot, entry = page id, 0 = scratch).  Device side:
+    def __init__(self, name: str, slots: int, span: int, num_pages: int):
+        self.name = name
+        self.span = int(span)
+        self.num_pages = int(num_pages)
+        self.allocator = PageAllocator(self.num_pages)
+        self.block_table = np.zeros((slots, self.span), np.int32)
+
+
+class PagedKVCache:
+    """Per-group block tables + page pools for the serving engines.
+
+    Host side: one ``PageAllocator`` and ``(slots, span)`` int32 block table
+    per page group (row = slot, entry = page id, 0 = scratch).  Device side:
     ``init_cache()`` builds the model cache tree whose attention leaves are
-    ``(num_pages, page_size, ...)`` pools — fp K/V pages for "paged", uint8/16
-    code pages for "paged_vq" — which the engines thread through the jitted
-    prefill/decode steps unchanged-shape.
+    ``(num_pages, page_size, ...)`` pools — fp K/V pages for "paged",
+    uint8/16 code pages for "paged_vq" — which the engines thread through
+    the jitted prefill/decode steps unchanged-shape.  Windowed layers read
+    and write through the narrower "window" table as a page ring.
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int, ctx,
@@ -262,8 +388,9 @@ class PagedKVCache:
                  dtype=None):
         import jax.numpy as jnp
 
-        if ctx.cache_mode not in PAGED_CACHE_MODES:
-            raise ValueError(f"ctx.cache_mode={ctx.cache_mode!r} is not paged")
+        if not ctx.backend.paged:
+            raise ValueError(
+                f"ctx backend {ctx.backend.name!r} is not a paged backend")
         if page_size <= 0:
             raise ValueError("page_size must be positive")
         if max_len % page_size:
@@ -276,48 +403,88 @@ class PagedKVCache:
         self.max_len = int(max_len)
         self.page_size = int(page_size)
         self.max_pages = max_len // page_size
-        self.num_pages = (int(num_pages) if num_pages
-                          else self.slots * self.max_pages + 1)
         self.dtype = jnp.float32 if dtype is None else dtype
-        self.allocator = PageAllocator(self.num_pages)
-        self.block_tables = np.zeros((self.slots, self.max_pages), np.int32)
+        self.spans = page_group_spans(cfg, max_len, page_size)
+        if not self.spans:
+            raise ValueError(f"{cfg.name}: no attention layers to page")
+        self.dominant = dominant_group(self.spans)
+        self.groups: Dict[str, _PageGroup] = {}
+        for name, span in self.spans.items():
+            n = (int(num_pages) if num_pages and name == self.dominant
+                 else self.slots * span + 1)
+            self.groups[name] = _PageGroup(name, self.slots, span, n)
+        # engine-facing compat: the dominant group's knobs
+        self.num_pages = self.groups[self.dominant].num_pages
 
     # -- host-side bookkeeping ----------------------------------------------
+    @property
+    def allocator(self) -> PageAllocator:
+        return self.groups[self.dominant].allocator
+
+    @property
+    def block_tables(self) -> np.ndarray:
+        return self.groups[self.dominant].block_table
+
+    @property
+    def num_pages_by_group(self) -> Dict[str, int]:
+        return {name: g.num_pages for name, g in self.groups.items()}
+
     def pages_for(self, num_tokens: int) -> int:
         return -(-max(int(num_tokens), 1) // self.page_size)
 
-    def can_allocate(self, slot, num_tokens: int) -> bool:
-        need = self.pages_for(num_tokens) - len(self.allocator.owned(slot))
-        return need <= self.allocator.num_free
+    def group_pages_for(self, name: str, num_tokens: int) -> int:
+        return min(self.pages_for(num_tokens), self.groups[name].span)
 
-    def allocate(self, slot, num_tokens: int) -> bool:
-        """Grow ``slot``'s grant to cover ``num_tokens`` total tokens.
-        False (state unchanged) on allocator pressure."""
-        need = self.pages_for(num_tokens)
-        have = len(self.allocator.owned(slot))
-        if need <= have:
-            return True
-        pages = self.allocator.alloc(slot, need - have)
-        if pages is None:
-            return False
-        self.block_tables[slot, have:need] = pages
+    def can_allocate(self, slot, num_tokens: int) -> bool:
+        for name, g in self.groups.items():
+            need = (self.group_pages_for(name, num_tokens)
+                    - len(g.allocator.owned(slot)))
+            if need > g.allocator.num_free:
+                return False
         return True
 
+    def can_ever_fit(self, num_tokens: int) -> bool:
+        return all(self.group_pages_for(name, num_tokens)
+                   <= g.allocator.capacity
+                   for name, g in self.groups.items())
+
+    def advance(self, slot, num_tokens: int) -> bool:
+        """Grow ``slot``'s grant in every group to cover ``num_tokens`` total
+        tokens.  False (state unchanged) on allocator pressure."""
+        if not self.can_allocate(slot, num_tokens):
+            return False
+        for name, g in self.groups.items():
+            need = self.group_pages_for(name, num_tokens)
+            have = len(g.allocator.owned(slot))
+            if need <= have:
+                continue
+            pages = g.allocator.alloc(slot, need - have)
+            assert pages is not None  # pre-checked above
+            g.block_table[slot, have:need] = pages
+        return True
+
+    # historical name (PR 2 API); ``advance`` is the CacheBackend verb
+    allocate = advance
+
     def free(self, slot) -> int:
-        """Retire a request: return all its pages, point the row at scratch."""
-        pages = self.allocator.free(slot)
-        self.block_tables[slot, :] = 0
-        return len(pages)
+        """Retire a request: return all its pages, point the rows at
+        scratch."""
+        n = 0
+        for g in self.groups.values():
+            n += len(g.allocator.free(slot))
+            g.block_table[slot, :] = 0
+        return n
 
     @property
     def pages_in_use(self) -> int:
-        return self.allocator.pages_in_use
+        return sum(g.allocator.pages_in_use for g in self.groups.values())
 
-    def table(self):
-        """Device copy of the block tables (fixed shape: compile-once)."""
+    def tables(self) -> Dict[str, Any]:
+        """Device copies of the block tables (fixed shapes: compile-once)."""
         import jax.numpy as jnp
 
-        return jnp.asarray(self.block_tables)
+        return {name: jnp.asarray(g.block_table)
+                for name, g in self.groups.items()}
 
     # -- device-side pools --------------------------------------------------
     def init_cache(self, batch: Optional[int] = None):
@@ -328,7 +495,7 @@ class PagedKVCache:
         return tlm.init_lm_cache(self.cfg, batch or self.slots, self.max_len,
                                  self.ctx, self.dtype,
                                  page_size=self.page_size,
-                                 num_pages=self.num_pages)
+                                 num_pages=self.num_pages_by_group)
 
     def pool_bytes(self, caches=None) -> int:
         """Measured page-pool bytes (materialized if ``caches`` given, else
@@ -337,6 +504,48 @@ class PagedKVCache:
             return pool_bytes(caches)
         return paged_pool_bytes(
             self.cfg, max_len=self.max_len, page_size=self.page_size,
-            cache_mode=self.ctx.cache_mode, slots=self.slots,
+            vq_codes=self.ctx.backend.vq_codes, slots=self.slots,
             num_pages=self.num_pages,
             dtype_bytes=np.dtype(self.dtype).itemsize)
+
+
+class SlabCache:
+    """Host-side cache handle for the contiguous slab backends — the same
+    duck-typed surface as ``PagedKVCache`` so the engines never branch on
+    the cache layout (``advance``/``free`` are trivial: a slab row always
+    holds ``max_len`` positions)."""
+
+    pages_in_use = 0
+
+    def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int, ctx,
+                 dtype=None):
+        import jax.numpy as jnp
+
+        self.cfg = cfg
+        self.ctx = ctx
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.dtype = jnp.float32 if dtype is None else dtype
+
+    def advance(self, slot, num_tokens: int) -> bool:
+        return int(num_tokens) <= self.max_len
+
+    allocate = advance
+
+    def can_ever_fit(self, num_tokens: int) -> bool:
+        return int(num_tokens) <= self.max_len
+
+    def free(self, slot) -> int:
+        return 0
+
+    def tables(self) -> None:
+        return None
+
+    def init_cache(self, batch: Optional[int] = None):
+        from repro.models import transformer as tlm
+
+        return tlm.init_lm_cache(self.cfg, batch or self.slots, self.max_len,
+                                 self.ctx, self.dtype)
+
+    def pool_bytes(self, caches=None) -> int:
+        return 0

@@ -8,15 +8,20 @@ active slots together, and retires slots on EOS/max-new — vLLM-style
 iteration-level scheduling, with ASTRA's sequence-parallel prefill supplying
 the time-to-first-token acceleration.
 
-With ``cache_mode in {"paged", "paged_vq"}`` the cache is a block-granular
-page pool (``serving.kv_cache.PagedKVCache``): admission additionally blocks
-until the allocator can cover the request's prompt + budget, prefill writes
-pages directly (no per-slot slab copy), and retirement returns the pages.
-"paged_vq" stores uint8/16 VQ codes per page — the Appendix-G codes-only
-cache under a block table.
+The cache layout is whatever ``serving.cache_backend`` resolves for the
+engine's ``cache_mode``.  For the paged layouts the cache is a
+block-granular page pool (``serving.kv_cache.PagedKVCache``): admission
+additionally blocks until the allocator can cover the request's prompt +
+budget (``backend.advance``), prefill writes pages directly (no per-slot
+slab copy), and retirement returns the pages.  "paged_vq" stores uint8/16
+VQ codes per page — the Appendix-G codes-only cache under per-group block
+tables (windowed layers ride the capped "window" table).
 
 All steps are fixed-shape (slot count and max_len are static), so the jitted
-prefill/decode compile once.  Decoding goes through the same jitted
+prefill/decode compile once — including the admitted slot index, which is a
+traced scalar: the prefill merges its batch-1 result into the engine cache
+on device, letting the whole cache pytree be donated (in-place on platforms
+that alias; no-op on CPU).  Decoding goes through the same jitted
 multi-token chunk as ``ServingEngine`` (``repro.serving.steps``): each
 ``step()`` advances every active slot by up to ``decode_chunk`` tokens on
 device and syncs with the host once, so admission/retirement happen at
@@ -34,11 +39,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.sequence_parallel import LOCAL, MeshContext
-from repro.models import model_factory as mf
 from repro.models import transformer as tlm
 from repro.models.context import StepCtx
+from repro.serving import autotune as serving_autotune
+from repro.serving import cache_backend as cbe
 from repro.serving import kv_cache as kvc
 from repro.serving import steps as serving_steps
+
+DEFAULT_DECODE_CHUNK = 4
 
 
 @dataclasses.dataclass
@@ -59,18 +67,24 @@ class ContinuousBatchingEngine:
                  max_len: int = 256, mesh_ctx: MeshContext = LOCAL,
                  astra_mode: str = "off", cache_mode: str = "fp",
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 decode_chunk: int = 4, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 decode_chunk: Optional[int] = None, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 donate: Optional[bool] = None):
         if cfg.arch_type in ("vit",):
             raise ValueError("classification models are not generative")
-        if cache_mode not in ("fp", "vq") + kvc.PAGED_CACHE_MODES:
-            raise ValueError(f"unknown cache_mode {cache_mode!r}")
+        seq_sharded = (mesh_ctx.seq_axis is not None
+                       and mesh_ctx.mesh is not None)
+        self.backend = cbe.get_backend(cache_mode, seq_sharded=seq_sharded)
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.temperature = temperature
         self.top_k = top_k
+        if decode_chunk is None:
+            decode_chunk = (
+                serving_autotune.load_decode_chunk(cfg.name, batch=slots)
+                or DEFAULT_DECODE_CHUNK)
         self.decode_chunk = max(int(decode_chunk), 1)
         self.prefill_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="prefill",
                                    astra_mode=astra_mode,
@@ -78,20 +92,15 @@ class ContinuousBatchingEngine:
         self.decode_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="decode",
                                   astra_mode=astra_mode,
                                   cache_mode=cache_mode)
-        if cache_mode in kvc.PAGED_CACHE_MODES:
-            if mesh_ctx.seq_axis is not None:
-                raise NotImplementedError("paged cache modes are single-host")
-            # undersized num_pages => admission waits for pages, not slots
-            self.kv: Optional[kvc.PagedKVCache] = kvc.PagedKVCache(
-                cfg, slots=slots, max_len=max_len, ctx=self.decode_ctx,
-                page_size=page_size, num_pages=num_pages, dtype=jnp.float32)
-            self.caches = self.kv.init_cache()
-            self._bt = self.kv.table()
-        else:
-            self.kv = None
-            self._bt = None
-            self.caches = tlm.init_lm_cache(cfg, slots, max_len,
-                                            self.decode_ctx, jnp.float32)
+        # one cache state for the engine's whole life: page allocators +
+        # per-group block tables for the paged layouts, a trivial slab
+        # handle otherwise (undersized num_pages => admission waits for
+        # pages, not slots)
+        self.kv = self.backend.make_state(
+            cfg, slots=slots, max_len=max_len, ctx=self.decode_ctx,
+            page_size=page_size, num_pages=num_pages, dtype=jnp.float32)
+        self.caches = self.kv.init_cache()
+        self._bt = self.kv.tables()
         self.admission_stalls = 0  # admissions deferred by page pressure
         self.lengths = jnp.zeros((slots,), jnp.int32)
         self.cur_token = jnp.zeros((slots,), jnp.int32)
@@ -101,31 +110,41 @@ class ContinuousBatchingEngine:
         self.step_count = 0
         self.host_syncs = 0
         self._rng = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(self._prefill_impl)
-        self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx)
+        # the whole live cache pytree is donated through prefill (the merge
+        # happens on device) and through the decode chunk
+        prefill_donate = (self.backend.donate_argnums((4,)) if donate is None
+                          else ((4,) if donate else ()))
+        self._prefill = serving_steps.CountingJit(
+            self._prefill_impl, donate_argnums=prefill_donate)
+        self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx,
+                                                             donate=donate)
         self._uid = 0
 
     # -- jitted steps --------------------------------------------------------
-    def _prefill_impl(self, params, tokens, length, live_caches, block_table):
-        """tokens: (1, max_len) padded prompt -> (last_logits, slot cache).
+    def _prefill_impl(self, params, tokens, length, slot, live_caches,
+                      block_tables):
+        """tokens: (1, max_len) padded prompt -> (last_logits, merged caches).
 
-        Slab modes build a throwaway (1, max_len) cache that the caller
-        copies into the batch cache.  Paged modes adopt the engine's live
-        page pools instead and prefill scatters prompt K/V straight into the
-        slot's allocated pages — the only per-slot copies left are the tiny
-        recurrent/ring leaves."""
+        Slab modes build a throwaway (1, max_len) cache; paged modes adopt
+        the engine's live page pools instead and prefill scatters prompt K/V
+        straight into the slot's allocated pages.  Either way the batch-1
+        result is merged into the live batched cache *on device* at the
+        (traced) ``slot`` — one compile covers every admission, and the
+        donated ``live_caches`` buffers are updated in place where the
+        platform allows."""
         caches = tlm.init_lm_cache(
             self.cfg, 1, self.max_len, self.prefill_ctx, jnp.float32,
-            page_size=self.kv.page_size if self.kv else 0,
-            num_pages=self.kv.num_pages if self.kv else 0)
-        if live_caches is not None:
+            page_size=self.kv.page_size if self.backend.paged else 0,
+            num_pages=(self.kv.num_pages_by_group if self.backend.paged
+                       else 0))
+        if self.backend.paged:
             caches = kvc.adopt_pools(caches, live_caches)
         logits, _, _, caches = tlm.lm_forward(
             params, {"tokens": tokens}, ctx=self.prefill_ctx, caches=caches,
-            block_tables=block_table)
+            lengths=jnp.reshape(length, (1,)), block_tables=block_tables)
         last = jnp.take_along_axis(
             logits, (length - 1)[None, None, None].clip(0), axis=1)[:, 0]
-        return last, caches
+        return last, kvc.merge_slot(live_caches, caches, slot)
 
     # -- slot management -----------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
@@ -135,24 +154,10 @@ class ContinuousBatchingEngine:
                                   eos_id, submitted_step=self.step_count))
         return self._uid
 
-    def _write_slot_cache(self, slot: int, slot_cache) -> None:
-        """Merge a prefill result into the engine cache: shared page pools
-        are adopted wholesale (prefill already wrote the slot's pages);
-        batched (R, B, ...) leaves get the (R, 1, ...) slice inserted."""
-        def one(batch_leaf, new_leaf):
-            return jax.lax.dynamic_update_slice_in_dim(
-                batch_leaf, new_leaf.astype(batch_leaf.dtype), slot, axis=1)
-
-        merged = []
-        for b_stage, n_stage in zip(self.caches, slot_cache):
-            sub = {}
-            for name, n_sub in n_stage.items():
-                if kvc.is_paged_sub(n_sub):
-                    sub[name] = n_sub
-                else:
-                    sub[name] = jax.tree.map(one, b_stage[name], n_sub)
-            merged.append(sub)
-        self.caches = merged
+    def _slot_tables(self, slot: int):
+        if self._bt is None:
+            return None
+        return {name: t[slot:slot + 1] for name, t in self._bt.items()}
 
     def _admit(self) -> None:
         for slot in range(self.slots):
@@ -160,29 +165,26 @@ class ContinuousBatchingEngine:
                 continue
             n = min(len(self.queue[0].prompt),
                     self.max_len - self.queue[0].max_new_tokens - 1)
-            if self.kv is not None:
-                # admission blocks on allocator pressure, not slot count:
-                # the request needs pages for its prompt + full budget.
-                tokens_needed = min(n + self.queue[0].max_new_tokens,
-                                    self.max_len)
-                if self.kv.pages_for(tokens_needed) > \
-                        self.kv.allocator.capacity:
-                    raise ValueError(
-                        f"request needs {self.kv.pages_for(tokens_needed)} "
-                        f"pages but the pool only has "
-                        f"{self.kv.allocator.capacity}")
-                if not self.kv.allocate(slot, tokens_needed):
-                    self.admission_stalls += 1
-                    break  # FIFO: wait for a retirement to free pages
-                self._bt = self.kv.table()
+            # admission blocks on allocator pressure, not slot count: the
+            # request needs pages for its prompt + full budget (slab
+            # backends always have room — advance is a bound check there).
+            tokens_needed = min(n + self.queue[0].max_new_tokens,
+                                self.max_len)
+            if not self.kv.can_ever_fit(tokens_needed):
+                raise ValueError(
+                    f"request needs pages for {tokens_needed} tokens but "
+                    f"the pool can never hold them")
+            if not self.backend.advance(self.kv, slot, tokens_needed):
+                self.admission_stalls += 1
+                break  # FIFO: wait for a retirement to free pages
+            self._bt = self.kv.tables()
             req = self.queue.pop(0)
             toks = np.zeros((1, self.max_len), np.int32)
             toks[0, :n] = req.prompt[:n]
-            last_logits, slot_cache = self._prefill(
+            last_logits, self.caches = self._prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(n, jnp.int32),
-                self.caches if self.kv is not None else None,
-                self._bt[slot:slot + 1] if self.kv is not None else None)
-            self._write_slot_cache(slot, slot_cache)
+                jnp.asarray(slot, jnp.int32), self.caches,
+                self._slot_tables(slot))
             self._rng, sub = jax.random.split(self._rng)
             eos_arr = serving_steps.as_eos_array(req.eos_id, 1)
             first, _ = serving_steps.first_token(
@@ -207,12 +209,12 @@ class ContinuousBatchingEngine:
             req.done_step = self.step_count
             self.finished.append(req)
             self.active[slot] = None
-            if self.kv is not None:
-                # all of the request's pages go back to the free list; the
-                # slot's table row points at scratch so the fixed-shape
-                # decode step keeps writing harmlessly until re-admission.
-                self.kv.free(slot)
-                self._bt = self.kv.table()
+            # all of the request's pages go back to the free lists; the
+            # slot's table rows point at scratch so the fixed-shape decode
+            # step keeps writing harmlessly until re-admission (no-op for
+            # slab backends).
+            self.backend.release(self.kv, slot)
+            self._bt = self.kv.tables()
             return True
         return False
 
@@ -276,5 +278,5 @@ class ContinuousBatchingEngine:
                 [r.first_token_step - r.submitted_step
                  for r in self.finished])) if self.finished else 0.0,
             "admission_stalls": self.admission_stalls,
-            "pages_in_use": self.kv.pages_in_use if self.kv else 0,
+            "pages_in_use": self.kv.pages_in_use,
         }

@@ -28,7 +28,7 @@ continue-from-cache feature needs per-row state freezing first.
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,26 +43,45 @@ class CountingJit:
     The wrapped python function only runs when jit (re)traces, so
     ``trace_count`` exposes compilation behaviour to tests: the serving
     engines assert the decode chunk stays at one trace across a whole
-    workload (fixed shapes + static chunk size => compile once)."""
+    workload (fixed shapes + static chunk size => compile once), including
+    with donated cache buffers and per-layer block tables.
 
-    def __init__(self, fn, *, static_argnames=()):
+    ``donate_argnums`` is forwarded to ``jax.jit``: donated cache pytrees
+    let XLA alias the input and output buffers so the functional cache
+    round-trip becomes an in-place update on platforms that support it
+    (see ``serving.cache_backend.donation_supported``)."""
+
+    def __init__(self, fn, *, static_argnames=(), donate_argnums=()):
         self.trace_count = 0
+        self.donate_argnums = tuple(donate_argnums)
 
         def counted(*args, **kwargs):
             self.trace_count += 1
             return fn(*args, **kwargs)
 
-        self._jit = jax.jit(counted, static_argnames=static_argnames)
+        self._jit = jax.jit(counted, static_argnames=static_argnames,
+                            donate_argnums=self.donate_argnums)
 
     def __call__(self, *args, **kwargs):
         return self._jit(*args, **kwargs)
 
 
-def make_decode_chunk(ctx):
+def make_decode_chunk(ctx, *, donate: Optional[bool] = None):
     """Jitted ``decode_chunk`` specialized to one StepCtx — the single
-    compiled decode entry point both serving engines share."""
+    compiled decode entry point both serving engines share.
+
+    ``donate=None`` (default) donates the caches argument whenever the
+    platform can alias donated buffers (no-op on CPU); True/False force it.
+    Every call site passes the previous chunk's returned caches, so the
+    donated input is always dead by construction.
+    """
+    if donate is None:
+        argnums = ctx.backend.donate_argnums((2,))
+    else:
+        argnums = (2,) if donate else ()
     return CountingJit(functools.partial(decode_chunk, ctx=ctx),
-                       static_argnames=("num_steps", "temperature", "top_k"))
+                       static_argnames=("num_steps", "temperature", "top_k"),
+                       donate_argnums=argnums)
 
 
 def decode_chunk(
@@ -74,7 +93,7 @@ def decode_chunk(
     eos_ids: jax.Array,    # (B,) int32 — per-row EOS id, -1 = none
     done: jax.Array,       # (B,) bool — row finished (EOS seen / inactive)
     rng: jax.Array,
-    block_tables: jax.Array = None,  # (B, max_pages) int32 for paged modes
+    block_tables=None,  # {group: (B, span) int32} for paged modes
     *,
     ctx,                   # StepCtx (decode mode) — closed over via partial
     num_steps: int,
@@ -90,9 +109,10 @@ def decode_chunk(
     hit EOS, exhausted its budget, or was inactive on entry).  The returned
     ``done`` includes budget exhaustion, so callers can stop polling.
 
-    ``block_tables`` (paged cache modes) rides through the whole scan as a
-    fixed-shape constant: page allocation changes between chunks never
-    re-specialize the compiled graph, only the table *values* change.
+    ``block_tables`` (paged cache modes) is a per-page-group dict of
+    fixed-shape tables riding through the whole scan as constants: page
+    allocation changes between chunks never re-specialize the compiled
+    graph, only the table *values* change.
     """
 
     def one(carry, step_rng):

@@ -33,7 +33,10 @@ def test_spmd_parity_suite():
 @pytest.mark.slow
 def test_dryrun_single_combo_executes():
     """The dry-run entry point itself (with its 512-device flag) lowers,
-    compiles and reports a roofline for one combo."""
+    compiles and reports a roofline for one combo.  The decode shape also
+    pins the lm_decode_step embedding fix: no involuntary rematerialization
+    of the sharded table (stderr) and no embed-sized all-gather (asserted
+    inside run_combo; a violation turns the combo status to error)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env.pop("XLA_FLAGS", None)
@@ -44,3 +47,6 @@ def test_dryrun_single_combo_executes():
     sys.stdout.write(r.stdout[-2000:])
     assert r.returncode == 0
     assert "[ok" in r.stdout
+    assert "Involuntary full rematerialization" not in r.stderr, (
+        "the decode-step embedding gather is rematerializing the sharded "
+        "table again (transformer._decode_embed)")

@@ -316,8 +316,10 @@ ACCOUNTING_ARCHS = ["gpt2-small", "llama3-8b", "recurrentgemma-9b"]
 
 @pytest.mark.parametrize("arch", ACCOUNTING_ARCHS)
 def test_fp_page_pools_match_eq38(arch):
-    """Materialized fp page pools == eq. 38 + exactly one scratch page per
-    pool (page-granularity rounding; max_len is page-aligned here)."""
+    """Materialized fp page pools == per-layer eq. 38 rounded to page
+    granularity + one scratch page per pool, with windowed (SWA) layers
+    sized by their ``ceil(window/page_size)`` page ring instead of
+    max_len (max_len is page-aligned here)."""
     cfg = get_config(arch).reduced()
     seq_len, ps = 128, 16
     ctx = StepCtx(cfg=cfg, mode="decode", astra_mode="off", cache_mode="paged")
@@ -326,11 +328,26 @@ def test_fp_page_pools_match_eq38(arch):
     measured = pool_bytes(kv.init_cache())
     assert measured == kv.pool_bytes()  # analytic == materialized
     assert measured == paged_pool_bytes(cfg, max_len=seq_len, page_size=ps,
-                                        cache_mode="paged", slots=1,
+                                        vq_codes=False, slots=1,
                                         dtype_bytes=4)
-    predicted = kv_cache_bytes_fp(cfg, seq_len, batch=1, bytes_per_val=4)
-    scratch = 2 * _attn_layers(cfg) * ps * cfg.d_kv * 4
-    assert measured == predicted + scratch
+    # per-layer: a windowed layer holds (span + 1 scratch) pages of its ring
+    from repro.models.transformer import ATTN_KINDS, stages
+
+    predicted = 0
+    for kinds, reps in stages(cfg):
+        for kind in kinds:
+            if kind not in ATTN_KINDS:
+                continue
+            window = cfg.window_size if kind == "local" else 0
+            span = min(-(-window // ps), seq_len // ps) if window \
+                else seq_len // ps
+            predicted += 2 * reps * (span + 1) * ps * cfg.d_kv * 4
+    assert measured == predicted
+    if not any(k == "local" for ks, _ in stages(cfg) for k in ks):
+        # all-global archs: per-layer accounting reduces to plain eq. 38
+        eq38 = kv_cache_bytes_fp(cfg, seq_len, batch=1, bytes_per_val=4)
+        scratch = 2 * _attn_layers(cfg) * ps * cfg.d_kv * 4
+        assert measured == eq38 + scratch
     assert _attn_layers(cfg) > 0  # rg pattern counts its local-attn layers
 
 
@@ -348,7 +365,7 @@ def test_code_page_pools_match_eq39_codes_term(arch):
     kv = PagedKVCache(cfg, slots=1, max_len=seq_len, ctx=ctx, page_size=ps)
     measured = pool_bytes(kv.init_cache())
     assert measured == paged_pool_bytes(cfg, max_len=seq_len, page_size=ps,
-                                        cache_mode="paged_vq", slots=1)
+                                        vq_codes=True, slots=1)
     codes = kv_cache_bytes_codes(cfg, seq_len)
     scratch = 2 * _attn_layers(cfg) * ps * cfg.astra.groups
     assert measured == codes + scratch
