@@ -1,0 +1,208 @@
+"""Serving benchmark: prefill/decode throughput + compile/sync accounting.
+
+Writes ``BENCH_serving.json`` — the serving-perf trajectory every later
+perf PR diffs against.  Sections:
+
+* **prefill**: static-engine wall-clock and tok/s vs prompt length at a
+  fixed ``max_len`` for both prefill modes ("padded" = legacy one-shot
+  prefill, "chunked" = the bucketed chunk pipeline).
+* **admission**: the headline ``short_prompt_speedup`` — one short
+  (<=128-token) request admitted through the continuous engine, whose
+  padded path really does prefill a full ``(1, max_len)`` buffer.  Under a
+  >=1024 ``max_len`` the chunked pipeline must admit it measurably (>=2x)
+  faster: prefill cost scales with the prompt, not ``max_len``.
+* **decode**: steady-state decode steps/s through the shared jitted chunk.
+* **continuous**: ContinuousBatchingEngine drain stats (tok/s, TTFT,
+  prefill chunk ticks) under chunked admission.
+* compile counts (CountingJit traces) and host syncs for every engine run.
+
+Usage:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+
+def _engine(cfg, params, mode, max_len, **kw):
+    from repro.serving.engine import ServingEngine
+
+    return ServingEngine(cfg, params, max_len=max_len, astra_mode="off",
+                         prefill_mode=mode, **kw)
+
+
+def bench_prefill(cfg, params, *, max_len, prompt_lens, repeats, seed=0):
+    """Time generate(max_new_tokens=1) — prefill + one sampled token — per
+    prompt length for both prefill modes."""
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    out = {}
+    for mode in ("padded", "chunked"):
+        eng = _engine(cfg, params, mode, max_len, decode_chunk=1)
+        rows = []
+        for pl in prompt_lens:
+            prompts = [rng.randint(1, cfg.vocab_size, size=pl).tolist()]
+            eng.generate(prompts, max_new_tokens=1)  # compile warmup
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                eng.generate(prompts, max_new_tokens=1, seed=seed)
+            dt = (time.perf_counter() - t0) / repeats
+            rows.append({"prompt_len": int(pl), "wall_s": dt,
+                         "prefill_tok_per_s": pl / dt})
+        out[mode] = {
+            "rows": rows,
+            "prefill_compiles": (eng._prefill_chunk.trace_count
+                                 if mode == "chunked"
+                                 else eng._prefill.trace_count),
+            "host_syncs": eng.host_syncs,
+        }
+    return out
+
+
+def bench_decode(cfg, params, *, max_len, batch, max_new, repeats, seed=0):
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(1, cfg.vocab_size, size=8).tolist()
+               for _ in range(batch)]
+    eng = _engine(cfg, params, "chunked", max_len, decode_chunk=8)
+    eng.generate(prompts, max_new_tokens=max_new)  # compile warmup
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        eng.generate(prompts, max_new_tokens=max_new, seed=seed)
+    dt = (time.perf_counter() - t0) / repeats
+    return {
+        "batch": batch, "max_new_tokens": max_new,
+        "decode_steps_per_s": max_new / dt,
+        "decode_tok_per_s": batch * max_new / dt,
+        "decode_compiles": eng._decode_chunk.trace_count,
+        "host_syncs": eng.host_syncs,
+    }
+
+
+def bench_admission(cfg, params, *, max_len, prompt_len, repeats, seed=0):
+    """Admission latency for ONE short request per prefill mode: submit +
+    drain with a 1-token budget, so the measurement is the scheduler's
+    prefill path (padded = one (1, max_len)-wide step; chunked = the
+    bucketed pipeline with prompt-sized attention views)."""
+    import numpy as np
+
+    from repro.serving.scheduler import ContinuousBatchingEngine
+
+    rng = np.random.RandomState(seed)
+    prompt = rng.randint(1, cfg.vocab_size, size=prompt_len).tolist()
+    out = {}
+    for mode in ("padded", "chunked"):
+        eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=max_len,
+                                       decode_chunk=1, prefill_mode=mode)
+        eng.submit(prompt, max_new_tokens=1)
+        eng.run_until_drained()  # compile warmup
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            eng.submit(prompt, max_new_tokens=1)
+            eng.run_until_drained()
+        out[mode] = {"wall_s": (time.perf_counter() - t0) / repeats,
+                     "prefill_compiles": (eng._prefill_chunk.trace_count
+                                          if mode == "chunked"
+                                          else eng._prefill.trace_count)}
+    out["prompt_len"] = int(prompt_len)
+    out["speedup_chunked_vs_padded"] = (out["padded"]["wall_s"]
+                                        / out["chunked"]["wall_s"])
+    return out
+
+
+def bench_continuous(cfg, params, *, max_len, n_requests, prompt_len,
+                     max_new, seed=0):
+    import numpy as np
+
+    from repro.serving.scheduler import ContinuousBatchingEngine
+
+    rng = np.random.RandomState(seed)
+    eng = ContinuousBatchingEngine(cfg, params, slots=4, max_len=max_len,
+                                   decode_chunk=4)
+    for _ in range(n_requests):
+        pl = int(rng.randint(2, prompt_len + 1))
+        eng.submit(rng.randint(1, cfg.vocab_size, size=pl).tolist(),
+                   max_new_tokens=max_new)
+    stats = eng.run_until_drained()
+    stats["prefill_chunk_ticks"] = eng.prefill_chunk_ticks
+    stats["prefill_compiles"] = eng._prefill_chunk.trace_count
+    stats["decode_compiles"] = eng._decode_chunk.trace_count
+    stats["host_syncs"] = eng.host_syncs
+    return stats
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small max_len, one repeat)")
+    ap.add_argument("--arch", default="gpt2-small")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serving.json"))
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np  # noqa: F401  (seeded helpers above)
+
+    from repro.configs import get_config
+    from repro.models import model_factory as mf
+
+    cfg = get_config(args.arch).reduced()
+    cfg = dataclasses.replace(
+        cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+    params = mf.init_params(jax.random.PRNGKey(0), cfg)
+
+    if args.smoke:
+        max_len, prompt_lens, repeats = 256, (16, 48), 1
+        adm_kw = dict(prompt_len=24, repeats=1)
+        decode_kw = dict(batch=2, max_new=16, repeats=1)
+        cont_kw = dict(n_requests=4, prompt_len=24, max_new=6)
+    else:
+        max_len, prompt_lens, repeats = 1024, (16, 64, 128, 256, 512), 3
+        adm_kw = dict(prompt_len=64, repeats=3)
+        decode_kw = dict(batch=4, max_new=64, repeats=3)
+        cont_kw = dict(n_requests=12, prompt_len=96, max_new=24)
+
+    t0 = time.time()
+    prefill = bench_prefill(cfg, params, max_len=max_len,
+                            prompt_lens=prompt_lens, repeats=repeats)
+    admission = bench_admission(cfg, params, max_len=max_len, **adm_kw)
+    report = {
+        "arch": cfg.name,
+        "smoke": bool(args.smoke),
+        "max_len": max_len,
+        "prefill": prefill,
+        "admission": admission,
+        "short_prompt_speedup_chunked_vs_padded":
+            admission["speedup_chunked_vs_padded"],
+        "decode": bench_decode(cfg, params, max_len=max_len, **decode_kw),
+        "continuous": bench_continuous(cfg, params, max_len=max_len,
+                                       **cont_kw),
+        "bench_wall_s": time.time() - t0,
+    }
+    out_path = os.path.abspath(args.out)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"# serve_bench ({cfg.name}, max_len={max_len})")
+    for mode in ("padded", "chunked"):
+        for r in prefill[mode]["rows"]:
+            print(f"  prefill[{mode}] len={r['prompt_len']:4d}: "
+                  f"{r['wall_s'] * 1e3:8.1f} ms  "
+                  f"({r['prefill_tok_per_s']:8.0f} tok/s)")
+    print(f"  admission len={admission['prompt_len']}: "
+          f"padded {admission['padded']['wall_s'] * 1e3:.1f} ms, "
+          f"chunked {admission['chunked']['wall_s'] * 1e3:.1f} ms -> "
+          f"{admission['speedup_chunked_vs_padded']:.2f}x")
+    print(f"  decode: {report['decode']['decode_steps_per_s']:.1f} steps/s")
+    print(f"  continuous: {report['continuous']['tok_per_s']:.1f} tok/s, "
+          f"{report['continuous']['prefill_chunk_ticks']} prefill ticks")
+    print(f"  -> {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,10 @@ Two tuners share this entry point:
   (results/autotune/decode_chunk_<arch>.json) that the engines read at
   construction — see ``repro.serving.autotune``.
 
+* **Prefill-chunk sweep** (``--prefill-chunk``): same machinery for the
+  chunked-prefill bucket cap (results/autotune/prefill_chunk_<arch>.json),
+  read by both engines when ``prefill_chunk`` is not given.
+
 Usage:
   python -m repro.launch.autotune --arch recurrentgemma-9b --shape decode_32k
   python -m repro.launch.autotune --arch all --shape decode_32k
@@ -118,6 +122,31 @@ def tune_decode_chunk(arch: str, *, batch: int, reduced: bool,
     return out
 
 
+def tune_prefill_chunk(arch: str, *, batch: int, reduced: bool,
+                       cache_mode: str = "fp", max_len: int = 512,
+                       candidates=(32, 128, 512)) -> dict:
+    """Sweep the chunked-prefill bucket cap for one (arch, batch) and
+    persist the winner (results/autotune/prefill_chunk_<arch>.json) that
+    both engines read at construction."""
+    import jax
+
+    from repro.models import model_factory as mf
+    from repro.serving import autotune as serving_autotune
+
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    params = mf.init_params(jax.random.PRNGKey(0), cfg)
+    out = serving_autotune.sweep_prefill_chunk(
+        cfg, params, batch=batch, cache_mode=cache_mode, max_len=max_len,
+        candidates=tuple(candidates))
+    for chunk, t in sorted(out["timings_s"].items()):
+        print(f"  prefill_chunk={chunk:4d} -> {t:.3f}s/prefill-set")
+    print(f"   best: prefill_chunk={out['best_prefill_chunk']} "
+          f"-> {out.get('path', '(not persisted)')}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -126,19 +155,29 @@ def main() -> None:
     ap.add_argument("--decode-chunk", action="store_true",
                     help="sweep the serving decode-chunk size instead of "
                          "the dry-run sharding grid")
+    ap.add_argument("--prefill-chunk", action="store_true",
+                    help="sweep the chunked-prefill bucket cap instead of "
+                         "the dry-run sharding grid")
     ap.add_argument("--batch", type=int, default=4,
-                    help="batch size for the decode-chunk sweep")
+                    help="batch size for the chunk sweeps")
     ap.add_argument("--cache-mode", default="fp",
-                    help="cache layout the decode-chunk sweep runs through")
+                    help="cache layout the chunk sweeps run through")
     ap.add_argument("--reduced", action="store_true",
                     help="sweep the reduced config (CPU-sized)")
     args = ap.parse_args()
     archs = ASSIGNED if args.arch == "all" else [args.arch]
-    if args.decode_chunk:
+    if args.decode_chunk or args.prefill_chunk:
         for arch in archs:
-            print(f"== {arch} decode-chunk sweep (batch={args.batch})")
-            tune_decode_chunk(arch, batch=args.batch, reduced=args.reduced,
-                              cache_mode=args.cache_mode)
+            if args.decode_chunk:
+                print(f"== {arch} decode-chunk sweep (batch={args.batch})")
+                tune_decode_chunk(arch, batch=args.batch,
+                                  reduced=args.reduced,
+                                  cache_mode=args.cache_mode)
+            if args.prefill_chunk:
+                print(f"== {arch} prefill-chunk sweep (batch={args.batch})")
+                tune_prefill_chunk(arch, batch=args.batch,
+                                   reduced=args.reduced,
+                                   cache_mode=args.cache_mode)
         return
     if not args.shape:
         ap.error("--shape is required for the dry-run grid")

@@ -21,6 +21,10 @@ from repro.core.astra_block import (
     sp_full_attention_spmd,
 )
 from repro.core.mixed_attention import (
+    NEG_INF,
+    _gqa_combine,
+    _gqa_scores,
+    _softcap,
     full_attention,
     partial_attention_stats,
 )
@@ -176,11 +180,13 @@ def _aux_from_sim(a, cfg) -> Dict[str, jax.Array]:
 
 def init_attn_cache(cfg, kind: str, batch: int, max_len: int, ctx: StepCtx,
                     dtype=jnp.bfloat16, *, page_size: int = 0,
-                    num_pages=0) -> Dict[str, jax.Array]:
+                    num_pages=0,
+                    prefill_scratch: bool = False) -> Dict[str, jax.Array]:
     """Per-layer cache pytree for this step's backend (``num_pages`` may be
     a per-page-group dict for the paged layouts)."""
     return ctx.backend.init_cache(cfg, kind, batch, max_len, dtype,
-                                  page_size=page_size, num_pages=num_pages)
+                                  page_size=page_size, num_pages=num_pages,
+                                  prefill_scratch=prefill_scratch)
 
 
 def _write_at(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
@@ -229,3 +235,56 @@ def _masked_decode_attn(params, q, k_all, v_all, valid, cap) -> jax.Array:
                                       softcap=cap)
     out = o / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
     return out.reshape(b, 1, -1) @ params["wo"]
+
+
+def attention_chunk(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (B, W, D) one prefill chunk of hidden states
+    cache: Dict[str, jax.Array],
+    chunk_start: jax.Array,  # scalar int32: global offset of this chunk
+    lengths: jax.Array,  # (B,) true prompt length per row
+    *,
+    ctx: StepCtx,
+    kind: str,
+    vq_params: Optional[Dict] = None,
+    block_tables=None,
+    history_len: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One chunked-prefill step: RoPE at the chunk's global positions, then
+    the backend writes the chunk's K/V into the cache and attends causally
+    over everything written so far (viewing at most the first
+    ``history_len`` positions when set).  Returns (y, new_cache)."""
+    cfg = ctx.cfg
+    w = x.shape[1]
+    positions = chunk_start + jnp.arange(w)[None, :]
+    q, k_new, v_new = qkv(params, x, cfg, positions, kind_theta(kind, cfg))
+    return ctx.backend.chunk_attend(
+        params, q, k_new, v_new, cache, chunk_start, lengths, ctx=ctx,
+        kind=kind, vq_params=vq_params, block_tables=block_tables,
+        history_len=history_len)
+
+
+def _masked_chunk_attn(params, q, k_all, v_all, q_pos, k_pos, window,
+                       cap) -> jax.Array:
+    """Multi-query analogue of ``_masked_decode_attn`` for a prefill chunk.
+
+    q: (B, W, H, hd); k_all/v_all: (B, S, Hkv, hd); q_pos (W,) global query
+    positions; k_pos (S,) or per-row (B, S) global key positions, negative
+    = invalid slot.  Masking is causal (+ sliding window); rows/positions
+    with no valid key (padding queries) normalize against an epsilon
+    instead of NaN-ing, exactly like the decode epilogue."""
+    b, wq = q.shape[:2]
+    kp = k_pos if k_pos.ndim == 2 else jnp.broadcast_to(
+        k_pos[None], (b, k_pos.shape[-1]))
+    valid = (kp[:, None, :] >= 0) & (kp[:, None, :] <= q_pos[None, :, None])
+    if window:
+        valid &= kp[:, None, :] > q_pos[None, :, None] - window
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s = _softcap(_gqa_scores(q, k_all, scale), cap)  # (B, H, W, S)
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None], jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1)  # (B, H, W)
+    out = _gqa_combine(p, v_all)  # (B, W, H, hd) un-normalised
+    out = out / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
+    return out.reshape(b, wq, -1) @ params["wo"]

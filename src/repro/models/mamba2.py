@@ -73,9 +73,24 @@ def ssd_scan(
     Cm: jax.Array,  # (b, t, n)
     chunk: int,
     init_state: Optional[jax.Array] = None,  # (b, h, p, n)
+    num_valid: Optional[jax.Array] = None,  # (b,) per-row valid prefix length
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Returns (y (b,t,h,p), final_state (b,h,p,n), total_logdecay (b,h))."""
+    """Returns (y (b,t,h,p), final_state (b,h,p,n), total_logdecay (b,h)).
+
+    ``num_valid`` truncates the *state recurrence* per row: positions
+    ``>= num_valid[b]`` get ``dt = 0``, which is exactly the identity step
+    (decay ``exp(0)=1``, update ``dt*x*B = 0``), so ``final_state`` is the
+    state at each row's true boundary — the buffer tail (right-padding in a
+    serving prefill, or positions past a row's prompt end inside a prefill
+    chunk) can never fold into the carried SSD state.  Outputs at positions
+    before ``num_valid`` are untouched (the recurrence is causal), so one
+    scan serves every row of a ragged batch.  ``num_valid=None`` keeps the
+    full-sequence behaviour; rows with ``num_valid == 0`` return
+    ``init_state`` (or zeros) unchanged."""
     b, t, h, p = x.shape
+    if num_valid is not None:
+        keep = jnp.arange(t)[None, :, None] < num_valid[:, None, None]
+        dt = jnp.where(keep, dt, 0.0)
     n = Bm.shape[-1]
     q = min(chunk, t)
     pad = (-t) % q
@@ -203,13 +218,29 @@ def mamba_forward(
     *,
     ctx: StepCtx,
     cache: Optional[Dict] = None,
+    lengths: Optional[jax.Array] = None,
+    start: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full-sequence forward (train/prefill).  If ctx.seq_sharded, runs the
-    sharded SSD with conv-halo ppermute + (decay, state) carry exchange."""
+    sharded SSD with conv-halo ppermute + (decay, state) carry exchange.
+
+    Serving prefill passes ``lengths`` (per-row true prompt length) and, for
+    chunked prefill, ``start`` (this buffer's global offset): the carried
+    cache then holds each row's state/conv-tail at its *real* boundary
+    ``min(lengths - start, T)`` — ``ssd_scan``'s truncated states mean
+    right-padding (or a chunk's tail past a row's prompt end) never pollutes
+    the SSD state, and the conv tail is gathered from the
+    previous-tail + current-buffer concatenation so boundaries inside the
+    first ``conv_width - 1`` positions of a chunk stay exact."""
     cfg = ctx.cfg
     d_in, nh, p, n = dims(cfg)
     b, t, _ = x.shape
     z, xbc, dt_raw = _split_proj(params, x, cfg)
+
+    num_valid = None
+    if cache is not None and lengths is not None:
+        s0 = jnp.asarray(0 if start is None else start, jnp.int32)
+        num_valid = jnp.clip(lengths - s0, 0, t)
 
     def mix_local(xbc_l, dt_raw_l, z_l, prev_conv, init_state, collect_axis):
         xbc_c = jax.nn.silu(causal_conv(xbc_l, params["conv_w"],
@@ -219,7 +250,7 @@ def mamba_forward(
         dt = jax.nn.softplus(dt_raw_l.astype(jnp.float32) + params["dt_bias"])
         A = -jnp.exp(params["A_log"].astype(jnp.float32))
         y, fin, logdec = ssd_scan(x_ssm, dt, A, Bm, Cm, cfg.ssm_chunk,
-                                  init_state)
+                                  init_state, num_valid=num_valid)
         y = y + params["D"][None, None, :, None] * x_ssm
         y = y.reshape(b, -1, d_in)
         y = _rms(y * jax.nn.silu(z_l), params["norm_scale"].astype(jnp.float32))
@@ -277,10 +308,32 @@ def mamba_forward(
     y, fin, _, xbc_used = mix_local(xbc, dt_raw, z, prev_conv, init_state, None)
     new_cache = None
     if cache is not None:
-        width = cfg.conv_width
-        new_cache = {"conv": xbc_used[:, -(width - 1):, :].astype(cache["conv"].dtype),
+        new_cache = {"conv": boundary_conv_tail(prev_conv, xbc_used,
+                                                num_valid).astype(
+                                                    cache["conv"].dtype),
                      "ssm": fin}
     return y, new_cache
+
+
+def boundary_conv_tail(prev: Optional[jax.Array], xs: jax.Array,
+                       num_valid: Optional[jax.Array]) -> jax.Array:
+    """Last ``W-1`` conv inputs at each row's real boundary.
+
+    ``prev`` is the previous tail (B, W-1, C) (zeros/None at sequence
+    start); ``xs`` the current buffer's conv inputs (B, T, C);
+    ``num_valid`` (B,) how many leading positions of ``xs`` are real for
+    each row (None = all).  Gathering from ``concat(prev, xs)`` keeps rows
+    whose boundary falls inside the first W-1 positions of a chunk exact,
+    and rows with ``num_valid == 0`` keep their previous tail untouched."""
+    b, t, c = xs.shape
+    if prev is None:
+        prev = jnp.zeros((b, 0, c), xs.dtype)
+    w1 = prev.shape[1]
+    ext = jnp.concatenate([prev.astype(xs.dtype), xs], axis=1)
+    if num_valid is None:
+        return ext[:, t:]
+    idx = num_valid[:, None] + jnp.arange(w1)[None, :]
+    return jnp.take_along_axis(ext, idx[..., None], axis=1)
 
 
 def mamba_decode(

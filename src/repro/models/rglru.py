@@ -18,7 +18,7 @@ from repro.compat import shard_map
 from repro.core.sequence_parallel import distributed_carry
 from repro.models.context import StepCtx
 from repro.models.layers import dense_init
-from repro.models.mamba2 import causal_conv, conv_step
+from repro.models.mamba2 import boundary_conv_tail, causal_conv, conv_step
 
 RG_C = 8.0
 
@@ -96,9 +96,18 @@ def rg_block_forward(
     ctx: StepCtx,
     cache: Optional[Dict] = None,
     lengths: Optional[jax.Array] = None,
+    start: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Griffin recurrent block: conv -> RG-LRU on one branch, GeLU gate on
-    the other."""
+    the other.
+
+    With a ``cache``, ``lengths`` (per-row true prompt length) and optional
+    ``start`` (this buffer's global offset under chunked prefill) pin the
+    carried state/conv-tail to each row's *real* boundary
+    ``min(lengths - start, T)``: a row whose prompt ended before this chunk
+    keeps its incoming state untouched, one ending inside it carries the
+    state at that position, one extending past it carries the full-buffer
+    state — right-padding can never fold into the recurrence."""
     cfg = ctx.cfg
     xr = x @ params["w_x"]
     gate = jax.nn.gelu((x @ params["w_gate_branch"]), approximate=True)
@@ -137,25 +146,26 @@ def rg_block_forward(
     y = (h * gate) @ params["w_out"]
     new_cache = None
     if cache is not None:
-        width = cfg.conv_width
+        t = xr.shape[1]
         if lengths is None:
-            conv_tail = xr[:, -(width - 1):, :]
+            num_valid = None
             state = states[:, -1]
         else:
             # the recurrence is position-less, so the serving prefill must
-            # carry the state at each row's *real* prompt end — folding the
+            # carry the state at each row's *real* boundary — folding the
             # buffer tail would pollute the state with right-padding junk
-            # whenever a row is shorter than the padded buffer.
-            t = xr.shape[1]
-            last = jnp.clip(lengths - 1, 0, t - 1)
-            state = jnp.take_along_axis(
-                states, last[:, None, None], axis=1)[:, 0]
-            pos = lengths[:, None] - (width - 1) + jnp.arange(width - 1)[None]
-            conv_tail = jnp.where(
-                (pos >= 0)[..., None],
-                jnp.take_along_axis(xr, jnp.clip(pos, 0, t - 1)[..., None],
-                                    axis=1),
-                0)
+            # whenever a row is shorter than the padded buffer (and, under
+            # chunked prefill, with the tail of the chunk holding its end).
+            s0 = jnp.asarray(0 if start is None else start, jnp.int32)
+            num_valid = jnp.clip(lengths - s0, 0, t)
+            at_end = jnp.take_along_axis(
+                states, jnp.clip(num_valid - 1, 0, t - 1)[:, None, None],
+                axis=1)[:, 0]
+            prev_state = (jnp.zeros_like(at_end) if init_state is None
+                          else init_state.astype(at_end.dtype))
+            # rows whose prompt ended before this buffer keep their state
+            state = jnp.where((num_valid > 0)[:, None], at_end, prev_state)
+        conv_tail = boundary_conv_tail(prev_conv, xr, num_valid)
         new_cache = {"conv": conv_tail.astype(cache["conv"].dtype),
                      "state": state.astype(jnp.float32)}
     return y, new_cache

@@ -104,10 +104,11 @@ def init_block_navq(cfg, kind: str) -> Dict:
 
 def init_block_cache(cfg, kind: str, batch: int, max_len: int, ctx: StepCtx,
                      dtype=jnp.bfloat16, *, page_size: int = 0,
-                     num_pages=0) -> Dict:
+                     num_pages=0, prefill_scratch: bool = False) -> Dict:
     if kind in ATTN_KINDS:
         return attn.init_attn_cache(cfg, kind, batch, max_len, ctx, dtype,
-                                    page_size=page_size, num_pages=num_pages)
+                                    page_size=page_size, num_pages=num_pages,
+                                    prefill_scratch=prefill_scratch)
     if kind == "rec":
         return rglru.init_rg_cache(cfg, batch, dtype)
     if kind == "ssm":
@@ -132,7 +133,15 @@ def block_forward(
     cache: Optional[Dict],
     lengths: Optional[jax.Array],
     block_tables=None,
+    chunk_start: Optional[jax.Array] = None,
+    history_len: int = 0,
 ) -> Tuple[jax.Array, Dict[str, jax.Array], Dict, Optional[Dict]]:
+    """``chunk_start`` (traced scalar) switches prefill into chunked mode:
+    ``x`` is one fixed-width chunk at global offset ``chunk_start``,
+    attention goes through ``ctx.backend.chunk_attend`` (causal over the
+    cache written so far, viewing only the first ``history_len`` positions
+    when set — a static bound from ``serving.steps.view_bucket``), and
+    recurrent layers carry their boundary state across chunks explicitly."""
     cfg = ctx.cfg
     aux = {"commit": jnp.zeros((), jnp.float32),
            "moe_aux": jnp.zeros((), jnp.float32)}
@@ -149,6 +158,11 @@ def block_forward(
             y, new_cache = attn.attention_decode(
                 p["attn"], h, cache, lengths, ctx=ctx, kind=kind,
                 vq_params=p.get("vq"), block_tables=block_tables)
+        elif chunk_start is not None:
+            y, new_cache = attn.attention_chunk(
+                p["attn"], h, cache, chunk_start, lengths, ctx=ctx,
+                kind=kind, vq_params=p.get("vq"),
+                block_tables=block_tables, history_len=history_len)
         else:
             y, a, new_cache = attn.attention_forward(
                 p["attn"], h, ctx=ctx, kind=kind, causal=causal,
@@ -182,7 +196,8 @@ def block_forward(
         else:
             y, new_cache = rglru.rg_block_forward(p["rec"], h, ctx=ctx,
                                                   cache=cache,
-                                                  lengths=lengths)
+                                                  lengths=lengths,
+                                                  start=chunk_start)
         x = x + y.astype(x.dtype)
         h2 = apply_norm(p["norm2"], x, cfg.norm)
         y2 = apply_mlp(p["mlp"], h2, cfg.activation)
@@ -193,7 +208,8 @@ def block_forward(
             y, new_cache = mamba2.mamba_decode(p["ssm"], h, cache, ctx=ctx)
         else:
             y, new_cache = mamba2.mamba_forward(p["ssm"], h, ctx=ctx,
-                                                cache=cache)
+                                                cache=cache, lengths=lengths,
+                                                start=chunk_start)
         return x + y.astype(x.dtype), aux, new_navq, new_cache
 
     raise ValueError(kind)
@@ -258,16 +274,20 @@ def init_lm_navq(cfg) -> List[Dict]:
 
 def init_lm_cache(cfg, batch: int, max_len: int, ctx: StepCtx,
                   dtype=jnp.bfloat16, *, page_size: int = 0,
-                  num_pages=0) -> List[Dict]:
+                  num_pages=0, prefill_scratch: bool = False) -> List[Dict]:
     """``num_pages`` is an int for a single shared pool size or a
     per-page-group dict (``serving.kv_cache.PagedKVCache.num_pages_by_group``)
-    so windowed layers get their capped pools."""
+    so windowed layers get their capped pools.  ``prefill_scratch`` adds the
+    fp prefill-view slabs vq-coded layers need under chunked prefill
+    (strip with ``serving.cache_backend.strip_prefill_scratch`` before the
+    tree enters a decode step)."""
     out = []
     for kinds, reps in stages(cfg):
         sub = {}
         for j, kind in enumerate(kinds):
             c = init_block_cache(cfg, kind, batch, max_len, ctx, dtype,
-                                 page_size=page_size, num_pages=num_pages)
+                                 page_size=page_size, num_pages=num_pages,
+                                 prefill_scratch=prefill_scratch)
             sub[f"sub{j}"] = jax.tree.map(
                 lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), c)
         out.append(sub)
@@ -305,6 +325,8 @@ def run_stages(
     caches: Optional[List[Dict]],
     lengths: Optional[jax.Array],
     block_tables=None,
+    chunk_start: Optional[jax.Array] = None,
+    history_len: int = 0,
 ) -> Tuple[jax.Array, Dict[str, jax.Array], List[Dict], Optional[List[Dict]]]:
     commit = jnp.zeros((), jnp.float32)
     moe_aux = jnp.zeros((), jnp.float32)
@@ -327,7 +349,8 @@ def run_stages(
                 xx, aux, n_new, c_new = block_forward(
                     p_l[f"sub{j}"], xx, ctx=ctx, kind=kind, causal=causal,
                     rng=jax.random.fold_in(rng_l, j), navq_stats=nst,
-                    cache=cst, lengths=lengths, block_tables=block_tables)
+                    cache=cst, lengths=lengths, block_tables=block_tables,
+                    chunk_start=chunk_start, history_len=history_len)
                 cm = cm + aux["commit"]
                 ma = ma + aux["moe_aux"]
                 if n_new:
@@ -380,6 +403,54 @@ def lm_forward(
     return logits, aux, new_navq, new_caches
 
 
+def lm_prefill_chunk(
+    params: Dict,
+    tokens: jax.Array,  # (B, W) one fixed-width chunk of the prompts
+    chunk_start: jax.Array,  # scalar int32: global offset of this chunk
+    caches: List[Dict],
+    lengths: jax.Array,  # (B,) true prompt length per row
+    last_logits: jax.Array,  # (B, V) running last-position logits
+    *,
+    ctx: StepCtx,
+    block_tables=None,
+    history_len: int = 0,
+) -> Tuple[jax.Array, List[Dict]]:
+    """One chunked-prefill step: advance every row's cache by one chunk and
+    keep the last-*real*-position logits on device.
+
+    Unlike ``lm_forward``, the logits matmul runs on exactly one position
+    per row — the chunk-local index of ``lengths - 1`` (clipped) — and
+    ``last_logits`` is where-updated only for rows whose prompt actually
+    ends inside this chunk, so after the final chunk it holds every row's
+    next-token distribution regardless of how ragged the batch is.
+    Returns ``(last_logits, new_caches)``.
+    """
+    cfg = ctx.cfg
+    b, w = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if "pos_embed" in params:
+        # per-position clipped gather: only bucket-overhang positions (junk
+        # past every row's prompt) clamp — a clamped contiguous slice would
+        # shift the embeddings of the *real* tokens in the tail chunk
+        pos = jnp.clip(chunk_start + jnp.arange(w), 0, cfg.max_seq_len - 1)
+        x = x + jnp.take(params["pos_embed"], pos, axis=0)[None]
+    x = x.astype(_adtype(cfg, ctx))
+    x, _, _, new_caches = run_stages(
+        params["stages"], x, ctx=ctx, cfg=cfg, causal=True, rng=None,
+        navq_state=None, caches=caches, lengths=lengths,
+        block_tables=block_tables, chunk_start=chunk_start,
+        history_len=history_len)
+    idx = jnp.clip(lengths - 1 - chunk_start, 0, w - 1)
+    xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # (B, 1, D)
+    xl = apply_norm(params["final_norm"], xl, cfg.norm)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = _head_matmul(xl, head, cfg, ctx)[:, 0]
+    logits = softcap(logits, cfg.final_logit_softcap)
+    ends_here = (lengths - 1 >= chunk_start) & (lengths - 1 < chunk_start + w)
+    last_logits = jnp.where(ends_here[:, None], logits, last_logits)
+    return last_logits, new_caches
+
+
 def _dim_axes(mesh, dim_size: int, candidates=("data", "model")):
     """The mesh-axis group (of ``candidates`` present in the mesh) that can
     shard a dim of ``dim_size``; () => replicate."""
@@ -394,6 +465,28 @@ def _constrain(x, mesh, spec):
     from jax.sharding import NamedSharding
 
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _head_matmul(x: jax.Array, head: jax.Array, cfg, ctx: StepCtx
+                 ) -> jax.Array:
+    """(B, 1, D) @ (D, V) logits head, mesh-aware.
+
+    Under a mesh, match x's d_model sharding to the head's (FSDP shards the
+    head on d_model): the matmul then runs as local partial dots plus one
+    tiny (B, 1, V) reduce, instead of materializing the full (D, V) head
+    per device — a table-sized all-gather the dry-run decode assert
+    forbids.  Shared by the decode step and the prefill chunk (which runs
+    this once per chunk, so the all-gather would multiply)."""
+    if ctx.mesh.mesh is None:
+        return (x @ head.astype(x.dtype)).astype(jnp.float32)
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh.mesh
+    bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+    d_axes = _dim_axes(mesh, cfg.d_model)
+    x = _constrain(x, mesh, P(None, None, d_axes or None))
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return _constrain(logits, mesh, P(bspec, None, None))
 
 
 def _decode_embed(params: Dict, token: jax.Array, lengths: jax.Array,
@@ -451,22 +544,7 @@ def lm_decode_step(
         block_tables=block_tables)
     x = apply_norm(params["final_norm"], x, cfg.norm)
     head = params["lm_head"] if "lm_head" in params else params["embed"].T
-    if ctx.mesh.mesh is not None:
-        # match x's d_model sharding to the head's (FSDP shards the head on
-        # d_model): the logits matmul then runs as local partial dots plus
-        # one tiny (B, 1, V) reduce, instead of materializing the full
-        # (D, V) head per device — a table-sized all-gather the dry-run
-        # decode assert forbids.
-        from jax.sharding import PartitionSpec as P
-
-        mesh = ctx.mesh.mesh
-        bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
-        d_axes = _dim_axes(mesh, cfg.d_model)
-        x = _constrain(x, mesh, P(None, None, d_axes or None))
-        logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
-        logits = _constrain(logits, mesh, P(bspec, None, None))
-    else:
-        logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    logits = _head_matmul(x, head, cfg, ctx)
     logits = softcap(logits, cfg.final_logit_softcap)
     return logits, new_caches
 

@@ -1,15 +1,23 @@
-"""Decode-chunk autotune: sweep + persisted winners (results/autotune/).
+"""Serving-chunk autotune: sweeps + persisted winners (results/autotune/).
 
-The decode chunk size trades host-sync frequency against wasted tail work
-(a retired row keeps burning flops until its chunk ends), and the best
-value depends on (arch, batch).  ``sweep_decode_chunk`` times real
-generates through the serving engines — i.e. through the ``CacheBackend``
-interface, so every cache layout is sweepable — and persists the winner as
-``results/autotune/decode_chunk_<arch>.json``.  Both engines read the
-persisted value at construction when ``decode_chunk`` is not given
-(``load_decode_chunk``), falling back to their static defaults.
+Two per-(arch, batch) knobs share one store:
 
-The CLI entry point is ``python -m repro.launch.autotune --decode-chunk``.
+* **decode chunk** — trades host-sync frequency against wasted tail work
+  (a retired row keeps burning flops until its chunk ends);
+  ``sweep_decode_chunk`` persists ``decode_chunk_<arch>.json``.
+* **prefill chunk** — caps the bucketed chunked-prefill width ladder
+  (``serving.steps.PREFILL_BUCKETS``): a larger cap means fewer chunk
+  dispatches for long prompts but more padding waste and wider masked
+  attention per chunk for short ones; ``sweep_prefill_chunk`` persists
+  ``prefill_chunk_<arch>.json``.
+
+Both sweeps time real generates through the serving engines — i.e. through
+the ``CacheBackend`` interface, so every cache layout is sweepable — and
+both engines read the persisted winners at construction when the knob is
+not given explicitly, falling back to their static defaults.
+
+CLI entry points: ``python -m repro.launch.autotune --decode-chunk`` and
+``--prefill-chunk``.
 """
 from __future__ import annotations
 
@@ -22,43 +30,62 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "autotune")
 
 
-def _path(arch: str) -> str:
-    return os.path.join(RESULTS_DIR, f"decode_chunk_{arch}.json")
+def _path(kind: str, arch: str) -> str:
+    return os.path.join(RESULTS_DIR, f"{kind}_{arch}.json")
 
 
-def load_decode_chunk(arch: str, batch: Optional[int] = None) -> Optional[int]:
+def _load_knob(kind: str, arch: str, batch: Optional[int]) -> Optional[int]:
     """Persisted winner for (arch, batch): the exact-batch entry when one
     exists, else the arch-wide default; None when nothing was tuned."""
     try:
-        with open(_path(arch)) as f:
+        with open(_path(kind, arch)) as f:
             rec = json.load(f)
     except (OSError, ValueError):
         return None
     per_batch = rec.get("per_batch", {})
     if batch is not None and str(int(batch)) in per_batch:
-        return int(per_batch[str(int(batch))]["decode_chunk"])
+        return int(per_batch[str(int(batch))][kind])
     return int(rec["default"]) if rec.get("default") else None
 
 
-def save_decode_chunk(arch: str, batch: int, decode_chunk: int,
-                      timings: Optional[Dict[int, float]] = None) -> str:
+def _save_knob(kind: str, arch: str, batch: int, value: int,
+               timings: Optional[Dict[int, float]]) -> str:
     """Record a sweep winner; the most recent sweep also becomes the
     arch-wide default that batch-agnostic engines read."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = _path(arch)
+    path = _path(kind, arch)
     try:
         with open(path) as f:
             rec = json.load(f)
     except (OSError, ValueError):
         rec = {"arch": arch, "per_batch": {}}
     rec.setdefault("per_batch", {})[str(int(batch))] = {
-        "decode_chunk": int(decode_chunk),
+        kind: int(value),
         "timings_s": {str(c): float(t) for c, t in (timings or {}).items()},
     }
-    rec["default"] = int(decode_chunk)
+    rec["default"] = int(value)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
     return path
+
+
+def load_decode_chunk(arch: str, batch: Optional[int] = None) -> Optional[int]:
+    return _load_knob("decode_chunk", arch, batch)
+
+
+def save_decode_chunk(arch: str, batch: int, decode_chunk: int,
+                      timings: Optional[Dict[int, float]] = None) -> str:
+    return _save_knob("decode_chunk", arch, batch, decode_chunk, timings)
+
+
+def load_prefill_chunk(arch: str,
+                       batch: Optional[int] = None) -> Optional[int]:
+    return _load_knob("prefill_chunk", arch, batch)
+
+
+def save_prefill_chunk(arch: str, batch: int, prefill_chunk: int,
+                       timings: Optional[Dict[int, float]] = None) -> str:
+    return _save_knob("prefill_chunk", arch, batch, prefill_chunk, timings)
 
 
 def sweep_decode_chunk(cfg, params, *, batch: int = 4,
@@ -93,4 +120,44 @@ def sweep_decode_chunk(cfg, params, *, batch: int = 4,
            "best_decode_chunk": best, "timings_s": timings}
     if persist:
         out["path"] = save_decode_chunk(cfg.name, batch, best, timings)
+    return out
+
+
+def sweep_prefill_chunk(cfg, params, *, batch: int = 4,
+                        cache_mode: str = "fp", max_len: int = 512,
+                        prompt_lens: Sequence[int] = (24, 100, 300),
+                        candidates: Sequence[int] = (32, 128, 512),
+                        page_size: int = 16, repeats: int = 2, seed: int = 0,
+                        persist: bool = True) -> Dict:
+    """Time chunked prefill (generate with a 1-token budget isolates it)
+    over a mix of prompt lengths for each prefill-chunk cap and persist the
+    fastest — the winner both engines read at construction."""
+    import numpy as np
+
+    from repro.serving.engine import ServingEngine
+
+    rng = np.random.RandomState(seed)
+    prompt_sets = [
+        [rng.randint(1, cfg.vocab_size, size=pl).tolist()
+         for _ in range(batch)]
+        for pl in prompt_lens if pl < max_len - 1
+    ]
+    timings: Dict[int, float] = {}
+    for chunk in candidates:
+        eng = ServingEngine(cfg, params, max_len=max_len, astra_mode="off",
+                            cache_mode=cache_mode, decode_chunk=1,
+                            page_size=page_size, prefill_mode="chunked",
+                            prefill_chunk=int(chunk))
+        for prompts in prompt_sets:  # compile warmup, all buckets
+            eng.generate(prompts, max_new_tokens=1)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            for prompts in prompt_sets:
+                eng.generate(prompts, max_new_tokens=1, seed=seed)
+        timings[int(chunk)] = (time.perf_counter() - t0) / repeats
+    best = min(timings, key=timings.get)
+    out = {"arch": cfg.name, "batch": int(batch), "cache_mode": cache_mode,
+           "best_prefill_chunk": best, "timings_s": timings}
+    if persist:
+        out["path"] = save_prefill_chunk(cfg.name, batch, best, timings)
     return out

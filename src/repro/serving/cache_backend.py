@@ -47,6 +47,20 @@ from repro.serving import kv_cache as kvc
 
 CACHE_MODES = ("fp", "vq", "paged", "paged_vq")
 
+# fp prefill-view leaves carried by vq-coded layers during chunked prefill
+# only: chunk attention must read exact fp K/V for earlier chunks (one-shot
+# prefill attends full precision, so dequantized codes would break parity),
+# while the *persistent* cache stays codes-only.  Stripped before decode.
+SCRATCH_KEYS = frozenset({"k_fp", "v_fp"})
+
+
+def strip_prefill_scratch(caches):
+    """Drop the fp prefill-view leaves from a cache tree (host-side,
+    structural): after the last prefill chunk the decode step must see the
+    exact decode-cache structure, codes-only for vq layouts."""
+    return [{name: {k: v for k, v in sub.items() if k not in SCRATCH_KEYS}
+             for name, sub in stage.items()} for stage in caches]
+
 
 def donation_supported(platform: Optional[str] = None) -> bool:
     """True when XLA can alias donated buffers on this platform (TPU/GPU).
@@ -108,6 +122,92 @@ def _slab_prefill_fp(cache, k, v, lengths=None):
     cv = jax.lax.dynamic_update_slice_in_dim(
         cache["v"], v.astype(cache["v"].dtype), 0, 1)
     return {"k": ck, "v": cv}
+
+
+def _chunk_slab_write(buf: jax.Array, vals: jax.Array,
+                      chunk_start: jax.Array) -> jax.Array:
+    """Write a chunk (B, W, ...) at positions ``chunk_start .. +W-1`` of a
+    (B, S, ...) slab.  Bucketed chunk widths may overhang the slab end
+    (the last chunk of a prompt is padded up to its bucket), so
+    out-of-range positions are dropped rather than clamped — a clamping
+    ``dynamic_update_slice`` would shift the write window back over live
+    history."""
+    w = vals.shape[1]
+    pos = chunk_start + jnp.arange(w)
+    return buf.at[:, pos].set(vals.astype(buf.dtype), mode="drop")
+
+
+def _fp_scratch(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+    """The fp prefill-view slabs a vq-coded layer carries across chunks."""
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k_fp": jnp.zeros((batch, max_len, hkv, hd), dtype),
+            "v_fp": jnp.zeros((batch, max_len, hkv, hd), dtype)}
+
+
+def _view_len(full: int, history_len: int) -> int:
+    """Static attention-view length for a chunk step: ``history_len`` (from
+    ``serving.steps.view_bucket``) capped at the cache span; 0 = full."""
+    return full if history_len <= 0 else min(int(history_len), full)
+
+
+def _require_scratch(cache: Dict, name: str) -> None:
+    if "k_fp" not in cache:
+        raise ValueError(
+            f"chunked prefill over the {name!r} layout needs the fp "
+            "prefill-view scratch: build the cache with "
+            "init_cache(..., prefill_scratch=True)")
+
+
+def _ring_chunk_sources(s: int, chunk_start: jax.Array, lengths: jax.Array,
+                        w: int) -> Tuple[jax.Array, jax.Array]:
+    """Keep-latest map for writing one prefill chunk into a ring of length
+    ``s``: ring slot ``j`` must end up holding the greatest *real* position
+    ``p ≡ j (mod s)`` below ``min(lengths, chunk_start + w)``.  Returns
+    ``(take, src)``: ``take`` (B, s) marks slots whose latest source lies in
+    this chunk (others keep their current contents — earlier-chunk history
+    or, beyond a row's prompt, junk the validity mask already rejects);
+    ``src`` (B, s) is the chunk-local index to gather from."""
+    e = jnp.minimum(lengths, chunk_start + w)
+    p = attn.ring_positions(s, e - 1)  # (B, s), <0 during warmup
+    take = p >= chunk_start
+    src = jnp.clip(p - chunk_start, 0, w - 1)
+    return take, src
+
+
+def _ring_chunk_write(cache: Dict, k: jax.Array, v: jax.Array,
+                      chunk_start: jax.Array, lengths: jax.Array) -> Dict:
+    """Masked keep-latest chunk write into a dense (B, S) ring slab."""
+    s = cache["k"].shape[1]
+    take, src = _ring_chunk_sources(s, chunk_start, lengths, k.shape[1])
+    idx = src[..., None, None]
+    t4 = take[..., None, None]
+    kn = jnp.take_along_axis(k, idx, axis=1)
+    vn = jnp.take_along_axis(v, idx, axis=1)
+    return {"k": jnp.where(t4, kn.astype(cache["k"].dtype), cache["k"]),
+            "v": jnp.where(t4, vn.astype(cache["v"].dtype), cache["v"])}
+
+
+def _ring_chunk_attend(params, q, k_new, v_new, cache, chunk_start, lengths,
+                       window, cap) -> Tuple[jax.Array, Dict]:
+    """Windowed-layer chunk attention over ``concat(ring-before-write,
+    chunk)``: the ring supplies the last ``S >= window`` positions before
+    ``chunk_start`` and the chunk supplies its own K/V at exact positions —
+    necessary because a chunk wider than the ring would overwrite history
+    that *early* queries of the same chunk still need."""
+    b, w = k_new.shape[:2]
+    s = cache["k"].shape[1]
+    rp = jnp.broadcast_to(
+        attn.ring_positions(s, jnp.reshape(chunk_start - 1, (1,))), (b, s))
+    q_pos = chunk_start + jnp.arange(w)
+    k_pos = jnp.concatenate(
+        [rp, jnp.broadcast_to(q_pos[None], (b, w))], axis=1)
+    k_all = jnp.concatenate(
+        [cache["k"].astype(k_new.dtype), k_new], axis=1)
+    v_all = jnp.concatenate(
+        [cache["v"].astype(v_new.dtype), v_new], axis=1)
+    y = attn._masked_chunk_attn(params, q, k_all, v_all, q_pos, k_pos,
+                                window, cap)
+    return y, _ring_chunk_write(cache, k_new, v_new, chunk_start, lengths)
 
 
 def _encode_pair(k, v, cfg, vq_params):
@@ -192,7 +292,8 @@ class CacheBackend:
 
     # -- layer level (jit-traced) -------------------------------------------
     def init_cache(self, cfg, kind: str, batch: int, max_len: int, dtype, *,
-                   page_size: int = 0, num_pages=0) -> Dict[str, jax.Array]:
+                   page_size: int = 0, num_pages=0,
+                   prefill_scratch: bool = False) -> Dict[str, jax.Array]:
         raise NotImplementedError
 
     def prefill_write(self, cache, k, v, *, ctx, kind: str, vq_params=None,
@@ -203,6 +304,27 @@ class CacheBackend:
                       kind: str, vq_params=None,
                       block_tables=None) -> Tuple[jax.Array, Dict]:
         raise NotImplementedError
+
+    def chunk_attend(self, params, q, k_new, v_new, cache, chunk_start,
+                     lengths, *, ctx, kind: str, vq_params=None,
+                     block_tables=None,
+                     history_len: int = 0) -> Tuple[jax.Array, Dict]:
+        """One chunked-prefill step: write the chunk's K/V (positions
+        ``chunk_start .. chunk_start + W - 1``, length-masked where the
+        layout needs it) and attend causally over everything cached so far
+        plus the chunk itself.  ``history_len`` (static, >= the chunk end)
+        bounds the global-layer attention view so a short prompt never
+        scores against the whole ``max_len`` span.  Returns
+        (y, new_cache)."""
+        raise NotImplementedError(
+            f"backend {self.name!r} does not support chunked prefill")
+
+    @property
+    def chunkable(self) -> bool:
+        """Whether the engines may drive this backend through the chunked
+        prefill pipeline (the seq-sharded shard cache keeps the one-shot
+        ASTRA sequence-parallel prefill)."""
+        return not self.sharded
 
     # -- engine level (host) ------------------------------------------------
     def make_state(self, cfg, *, slots: int, max_len: int, ctx, dtype=None,
@@ -244,7 +366,7 @@ class FPSlabBackend(CacheBackend):
     name = "fp"
 
     def init_cache(self, cfg, kind, batch, max_len, dtype, *, page_size=0,
-                   num_pages=0):
+                   num_pages=0, prefill_scratch=False):
         window = attn.kind_window(kind, cfg)
         s = min(window, max_len) if window else max_len
         hkv, hd = cfg.num_kv_heads, cfg.head_dim
@@ -270,6 +392,28 @@ class FPSlabBackend(CacheBackend):
         y = attn._masked_decode_attn(params, q, ck, cv, valid, cap)
         return y, {"k": ck, "v": cv}
 
+    def chunk_attend(self, params, q, k_new, v_new, cache, chunk_start,
+                     lengths, *, ctx, kind, vq_params=None,
+                     block_tables=None, history_len=0):
+        cfg = ctx.cfg
+        cap = cfg.attn_logit_softcap
+        window = attn.kind_window(kind, cfg)
+        if window:
+            return _ring_chunk_attend(params, q, k_new, v_new, cache,
+                                      chunk_start, lengths, window, cap)
+        # global slab: write the chunk, attend over the (masked) written
+        # prefix.  Positions past a row's prompt end hold junk but are
+        # causally unreachable from any valid query, and decode overwrites
+        # them in order before they ever become valid.
+        new = {"k": _chunk_slab_write(cache["k"], k_new, chunk_start),
+               "v": _chunk_slab_write(cache["v"], v_new, chunk_start)}
+        q_pos = chunk_start + jnp.arange(q.shape[1])
+        hv = _view_len(new["k"].shape[1], history_len)
+        y = attn._masked_chunk_attn(params, q, new["k"][:, :hv],
+                                    new["v"][:, :hv], q_pos,
+                                    jnp.arange(hv), 0, cap)
+        return y, new
+
 
 class VQSlabBackend(CacheBackend):
     """Codes-only slab (Appendix G): global layers hold (B, S, G) VQ codes,
@@ -280,15 +424,18 @@ class VQSlabBackend(CacheBackend):
     vq_codes = True
 
     def init_cache(self, cfg, kind, batch, max_len, dtype, *, page_size=0,
-                   num_pages=0):
+                   num_pages=0, prefill_scratch=False):
         window = attn.kind_window(kind, cfg)
         if window:
             return FPSlabBackend.init_cache(self, cfg, kind, batch, max_len,
                                             dtype)
         cd = vq.code_dtype(cfg.astra.codebook_size)
         g = cfg.astra.groups
-        return {"k_codes": jnp.zeros((batch, max_len, g), cd),
-                "v_codes": jnp.zeros((batch, max_len, g), cd)}
+        cache = {"k_codes": jnp.zeros((batch, max_len, g), cd),
+                 "v_codes": jnp.zeros((batch, max_len, g), cd)}
+        if prefill_scratch:
+            cache.update(_fp_scratch(cfg, batch, max_len, dtype))
+        return cache
 
     def prefill_write(self, cache, k, v, *, ctx, kind, vq_params=None,
                       block_tables=None, lengths=None):
@@ -322,6 +469,34 @@ class VQSlabBackend(CacheBackend):
         y = attn._masked_decode_attn(params, q, k_all, v_all, valid, cap)
         return y, {"k_codes": ck, "v_codes": cv}
 
+    def chunk_attend(self, params, q, k_new, v_new, cache, chunk_start,
+                     lengths, *, ctx, kind, vq_params=None,
+                     block_tables=None, history_len=0):
+        cfg = ctx.cfg
+        cap = cfg.attn_logit_softcap
+        window = attn.kind_window(kind, cfg)
+        if window:  # fp ring, identical to the fp slab
+            return _ring_chunk_attend(params, q, k_new, v_new, cache,
+                                      chunk_start, lengths, window, cap)
+        _require_scratch(cache, self.name)
+        kc, vc, _ = _encode_pair(k_new, v_new, cfg, vq_params)
+        # persistent cache: codes.  attention view: the fp scratch slab —
+        # one-shot prefill attends full precision among prompt tokens, and
+        # chunking must not change that (the codes are only ever *read* by
+        # decode, exactly as in the one-shot path).
+        new = {"k_codes": _chunk_slab_write(cache["k_codes"], kc,
+                                            chunk_start),
+               "v_codes": _chunk_slab_write(cache["v_codes"], vc,
+                                            chunk_start),
+               "k_fp": _chunk_slab_write(cache["k_fp"], k_new, chunk_start),
+               "v_fp": _chunk_slab_write(cache["v_fp"], v_new, chunk_start)}
+        q_pos = chunk_start + jnp.arange(q.shape[1])
+        hv = _view_len(new["k_fp"].shape[1], history_len)
+        y = attn._masked_chunk_attn(params, q, new["k_fp"][:, :hv],
+                                    new["v_fp"][:, :hv], q_pos,
+                                    jnp.arange(hv), 0, cap)
+        return y, new
+
 
 class PagedBackend(CacheBackend):
     """Block-table page pools, fp value pages.  Global layers address a
@@ -337,7 +512,7 @@ class PagedBackend(CacheBackend):
         return int(num_pages)
 
     def init_cache(self, cfg, kind, batch, max_len, dtype, *, page_size=0,
-                   num_pages=0):
+                   num_pages=0, prefill_scratch=False):
         n = self._group_num_pages(num_pages, kind, cfg) if num_pages else 0
         if page_size <= 0 or n <= 0:
             raise ValueError("paged cache modes need page_size/num_pages "
@@ -346,8 +521,11 @@ class PagedBackend(CacheBackend):
         if self.vq_codes and not window:
             g = cfg.astra.groups
             cd = vq.code_dtype(cfg.astra.codebook_size)
-            return {"k_code_pages": jnp.zeros((n, page_size, g), cd),
-                    "v_code_pages": jnp.zeros((n, page_size, g), cd)}
+            cache = {"k_code_pages": jnp.zeros((n, page_size, g), cd),
+                     "v_code_pages": jnp.zeros((n, page_size, g), cd)}
+            if prefill_scratch:
+                cache.update(_fp_scratch(cfg, batch, max_len, dtype))
+            return cache
         hkv, hd = cfg.num_kv_heads, cfg.head_dim
         return {"k_pages": jnp.zeros((n, page_size, hkv, hd), dtype),
                 "v_pages": jnp.zeros((n, page_size, hkv, hd), dtype)}
@@ -412,6 +590,85 @@ class PagedBackend(CacheBackend):
         y = attn._masked_decode_attn(params, q, k_all, v_all, valid, cap)
         return y, new_cache
 
+    def chunk_attend(self, params, q, k_new, v_new, cache, chunk_start,
+                     lengths, *, ctx, kind, vq_params=None,
+                     block_tables=None, history_len=0):
+        """Token-granular chunk scatter through the block table (page-wise
+        writes would need chunk/page alignment), then the same masked chunk
+        attention as the slab layouts over the table-gathered view."""
+        cfg = ctx.cfg
+        cap = cfg.attn_logit_softcap
+        window = attn.kind_window(kind, cfg)
+        table = _table_for(block_tables, kind, cfg)
+        vq_pool = "k_code_pages" in cache
+        kp = cache["k_code_pages" if vq_pool else "k_pages"]
+        vp = cache["v_code_pages" if vq_pool else "v_pages"]
+        ps = kp.shape[1]
+        b, w = k_new.shape[:2]
+        s = table.shape[1] * ps  # ring length (== max_len for global tables)
+        q_pos = chunk_start + jnp.arange(w)
+
+        if window:  # fp page ring (windowed layers keep fp pages under vq)
+            ring_k = kp[table].reshape((b, s) + kp.shape[2:])
+            ring_v = vp[table].reshape((b, s) + vp.shape[2:])
+            rp = jnp.broadcast_to(
+                attn.ring_positions(s, jnp.reshape(chunk_start - 1, (1,))),
+                (b, s))
+            k_pos = jnp.concatenate(
+                [rp, jnp.broadcast_to(q_pos[None], (b, w))], axis=1)
+            k_all = jnp.concatenate([ring_k.astype(k_new.dtype), k_new], 1)
+            v_all = jnp.concatenate([ring_v.astype(v_new.dtype), v_new], 1)
+            y = attn._masked_chunk_attn(params, q, k_all, v_all, q_pos,
+                                        k_pos, window, cap)
+            # keep-latest write through the page ring; slots whose latest
+            # source is not in this chunk are routed to the scratch page
+            take, src = _ring_chunk_sources(s, chunk_start, lengths, w)
+            idx = src[..., None, None]
+            gk = jnp.take_along_axis(k_new, idx, axis=1)  # (B, s, ...)
+            gv = jnp.take_along_axis(v_new, idx, axis=1)
+            dest = jnp.where(take, table[:, np.arange(s) // ps], 0)
+            offs = jnp.broadcast_to(np.arange(s) % ps, (b, s))
+            kp = kp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                gk.reshape((b * s,) + gk.shape[2:]).astype(kp.dtype))
+            vp = vp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                gv.reshape((b * s,) + gv.shape[2:]).astype(vp.dtype))
+            return y, {"k_pages": kp, "v_pages": vp}
+
+        # global table: scatter the chunk token-granular (positions past the
+        # table span — bucket overhang — go to scratch page 0)
+        page_idx = jnp.clip(q_pos // ps, 0, table.shape[1] - 1)
+        dest = jnp.where((q_pos < s)[None], table[:, page_idx], 0)  # (B, W)
+        offs = jnp.broadcast_to(q_pos % ps, (b, w))
+        if vq_pool:
+            _require_scratch(cache, self.name)
+            kc, vc, _ = _encode_pair(k_new, v_new, cfg, vq_params)
+            kp = kp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                kc.reshape((b * w,) + kc.shape[2:]).astype(kp.dtype))
+            vp = vp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                vc.reshape((b * w,) + vc.shape[2:]).astype(vp.dtype))
+            k_view = _chunk_slab_write(cache["k_fp"], k_new, chunk_start)
+            v_view = _chunk_slab_write(cache["v_fp"], v_new, chunk_start)
+            hv = _view_len(k_view.shape[1], history_len)
+            y = attn._masked_chunk_attn(params, q, k_view[:, :hv],
+                                        v_view[:, :hv], q_pos,
+                                        jnp.arange(hv), 0, cap)
+            return y, {"k_code_pages": kp, "v_code_pages": vp,
+                       "k_fp": k_view, "v_fp": v_view}
+        kp = kp.at[dest.reshape(-1), offs.reshape(-1)].set(
+            k_new.reshape((b * w,) + k_new.shape[2:]).astype(kp.dtype))
+        vp = vp.at[dest.reshape(-1), offs.reshape(-1)].set(
+            v_new.reshape((b * w,) + v_new.shape[2:]).astype(vp.dtype))
+        # gather only the first ceil(hv/ps) pages per row — the view length
+        # ladder keeps both the gather and the score matrix prompt-sized
+        hv = _view_len(s, history_len)
+        n_view = -(-hv // ps)
+        sv = n_view * ps
+        k_all = kp[table[:, :n_view]].reshape((b, sv) + kp.shape[2:])
+        v_all = vp[table[:, :n_view]].reshape((b, sv) + vp.shape[2:])
+        y = attn._masked_chunk_attn(params, q, k_all, v_all, q_pos,
+                                    jnp.arange(sv), 0, cap)
+        return y, {"k_pages": kp, "v_pages": vp}
+
     def make_state(self, cfg, *, slots, max_len, ctx, dtype=None,
                    page_size=16, num_pages=None):
         return kvc.PagedKVCache(cfg, slots=slots, max_len=max_len, ctx=ctx,
@@ -454,7 +711,8 @@ class ShardedBackend(CacheBackend):
         self.vq_codes = inner.vq_codes
 
     def init_cache(self, cfg, kind, batch, max_len, dtype, *, page_size=0,
-                   num_pages=0):
+                   num_pages=0, prefill_scratch=False):
+        # never chunked (chunkable is False), so no prefill scratch either
         return self.inner.init_cache(cfg, kind, batch, max_len, dtype,
                                      page_size=page_size, num_pages=num_pages)
 

@@ -7,7 +7,11 @@ is autoregressive.  This engine supports:
   * every ``serving.cache_backend`` layout: fp or vq (Appendix G) slab
     caches, their paged page-pool variants ("paged" / "paged_vq", per-group
     block tables via serving.kv_cache.PagedKVCache), and the seq-sharded
-    shard cache when a mesh with a sequence axis is given.
+    shard cache when a mesh with a sequence axis is given,
+  * two prefill pipelines: "chunked" (default — the bucketed chunk grid of
+    ``serving.steps``, prefill cost scales with the prompt and compiles
+    O(buckets)) and "padded" (legacy one-shot; also the automatic fallback
+    for the seq-sharded shard cache and astra-sim prefill).
 
 Decode runs through the shared jitted multi-token loop in
 ``repro.serving.steps``: the host dispatches one chunk of ``decode_chunk``
@@ -58,6 +62,8 @@ class ServingEngine:
         decode_chunk: Optional[int] = None,
         page_size: int = 16,
         donate: Optional[bool] = None,
+        prefill_mode: str = "chunked",
+        prefill_chunk: Optional[int] = None,
     ):
         seq_sharded = (mesh_ctx.seq_axis is not None
                        and mesh_ctx.mesh is not None)
@@ -76,12 +82,30 @@ class ServingEngine:
                                    astra_mode=astra_mode, cache_mode=cache_mode)
         self.decode_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="decode",
                                   astra_mode=astra_mode, cache_mode=cache_mode)
+        if prefill_mode not in ("chunked", "padded"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        # chunked prefill rides the CacheBackend chunk ops; the seq-sharded
+        # shard cache keeps the one-shot ASTRA sequence-parallel prefill,
+        # and an astra-simulated prefill attends through quantized K/V sim
+        # that the chunk step (exact cached attention) does not reproduce.
+        self.prefill_mode = prefill_mode
+        if not self.backend.chunkable or self.prefill_ctx.astra_on:
+            self.prefill_mode = "padded"
+        if prefill_chunk is None:
+            prefill_chunk = (
+                serving_autotune.load_prefill_chunk(cfg.name)
+                or serving_steps.DEFAULT_PREFILL_CHUNK)
+        self.prefill_chunk = max(int(prefill_chunk), 1)
+        self.prefill_buckets = serving_steps.prefill_buckets(
+            self.prefill_chunk)
         # prefill donates the incoming cache pytree (the paged pools are
         # rewritten in place; slab modes pass None and donation is a no-op)
         prefill_donate = (self.backend.donate_argnums((3,)) if donate is None
                           else ((3,) if donate else ()))
         self._prefill = serving_steps.CountingJit(
             self._prefill_impl, donate_argnums=prefill_donate)
+        self._prefill_chunk = serving_steps.make_prefill_chunk(
+            self.prefill_ctx, donate=donate)
         self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx,
                                                              donate=donate)
         # device->host transfer counter (one increment per blocking fetch)
@@ -101,6 +125,56 @@ class ServingEngine:
         last = jnp.take_along_axis(
             logits, (lengths - 1)[:, None, None].clip(0), axis=1)[:, 0]
         return last, caches
+
+    def _run_prefill(self, toks: np.ndarray, lens: np.ndarray,
+                     max_new_tokens: int):
+        """Prefill every row's cache; returns (last_logits, caches,
+        block_tables).
+
+        "chunked" walks the prompts through the bucketed chunk grid — cost
+        scales with ceil(len/chunk)*chunk tokens, and the jitted chunk
+        compiles once per bucket *width* (chunk_start is traced).  "padded"
+        is the legacy one-shot full-width prefill, kept for the seq-sharded
+        / astra-sim paths and as the benchmark baseline."""
+        b = toks.shape[0]
+        block_tables = caches0 = None
+        kv = None
+        if self.backend.paged:
+            # one per-generate cache state: each request gets exactly the
+            # pages its prompt + budget needs, all layers share the tables.
+            kv = self.backend.make_state(
+                self.cfg, slots=b, max_len=self.max_len, ctx=self.decode_ctx,
+                page_size=self.page_size, dtype=self.cache_dtype)
+            for i in range(b):
+                ok = self.backend.advance(
+                    kv, i, min(int(lens[i]) + max_new_tokens, self.max_len))
+                assert ok, "pool sized for slots*span can't run dry"
+            block_tables = kv.tables()
+        if self.prefill_mode == "padded":
+            if kv is not None:
+                caches0 = kv.init_cache(b)
+            last_logits, caches = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens), caches0,
+                block_tables)
+            return last_logits, caches, block_tables
+        if kv is not None:
+            caches = kv.init_cache(b, prefill_scratch=True)
+        else:
+            caches = tlm.init_lm_cache(self.cfg, b, self.max_len,
+                                       self.prefill_ctx, self.cache_dtype,
+                                       prefill_scratch=True)
+        lengths = jnp.asarray(lens)
+        last_logits = jnp.zeros((b, self.cfg.vocab_size), jnp.float32)
+        for s0, w in serving_steps.plan_chunks(int(lens.max()),
+                                               self.prefill_buckets):
+            chunk = np.zeros((b, w), np.int32)
+            seg = toks[:, s0:s0 + w]
+            chunk[:, :seg.shape[1]] = seg
+            last_logits, caches = self._prefill_chunk(
+                self.params, jnp.asarray(chunk), jnp.asarray(s0, jnp.int32),
+                caches, lengths, last_logits, block_tables,
+                history_len=serving_steps.view_bucket(s0 + w, self.max_len))
+        return last_logits, cbe.strip_prefill_scratch(caches), block_tables
 
     # -- API -----------------------------------------------------------------
     def generate(
@@ -127,22 +201,8 @@ class ServingEngine:
         for i, p in enumerate(prompts):
             toks[i, : len(p)] = p
 
-        block_tables = caches0 = None
-        if self.backend.paged:
-            # one per-generate cache state: each request gets exactly the
-            # pages its prompt + budget needs, all layers share the tables.
-            kv = self.backend.make_state(
-                self.cfg, slots=b, max_len=self.max_len, ctx=self.decode_ctx,
-                page_size=self.page_size, dtype=self.cache_dtype)
-            for i in range(b):
-                ok = self.backend.advance(
-                    kv, i, min(int(lens[i]) + max_new_tokens, self.max_len))
-                assert ok, "pool sized for slots*span can't run dry"
-            block_tables = kv.tables()
-            caches0 = kv.init_cache(b)
-        last_logits, caches = self._prefill(self.params, jnp.asarray(toks),
-                                            jnp.asarray(lens), caches0,
-                                            block_tables)
+        last_logits, caches, block_tables = self._run_prefill(
+            toks, lens, max_new_tokens)
         rng = jax.random.PRNGKey(seed)
         rng, sub = jax.random.split(rng)
         eos_arr = serving_steps.as_eos_array(eos_id, b)

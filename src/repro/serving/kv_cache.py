@@ -240,13 +240,20 @@ def is_paged_sub(sub: Dict[str, Any]) -> bool:
 
 
 def adopt_pools(fresh: List[Dict], live: List[Dict]) -> List[Dict]:
-    """Replace the page-pool sub-dicts of a freshly initialized cache tree
-    with the live pools (prefill writes into the engine's pools in place of
-    a per-request slab; non-paged leaves keep their fresh batch-1 state)."""
+    """Replace the page-pool *leaves* of a cache tree with the live pools
+    (prefill writes into the engine's pools in place of a per-request slab;
+    non-pool leaves — batched dense state, and the fp prefill-view scratch
+    a chunked vq prefill carries — keep their ``fresh`` state)."""
     out = []
     for f_stage, l_stage in zip(fresh, live):
-        out.append({name: (l_stage[name] if is_paged_sub(sub) else sub)
-                    for name, sub in f_stage.items()})
+        stage = {}
+        for name, sub in f_stage.items():
+            if is_paged_sub(sub):
+                stage[name] = {k: (l_stage[name][k] if k in PAGED_LEAF_KEYS
+                                   else v) for k, v in sub.items()}
+            else:
+                stage[name] = sub
+        out.append(stage)
     return out
 
 
@@ -487,15 +494,18 @@ class PagedKVCache:
                 for name, g in self.groups.items()}
 
     # -- device-side pools --------------------------------------------------
-    def init_cache(self, batch: Optional[int] = None):
+    def init_cache(self, batch: Optional[int] = None,
+                   prefill_scratch: bool = False):
         """Model cache tree: shared page pools for attention layers, batched
-        dense state for ring/recurrent/ssm layers."""
+        dense state for ring/recurrent/ssm layers (``prefill_scratch`` adds
+        the fp prefill-view slabs chunked vq prefill carries)."""
         from repro.models import transformer as tlm
 
         return tlm.init_lm_cache(self.cfg, batch or self.slots, self.max_len,
                                  self.ctx, self.dtype,
                                  page_size=self.page_size,
-                                 num_pages=self.num_pages_by_group)
+                                 num_pages=self.num_pages_by_group,
+                                 prefill_scratch=prefill_scratch)
 
     def pool_bytes(self, caches=None) -> int:
         """Measured page-pool bytes (materialized if ``caches`` given, else
@@ -541,11 +551,13 @@ class SlabCache:
     def tables(self) -> None:
         return None
 
-    def init_cache(self, batch: Optional[int] = None):
+    def init_cache(self, batch: Optional[int] = None,
+                   prefill_scratch: bool = False):
         from repro.models import transformer as tlm
 
         return tlm.init_lm_cache(self.cfg, batch or self.slots, self.max_len,
-                                 self.ctx, self.dtype)
+                                 self.ctx, self.dtype,
+                                 prefill_scratch=prefill_scratch)
 
     def pool_bytes(self, caches=None) -> int:
         return 0

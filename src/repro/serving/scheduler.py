@@ -17,14 +17,27 @@ slab copy), and retirement returns the pages.  "paged_vq" stores uint8/16
 VQ codes per page — the Appendix-G codes-only cache under per-group block
 tables (windowed layers ride the capped "window" table).
 
+Admission runs the *chunked prefill pipeline* by default
+(``prefill_mode="chunked"``): the prompt walks the bucketed chunk grid
+(``serving.steps.plan_chunks`` over ``PREFILL_BUCKETS``) one chunk per
+scheduler tick, interleaved with decode — admitting a long prompt never
+stalls running decodes, and prefill cost scales with
+ceil(len/chunk)*chunk tokens instead of ``max_len`` (Sarathi/DeepSpeed-FastGen
+style).  The request owns its slot (and pages) for the whole in-flight
+prefill; the decode step sees its block-table rows pointed at scratch until
+activation, and the batch-1 chunk cache is merged into the live batched
+cache on device when the last chunk lands.  ``prefill_mode="padded"`` keeps
+the legacy one-shot full-width prefill (also the fallback under a
+seq-sharded mesh or an astra-sim prefill).
+
 All steps are fixed-shape (slot count and max_len are static), so the jitted
-prefill/decode compile once — including the admitted slot index, which is a
-traced scalar: the prefill merges its batch-1 result into the engine cache
-on device, letting the whole cache pytree be donated (in-place on platforms
-that alias; no-op on CPU).  Decoding goes through the same jitted
-multi-token chunk as ``ServingEngine`` (``repro.serving.steps``): each
-``step()`` advances every active slot by up to ``decode_chunk`` tokens on
-device and syncs with the host once, so admission/retirement happen at
+steps compile O(1)/O(buckets) times — the admitted slot index and the chunk
+start are traced scalars: the prefill merges its batch-1 result into the
+engine cache on device, letting the whole cache pytree be donated (in-place
+on platforms that alias; no-op on CPU).  Decoding goes through the same
+jitted multi-token chunk as ``ServingEngine`` (``repro.serving.steps``):
+each ``step()`` advances every active slot by up to ``decode_chunk`` tokens
+on device and syncs with the host once, so admission/retirement happen at
 chunk boundaries instead of after every token.
 """
 from __future__ import annotations
@@ -62,6 +75,24 @@ class Request:
     done_step: int = -1
 
 
+@dataclasses.dataclass
+class _PendingPrefill:
+    """An admission in flight under chunked prefill: the request holds its
+    slot (pages already granted) while its prompt walks the chunk grid one
+    chunk per scheduler tick, so running decodes never stall behind a long
+    prompt.  The batch-1 cache carries recurrent state / slab rows across
+    ticks; for paged layouts its pool leaves are re-adopted from the live
+    cache before each chunk (decode ticks produce fresh pool arrays)."""
+
+    req: Request
+    slot: int
+    n: int  # true (possibly truncated) prompt length
+    plan: List  # [(chunk_start, width)] from serving_steps.plan_chunks
+    next_chunk: int
+    caches: Any
+    last_logits: Any  # (1, V) running last-position logits
+
+
 class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, mesh_ctx: MeshContext = LOCAL,
@@ -69,7 +100,9 @@ class ContinuousBatchingEngine:
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  decode_chunk: Optional[int] = None, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None,
+                 prefill_mode: str = "chunked",
+                 prefill_chunk: Optional[int] = None):
         if cfg.arch_type in ("vit",):
             raise ValueError("classification models are not generative")
         seq_sharded = (mesh_ctx.seq_axis is not None
@@ -92,6 +125,18 @@ class ContinuousBatchingEngine:
         self.decode_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="decode",
                                   astra_mode=astra_mode,
                                   cache_mode=cache_mode)
+        if prefill_mode not in ("chunked", "padded"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        self.prefill_mode = prefill_mode
+        if not self.backend.chunkable or self.prefill_ctx.astra_on:
+            self.prefill_mode = "padded"
+        if prefill_chunk is None:
+            prefill_chunk = (
+                serving_autotune.load_prefill_chunk(cfg.name, batch=slots)
+                or serving_steps.DEFAULT_PREFILL_CHUNK)
+        self.prefill_chunk = max(int(prefill_chunk), 1)
+        self.prefill_buckets = serving_steps.prefill_buckets(
+            self.prefill_chunk)
         # one cache state for the engine's whole life: page allocators +
         # per-group block tables for the paged layouts, a trivial slab
         # handle otherwise (undersized num_pages => admission waits for
@@ -116,8 +161,18 @@ class ContinuousBatchingEngine:
                           else ((4,) if donate else ()))
         self._prefill = serving_steps.CountingJit(
             self._prefill_impl, donate_argnums=prefill_donate)
+        self._prefill_chunk = serving_steps.make_prefill_chunk(
+            self.prefill_ctx, donate=donate)
+        # slot-merge for the chunked path: the live cache is donated, the
+        # batch-1 prefill result is inserted at the (traced) slot on device
+        merge_donate = (self.backend.donate_argnums((0,)) if donate is None
+                        else ((0,) if donate else ()))
+        self._merge = serving_steps.CountingJit(
+            kvc.merge_slot, donate_argnums=merge_donate)
         self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx,
                                                              donate=donate)
+        self._pending: Optional[_PendingPrefill] = None
+        self.prefill_chunk_ticks = 0  # chunk dispatches (chunked mode)
         self._uid = 0
 
     # -- jitted steps --------------------------------------------------------
@@ -159,25 +214,58 @@ class ContinuousBatchingEngine:
             return None
         return {name: t[slot:slot + 1] for name, t in self._bt.items()}
 
+    def _grant_slot(self, slot: int) -> Optional[int]:
+        """Page-grant the queue head into ``slot``; returns its true prompt
+        length, or None on allocator pressure (state unchanged)."""
+        n = min(len(self.queue[0].prompt),
+                self.max_len - self.queue[0].max_new_tokens - 1)
+        # admission blocks on allocator pressure, not slot count: the
+        # request needs pages for its prompt + full budget (slab
+        # backends always have room — advance is a bound check there).
+        tokens_needed = min(n + self.queue[0].max_new_tokens, self.max_len)
+        if not self.kv.can_ever_fit(tokens_needed):
+            raise ValueError(
+                f"request needs pages for {tokens_needed} tokens but "
+                f"the pool can never hold them")
+        if not self.backend.advance(self.kv, slot, tokens_needed):
+            self.admission_stalls += 1
+            return None  # FIFO: wait for a retirement to free pages
+        self._bt = self.kv.tables()
+        return n
+
+    def _finish_admission(self, req: Request, slot: int, n: int,
+                          last_logits) -> None:
+        """Sample the prefill continuation and activate the slot."""
+        self._rng, sub = jax.random.split(self._rng)
+        eos_arr = serving_steps.as_eos_array(req.eos_id, 1)
+        first, _ = serving_steps.first_token(
+            sub, last_logits, eos_arr, temperature=self.temperature,
+            top_k=self.top_k)
+        tok = int(first[0])
+        self.host_syncs += 1
+        req.output.append(tok)
+        req.first_token_step = self.step_count
+        self.active[slot] = req
+        self.lengths = self.lengths.at[slot].set(n)
+        self.cur_token = self.cur_token.at[slot].set(tok)
+        self._maybe_finish(slot, tok)
+
     def _admit(self) -> None:
+        if self.prefill_mode == "padded":
+            self._admit_padded()
+            return
+        self._start_pending()
+        self._advance_pending()
+
+    def _admit_padded(self) -> None:
+        """Legacy one-shot admission: the whole (max_len-padded) prompt
+        prefills in a single jitted step, stalling this tick's decode."""
         for slot in range(self.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
-            n = min(len(self.queue[0].prompt),
-                    self.max_len - self.queue[0].max_new_tokens - 1)
-            # admission blocks on allocator pressure, not slot count: the
-            # request needs pages for its prompt + full budget (slab
-            # backends always have room — advance is a bound check there).
-            tokens_needed = min(n + self.queue[0].max_new_tokens,
-                                self.max_len)
-            if not self.kv.can_ever_fit(tokens_needed):
-                raise ValueError(
-                    f"request needs pages for {tokens_needed} tokens but "
-                    f"the pool can never hold them")
-            if not self.backend.advance(self.kv, slot, tokens_needed):
-                self.admission_stalls += 1
-                break  # FIFO: wait for a retirement to free pages
-            self._bt = self.kv.tables()
+            n = self._grant_slot(slot)
+            if n is None:
+                break
             req = self.queue.pop(0)
             toks = np.zeros((1, self.max_len), np.int32)
             toks[0, :n] = req.prompt[:n]
@@ -185,20 +273,62 @@ class ContinuousBatchingEngine:
                 self.params, jnp.asarray(toks), jnp.asarray(n, jnp.int32),
                 jnp.asarray(slot, jnp.int32), self.caches,
                 self._slot_tables(slot))
-            self._rng, sub = jax.random.split(self._rng)
-            eos_arr = serving_steps.as_eos_array(req.eos_id, 1)
-            first, _ = serving_steps.first_token(
-                sub, last_logits, eos_arr, temperature=self.temperature,
-                top_k=self.top_k)
-            tok = int(first[0])
-            self.host_syncs += 1
-            req.output.append(tok)
-            req.first_token_step = self.step_count
-            self.active[slot] = req
-            self.lengths = self.lengths.at[slot].set(n)
-            self.cur_token = self.cur_token.at[slot].set(tok)
-            if self._maybe_finish(slot, tok):
-                continue
+            self._finish_admission(req, slot, n, last_logits)
+
+    def _start_pending(self) -> None:
+        """Begin a chunked admission when a slot (and its pages) are free.
+        One admission is in flight at a time; its request already owns its
+        pages, so a retirement can't steal them mid-prefill."""
+        if self._pending is not None or not self.queue:
+            return
+        slot = next((s for s in range(self.slots)
+                     if self.active[s] is None), None)
+        if slot is None:
+            return
+        n = self._grant_slot(slot)
+        if n is None:
+            return
+        req = self.queue.pop(0)
+        caches = self.kv.init_cache(1, prefill_scratch=True)
+        if self.backend.paged:
+            caches = kvc.adopt_pools(caches, self.caches)
+        self._pending = _PendingPrefill(
+            req=req, slot=slot, n=n,
+            plan=serving_steps.plan_chunks(n, self.prefill_buckets),
+            next_chunk=0, caches=caches,
+            last_logits=jnp.zeros((1, self.cfg.vocab_size), jnp.float32))
+
+    def _advance_pending(self) -> None:
+        """Run at most ONE prefill chunk — the scheduler's
+        prefill/decode interleave: a long prompt admits over several ticks
+        while every active slot keeps decoding."""
+        pend = self._pending
+        if pend is None:
+            return
+        if self.backend.paged:
+            # decode ticks between chunks produced fresh pool arrays
+            pend.caches = kvc.adopt_pools(pend.caches, self.caches)
+        s0, w = pend.plan[pend.next_chunk]
+        chunk = np.zeros((1, w), np.int32)
+        seg = pend.req.prompt[s0:min(s0 + w, pend.n)]
+        chunk[0, :len(seg)] = seg
+        pend.last_logits, pend.caches = self._prefill_chunk(
+            self.params, jnp.asarray(chunk), jnp.asarray(s0, jnp.int32),
+            pend.caches, jnp.asarray([pend.n], jnp.int32),
+            pend.last_logits, self._slot_tables(pend.slot),
+            history_len=serving_steps.view_bucket(s0 + w, self.max_len))
+        self.prefill_chunk_ticks += 1
+        pend.next_chunk += 1
+        if self.backend.paged:
+            self.caches = kvc.adopt_pools(self.caches, pend.caches)
+        if pend.next_chunk < len(pend.plan):
+            return
+        fresh = cbe.strip_prefill_scratch(pend.caches)
+        self.caches = self._merge(self.caches, fresh,
+                                  jnp.asarray(pend.slot, jnp.int32))
+        self._pending = None
+        self._finish_admission(pend.req, pend.slot, pend.n,
+                               pend.last_logits)
 
     def _maybe_finish(self, slot: int, tok: int) -> bool:
         req = self.active[slot]
@@ -236,10 +366,18 @@ class ContinuousBatchingEngine:
              for r in self.active], jnp.int32)
         done = jnp.asarray([r is None for r in self.active])
         self._rng, sub = jax.random.split(self._rng)
+        bt = self._bt
+        if bt is not None and self._pending is not None:
+            # a mid-prefill slot already owns pages the decode step must not
+            # scribble on (inactive rows re-feed their last token and write
+            # it at their stale position): point its rows at scratch until
+            # the admission completes.
+            bt = {name: t.at[self._pending.slot].set(0)
+                  for name, t in bt.items()}
         toks_d, valid_d, cur, self.caches, self.lengths, _, _ = \
             self._decode_chunk(self.params, self.cur_token, self.caches,
                                self.lengths, remaining, eos_ids, done, sub,
-                               self._bt, num_steps=self.decode_chunk,
+                               bt, num_steps=self.decode_chunk,
                                temperature=self.temperature,
                                top_k=self.top_k)
         self.cur_token = cur
@@ -264,7 +402,8 @@ class ContinuousBatchingEngine:
     def run_until_drained(self, max_steps: int = 10_000) -> Dict[str, Any]:
         t0 = time.time()
         decoded = 0
-        while (self.queue or any(r is not None for r in self.active)) \
+        while (self.queue or self._pending is not None
+               or any(r is not None for r in self.active)) \
                 and self.step_count < max_steps:
             decoded += self.step()
         dt = max(time.time() - t0, 1e-9)
@@ -278,5 +417,6 @@ class ContinuousBatchingEngine:
                 [r.first_token_step - r.submitted_step
                  for r in self.finished])) if self.finished else 0.0,
             "admission_stalls": self.admission_stalls,
+            "prefill_chunk_ticks": self.prefill_chunk_ticks,
             "pages_in_use": self.kv.pages_in_use,
         }

@@ -1,4 +1,22 @@
-"""Shared on-device decode loop: one jitted chunk advances every sequence.
+"""Shared jitted serving steps: chunked prefill + the on-device decode loop.
+
+Chunked prefill
+---------------
+Both engines used to pad every prompt to one full-width buffer and run a
+single monolithic prefill — a 64-token prompt under ``max_len=4096`` paid
+~4096^2 attention FLOPs.  ``make_prefill_chunk`` builds the jitted
+``prefill_chunk`` step instead: a fixed-width chunk (widths drawn from the
+small bucket ladder ``PREFILL_BUCKETS`` so the compile count is O(buckets),
+not O(distinct prompt lengths)) that attends causally over the cache
+written so far, appends through ``ctx.backend.chunk_attend``, and carries
+recurrent state (RG-LRU, mamba2 SSD) across chunks via each row's *real*
+boundary state — right-padding can no longer fold into any carried state by
+construction.  ``plan_chunks`` decomposes a prompt into the bucketed chunk
+grid (greedy largest-fit, smallest-covering tail), so prefill cost scales
+with ceil(len/chunk)*chunk tokens instead of ``max_len``.  This is the
+DeepSpeed-Inference/Sarathi-style chunked-prefill move; the continuous
+scheduler additionally interleaves at most one prefill chunk per decode
+tick so admitting a long prompt never stalls running decodes.
 
 Both serving engines (static-batch ``ServingEngine`` and the slot-based
 ``ContinuousBatchingEngine``) used to drive decoding with a host Python loop
@@ -36,6 +54,58 @@ import jax.numpy as jnp
 from repro.models import transformer as tlm
 from repro.serving.sampler import sample_tokens
 
+# chunk-width ladder for the bucketed prefill: every chunk's width is drawn
+# from this set, so the jitted prefill step compiles at most once per bucket
+PREFILL_BUCKETS = (32, 128, 512)
+DEFAULT_PREFILL_CHUNK = 128
+
+
+def prefill_buckets(prefill_chunk: int = DEFAULT_PREFILL_CHUNK,
+                    ladder=PREFILL_BUCKETS) -> Tuple[int, ...]:
+    """The bucket widths the engines may use: ladder entries up to the
+    (autotuned) ``prefill_chunk`` cap, never empty."""
+    out = tuple(b for b in sorted(set(ladder)) if b <= prefill_chunk)
+    return out or (min(ladder),)
+
+
+VIEW_FLOOR = 128
+
+
+def view_bucket(chunk_end: int, max_len: int,
+                floor: int = VIEW_FLOOR) -> int:
+    """Static attention-view length for one prefill chunk: the smallest
+    power-of-two ladder value >= ``chunk_end`` (capped at ``max_len``).
+
+    The chunk step attends over only the first ``history_len`` cache
+    positions — a 64-token prompt under ``max_len=4096`` scores 64x128
+    entries, not 64x4096 — while keeping the view length off the ladder of
+    distinct compiled shapes O(log(max_len / floor)), not O(prompt
+    lengths)."""
+    v = floor
+    while v < chunk_end:
+        v *= 2
+    return min(v, max_len)
+
+
+def plan_chunks(total_len: int, buckets) -> List[Tuple[int, int]]:
+    """Decompose a prompt of ``total_len`` tokens into ``(start, width)``
+    chunks with widths drawn from ``buckets``: greedy largest-fit, and a
+    smallest-covering bucket for the tail (its padding is masked/dropped by
+    the chunk step, so a bucket overhanging ``max_len`` is harmless)."""
+    buckets = sorted(set(int(b) for b in buckets))
+    if not buckets or buckets[0] <= 0:
+        raise ValueError(f"invalid prefill buckets {buckets}")
+    plan: List[Tuple[int, int]] = []
+    start = 0
+    total = max(int(total_len), 1)
+    while start < total:
+        rem = total - start
+        fit = [b for b in buckets if b <= rem]
+        w = max(fit) if fit else min(b for b in buckets if b >= rem)
+        plan.append((start, w))
+        start += w
+    return plan
+
 
 class CountingJit:
     """``jax.jit`` wrapper that counts retraces.
@@ -64,6 +134,35 @@ class CountingJit:
 
     def __call__(self, *args, **kwargs):
         return self._jit(*args, **kwargs)
+
+
+def make_prefill_chunk(ctx, *, donate: Optional[bool] = None) -> CountingJit:
+    """Jitted ``prefill_chunk(params, tokens, chunk_start, caches, lengths,
+    last_logits, block_tables)`` specialized to one StepCtx.
+
+    ``chunk_start`` is a *traced* scalar, so walking a prompt through the
+    chunk grid never re-specializes the graph — only a new chunk *width*
+    (bucket) does, and ``trace_count`` stays O(buckets).  The caches and the
+    running ``last_logits`` are donated where the platform aliases (both are
+    dead after each call by construction)."""
+    if donate is None:
+        argnums = ctx.backend.donate_argnums((3, 5))
+    else:
+        argnums = (3, 5) if donate else ()
+    return CountingJit(functools.partial(prefill_chunk, ctx=ctx),
+                       static_argnames=("history_len",),
+                       donate_argnums=argnums)
+
+
+def prefill_chunk(params, tokens, chunk_start, caches, lengths, last_logits,
+                  block_tables=None, *, ctx, history_len: int = 0):
+    """One chunked-prefill step (see ``tlm.lm_prefill_chunk``).
+    ``history_len`` (static) bounds the attention view — see
+    ``view_bucket``; 0 means the full cache span."""
+    return tlm.lm_prefill_chunk(params, tokens, chunk_start, caches,
+                                lengths, last_logits, ctx=ctx,
+                                block_tables=block_tables,
+                                history_len=history_len)
 
 
 def make_decode_chunk(ctx, *, donate: Optional[bool] = None):

@@ -135,7 +135,15 @@ def test_continuous_engine_parity_and_compile_once(name):
     assert got == want, (name, got, want)
     assert eng.kv.pages_in_use == 0  # trivially 0 for slabs, drained paged
     assert eng._decode_chunk.trace_count == 1
-    assert eng._prefill.trace_count == 1  # traced slot index: one compile
+    if eng.prefill_mode == "chunked":
+        # traced chunk_start: compiles are O(bucket widths), and the
+        # on-device slot merge (traced slot index) compiles once
+        assert 1 <= eng._prefill_chunk.trace_count <= len(
+            eng.prefill_buckets)
+        assert eng._merge.trace_count == 1
+        assert eng._prefill.trace_count == 0
+    else:  # seq-sharded keeps the one-shot prefill: one compile
+        assert eng._prefill.trace_count == 1
 
 
 @pytest.mark.parametrize("name", sorted(SPECS))
@@ -216,13 +224,16 @@ def test_forced_donation_matches_undonated(name):
     assert got == want
     assert eng._decode_chunk.donate_argnums == (2,)
     assert eng._decode_chunk.trace_count == 1
+    assert eng._prefill_chunk.donate_argnums == (3, 5)
     jobs = [(PROMPTS[0], 4, None), ([9], 3, None), ([4, 4], 4, None)]
     want_c, _ = drain(name, jobs, donate=False)
     got_c, ceng = drain(name, jobs, donate=True)
     assert got_c == want_c
     assert ceng._prefill.donate_argnums == (4,)
+    assert ceng._merge.donate_argnums == (0,)
     assert ceng._decode_chunk.trace_count == 1
-    assert ceng._prefill.trace_count == 1
+    assert ceng._prefill_chunk.trace_count >= 1
+    assert ceng._merge.trace_count == 1
 
 
 # ---------------------------------------------------------------------------

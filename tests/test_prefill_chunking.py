@@ -1,0 +1,356 @@
+"""Chunked, length-bucketed prefill pipeline (serving.steps).
+
+Pins the tentpole invariants:
+  * greedy-token parity: chunked prefill == one-shot padded prefill across
+    every CACHE_MODE x both engines, with prompt lengths straddling chunk,
+    page and SWA-window boundaries,
+  * compile count O(chunk buckets x view buckets), NOT O(distinct prompt
+    lengths) (CountingJit-asserted),
+  * the scheduler's prefill/decode interleave: at most one prefill chunk
+    per tick, running decodes keep emitting while a long prompt admits,
+  * the mamba2 padded-state fix: ``ssd_scan`` truncated states mean
+    right-padding never folds into the carried SSD state (ROADMAP item,
+    mirroring the rg-LRU regression from PR 3),
+  * the --prefill-chunk autotune store: sweep persists, engines read.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import mamba2
+from repro.models import model_factory as mf
+from repro.serving import autotune as serving_autotune
+from repro.serving import steps as serving_steps
+from repro.serving.cache_backend import CACHE_MODES
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import ContinuousBatchingEngine
+
+_MODELS = {}
+
+
+def model(arch, astra=False):
+    if (arch, astra) not in _MODELS:
+        cfg = get_config(arch).reduced()
+        if not astra:
+            cfg = dataclasses.replace(
+                cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+        params = mf.init_params(jax.random.PRNGKey(0), cfg)
+        _MODELS[(arch, astra)] = (cfg, params)
+    return _MODELS[(arch, astra)]
+
+
+def prompts_of(cfg, lengths, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, cfg.vocab_size, size=n).tolist() for n in lengths]
+
+
+# ---------------------------------------------------------------------------
+# Host-side planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_chunks_grid():
+    assert serving_steps.plan_chunks(1, (32, 128)) == [(0, 32)]
+    assert serving_steps.plan_chunks(32, (32, 128)) == [(0, 32)]
+    assert serving_steps.plan_chunks(33, (32, 128)) == [(0, 32), (32, 32)]
+    assert serving_steps.plan_chunks(300, (32, 128, 512)) == [
+        (0, 128), (128, 128), (256, 32), (288, 32)]
+    # widths always come from the ladder and chunks tile contiguously
+    for total in (1, 31, 32, 33, 100, 511, 512, 513):
+        plan = serving_steps.plan_chunks(total, (32, 128, 512))
+        assert all(w in (32, 128, 512) for _, w in plan)
+        assert plan[0][0] == 0
+        assert all(plan[i][0] + plan[i][1] == plan[i + 1][0]
+                   for i in range(len(plan) - 1))
+        assert plan[-1][0] + plan[-1][1] >= total
+
+
+def test_prefill_buckets_and_view_ladder():
+    assert serving_steps.prefill_buckets(128) == (32, 128)
+    assert serving_steps.prefill_buckets(512) == (32, 128, 512)
+    assert serving_steps.prefill_buckets(1) == (32,)  # never empty
+    # views: power-of-two ladder from the floor, capped at max_len
+    assert serving_steps.view_bucket(10, 4096) == 128
+    assert serving_steps.view_bucket(129, 4096) == 256
+    assert serving_steps.view_bucket(600, 4096) == 1024
+    assert serving_steps.view_bucket(600, 512) == 512
+    assert serving_steps.view_bucket(10, 64) == 64
+
+
+# ---------------------------------------------------------------------------
+# Parity: chunked == padded, every cache mode x both engines, boundary lens
+# ---------------------------------------------------------------------------
+
+# straddles the 32-wide chunk bucket, the 8-token page, and (for gemma2's
+# reduced window=64) the SWA window, plus a multi-chunk prompt
+BOUNDARY_LENS = (7, 8, 9, 31, 32, 33, 63, 64, 65)
+
+
+@pytest.mark.parametrize("mode", CACHE_MODES)
+def test_static_engine_chunked_parity_all_modes(mode):
+    cfg, params = model("gpt2-small", astra=mode in ("vq", "paged_vq"))
+    prompts = prompts_of(cfg, BOUNDARY_LENS)
+    kw = dict(max_len=96, astra_mode="off", cache_mode=mode, page_size=8,
+              decode_chunk=4)
+    want = ServingEngine(cfg, params, prefill_mode="padded", **kw).generate(
+        prompts, max_new_tokens=5, temperature=0.0).tokens
+    eng = ServingEngine(cfg, params, prefill_mode="chunked",
+                        prefill_chunk=32, **kw)
+    got = eng.generate(prompts, max_new_tokens=5, temperature=0.0).tokens
+    assert got == want
+    assert eng.prefill_mode == "chunked"
+
+
+@pytest.mark.parametrize("mode", CACHE_MODES)
+def test_continuous_engine_chunked_parity_all_modes(mode):
+    cfg, params = model("gpt2-small", astra=mode in ("vq", "paged_vq"))
+    prompts = prompts_of(cfg, (7, 32, 33, 65))
+    kw = dict(max_len=96, cache_mode=mode, page_size=8)
+    want = ServingEngine(cfg, params, astra_mode="off", prefill_mode="padded",
+                         decode_chunk=3, **kw).generate(
+        prompts, max_new_tokens=5, temperature=0.0).tokens
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, decode_chunk=2,
+                                   prefill_chunk=32, **kw)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    eng.run_until_drained()
+    got = {tuple(r.prompt): r.output for r in eng.finished}
+    for p, w in zip(prompts, want):
+        assert got[tuple(p)] == w, (mode, p)
+    assert eng.kv.pages_in_use == 0
+    assert eng.prefill_chunk_ticks >= sum(
+        len(serving_steps.plan_chunks(len(p), eng.prefill_buckets))
+        for p in prompts)
+
+
+def test_windowed_arch_chunked_parity_past_window():
+    """gemma2 (local/global): prompts straddling the SWA window through the
+    chunk pipeline, dense and paged."""
+    cfg, params = model("gemma2-27b")
+    lens = (cfg.window_size - 1, cfg.window_size, cfg.window_size + 5)
+    prompts = prompts_of(cfg, lens)
+    for mode in ("fp", "paged"):
+        kw = dict(max_len=96, astra_mode="off", cache_mode=mode, page_size=8,
+                  decode_chunk=4)
+        want = ServingEngine(cfg, params, prefill_mode="padded",
+                             **kw).generate(
+            prompts, max_new_tokens=6, temperature=0.0).tokens
+        got = ServingEngine(cfg, params, prefill_mode="chunked",
+                            prefill_chunk=32, **kw).generate(
+            prompts, max_new_tokens=6, temperature=0.0).tokens
+        assert got == want, mode
+
+
+def test_recurrent_arch_chunked_parity():
+    """rg-LRU + SWA hybrid: boundary states carried across chunks."""
+    cfg, params = model("recurrentgemma-9b")
+    prompts = prompts_of(cfg, (3, 31, 33, 70))
+    kw = dict(max_len=96, astra_mode="off", decode_chunk=4)
+    want = ServingEngine(cfg, params, prefill_mode="padded", **kw).generate(
+        prompts, max_new_tokens=5, temperature=0.0).tokens
+    got = ServingEngine(cfg, params, prefill_mode="chunked",
+                        prefill_chunk=32, **kw).generate(
+        prompts, max_new_tokens=5, temperature=0.0).tokens
+    assert got == want
+
+
+def test_tail_chunk_overhanging_max_seq_len_keeps_pos_embeds():
+    """Regression (review find): when the bucketed tail chunk overhangs
+    ``cfg.max_seq_len``, the positional-embedding lookup must clamp only
+    the junk overhang positions — a clamped contiguous slice used to shift
+    the embeddings of every *real* token in the tail chunk."""
+    cfg, _ = model("gpt2-small")
+    cfg2 = dataclasses.replace(cfg, max_seq_len=40)  # not a bucket multiple
+    params2 = mf.init_params(jax.random.PRNGKey(0), cfg2)
+    prompts = prompts_of(cfg2, (35,))  # tail chunk (32, 32) ends at 64 > 40
+    kw = dict(max_len=40, astra_mode="off", decode_chunk=2)
+    want = ServingEngine(cfg2, params2, prefill_mode="padded", **kw).generate(
+        prompts, max_new_tokens=3, temperature=0.0).tokens
+    got = ServingEngine(cfg2, params2, prefill_mode="chunked",
+                        prefill_chunk=32, **kw).generate(
+        prompts, max_new_tokens=3, temperature=0.0).tokens
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Compile count: O(buckets x views), not O(distinct prompt lengths)
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_compiles_are_bucket_bounded():
+    cfg, params = model("gpt2-small")
+    eng = ServingEngine(cfg, params, max_len=96, astra_mode="off",
+                        prefill_chunk=32, decode_chunk=4)
+    for n in (3, 5, 9, 17, 33):  # five distinct prompt lengths
+        eng.generate(prompts_of(cfg, (n,), seed=n), max_new_tokens=2,
+                     temperature=0.0)
+    traces = eng._prefill_chunk.trace_count
+    bound = len({(w, serving_steps.view_bucket(s + w, eng.max_len))
+                 for n in range(1, eng.max_len)
+                 for s, w in serving_steps.plan_chunks(
+                     n, eng.prefill_buckets)})
+    assert traces <= bound  # O(buckets x views)
+    # new *lengths* must not trigger new traces (chunk_start is traced)
+    for n in (4, 11, 23, 41):
+        eng.generate(prompts_of(cfg, (n,), seed=n), max_new_tokens=2,
+                     temperature=0.0)
+    assert eng._prefill_chunk.trace_count == traces
+
+
+# ---------------------------------------------------------------------------
+# Scheduler interleave: decode keeps emitting while a long prompt admits
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_prefill_decode_tick():
+    cfg, params = model("gpt2-small")
+    long_prompt = prompts_of(cfg, (80,))[0]  # 3 chunks at bucket 32
+    short = [5, 9, 3]
+    static = ServingEngine(cfg, params, max_len=96, astra_mode="off",
+                           prefill_mode="padded", decode_chunk=2)
+    w_short = static.generate([short], max_new_tokens=8,
+                              temperature=0.0).tokens[0]
+    w_long = static.generate([long_prompt], max_new_tokens=4,
+                             temperature=0.0).tokens[0]
+
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=96,
+                                   decode_chunk=2, prefill_chunk=32)
+    eng.submit(short, max_new_tokens=8)
+    eng.step()  # admits + starts decoding the short request
+    assert eng.active[0] is not None
+    eng.submit(long_prompt, max_new_tokens=4)
+    decoded_during_prefill = 0
+    interleaved_ticks = 0
+    while eng.queue or eng._pending is not None:
+        emitted = eng.step()
+        if eng._pending is not None:
+            interleaved_ticks += 1
+            decoded_during_prefill += emitted
+    # the long admission spans multiple ticks and decode progressed in them
+    assert interleaved_ticks >= 2
+    assert decoded_during_prefill > 0
+    eng.run_until_drained()
+    got = {tuple(r.prompt): r.output for r in eng.finished}
+    assert got[tuple(short)] == w_short
+    assert got[tuple(long_prompt)] == w_long
+
+
+# ---------------------------------------------------------------------------
+# mamba2 padded-state regression (ROADMAP item; mirrors the rg-LRU one)
+# ---------------------------------------------------------------------------
+
+
+def test_ssd_scan_truncated_states():
+    """num_valid truncation == running the scan on the real prefix only."""
+    b, t, h, p, n = 2, 12, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, t, n))
+    C = jax.random.normal(ks[4], (b, t, n))
+    nv = jnp.asarray([5, 12])
+    y, fin, _ = mamba2.ssd_scan(x, dt, A, B, C, 4, num_valid=nv)
+    for i, k in enumerate([5, 12]):
+        _, fin_ref, _ = mamba2.ssd_scan(x[i:i + 1, :k], dt[i:i + 1, :k], A,
+                                        B[i:i + 1, :k], C[i:i + 1, :k], 4)
+        np.testing.assert_allclose(np.asarray(fin[i]),
+                                   np.asarray(fin_ref[0]), rtol=2e-4,
+                                   atol=2e-4)
+        # outputs over the valid prefix are untouched by the truncation
+        y_ref, _, _ = mamba2.ssd_scan(x[i:i + 1, :k], dt[i:i + 1, :k], A,
+                                      B[i:i + 1, :k], C[i:i + 1, :k], 4)
+        np.testing.assert_allclose(np.asarray(y[i, :k]),
+                                   np.asarray(y_ref[0]), rtol=2e-4,
+                                   atol=2e-4)
+    # num_valid == 0 rows keep their init state exactly
+    s0 = jax.random.normal(ks[0], (b, h, p, n))
+    _, fin0, _ = mamba2.ssd_scan(x, dt, A, B, C, 4, init_state=s0,
+                                 num_valid=jnp.asarray([0, 0]))
+    np.testing.assert_allclose(np.asarray(fin0), np.asarray(s0), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_mamba_forward_ignores_right_padding():
+    """mamba_forward(lengths=...) carries the state at each row's real
+    prompt end — padded rows must hand decode the same state as their
+    unpadded counterpart (the old code folded the padding into the SSD
+    state and the conv tail)."""
+    cfg, _ = model("mamba2-130m")
+    p = mamba2.init_mamba(jax.random.PRNGKey(0), cfg)
+    from repro.models.context import StepCtx
+
+    ctx = StepCtx(cfg=cfg, mode="prefill", astra_mode="off")
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, cfg.d_model))
+    n = 7  # real prompt; positions 7..11 are padding
+    cache = mamba2.init_mamba_cache(cfg, 1)
+    _, padded = mamba2.mamba_forward(p, x, ctx=ctx, cache=cache,
+                                     lengths=jnp.asarray([n]))
+    cache2 = mamba2.init_mamba_cache(cfg, 1)
+    _, exact = mamba2.mamba_forward(p, x[:, :n], ctx=ctx, cache=cache2,
+                                    lengths=jnp.asarray([n]))
+    np.testing.assert_allclose(np.asarray(padded["ssm"]),
+                               np.asarray(exact["ssm"]), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(padded["conv"]),
+                               np.asarray(exact["conv"]), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_mamba2_continuous_engine_matches_static():
+    """End-to-end: the continuous engine (max_len-padded prefill in padded
+    mode, chunk grid in chunked mode) must match the static engine for an
+    SSM arch — the bug this pins used to make padded SSM rows decode from
+    a polluted state."""
+    cfg, params = model("mamba2-130m")
+    prompts = prompts_of(cfg, (5, 11))
+    static = ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                           prefill_mode="padded", decode_chunk=3)
+    want = static.generate(prompts, max_new_tokens=5, temperature=0.0).tokens
+    for mode in ("padded", "chunked"):
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=64,
+                                       decode_chunk=2, prefill_mode=mode,
+                                       prefill_chunk=32)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5)
+        eng.run_until_drained()
+        got = {tuple(r.prompt): r.output for r in eng.finished}
+        for p, w in zip(prompts, want):
+            assert got[tuple(p)] == w, (mode, p, got[tuple(p)], w)
+
+
+# ---------------------------------------------------------------------------
+# Autotune: --prefill-chunk sweep persists, engines read
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_chunk_sweep_persists_and_engines_read(tmp_path, monkeypatch):
+    monkeypatch.setattr(serving_autotune, "RESULTS_DIR", str(tmp_path))
+    cfg, params = model("gpt2-small")
+    out = serving_autotune.sweep_prefill_chunk(
+        cfg, params, batch=2, max_len=96, prompt_lens=(10, 40),
+        candidates=(32, 128), repeats=1)
+    best = out["best_prefill_chunk"]
+    assert best in (32, 128)
+    assert (tmp_path / f"prefill_chunk_{cfg.name}.json").exists()
+    assert serving_autotune.load_prefill_chunk(cfg.name) == best
+    assert serving_autotune.load_prefill_chunk(cfg.name, batch=2) == best
+    eng = ServingEngine(cfg, params, max_len=96, astra_mode="off")
+    assert eng.prefill_chunk == best
+    ceng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=96)
+    assert ceng.prefill_chunk == best
+    # decode-chunk store is untouched by the prefill sweep
+    assert serving_autotune.load_decode_chunk(cfg.name) is None
+
+
+def test_prefill_autotune_absent_falls_back_to_default(tmp_path, monkeypatch):
+    monkeypatch.setattr(serving_autotune, "RESULTS_DIR", str(tmp_path))
+    cfg, params = model("gpt2-small")
+    eng = ServingEngine(cfg, params, max_len=96, astra_mode="off")
+    assert eng.prefill_chunk == serving_steps.DEFAULT_PREFILL_CHUNK
+    assert eng.prefill_buckets == serving_steps.prefill_buckets(
+        serving_steps.DEFAULT_PREFILL_CHUNK)
