@@ -14,9 +14,17 @@ perf PR diffs against.  Sections:
 * **decode**: steady-state decode steps/s through the shared jitted chunk.
 * **continuous**: ContinuousBatchingEngine drain stats (tok/s, TTFT,
   prefill chunk ticks) under chunked admission.
+* **pallas** (``--use-pallas``, implied by ``--smoke`` so the CI fast lane
+  carries the row): the same small workload through ``use_pallas=True``
+  vs the jnp reference.  On a box without a TPU the kernels execute in
+  interpret mode, so the wall-clock column measures the *interpreter* and
+  is marked ``interpret_mode: true`` — the assertable signal is greedy
+  parity, identical compile counts and identical host syncs, which hold on
+  every backend.
 * compile counts (CountingJit traces) and host syncs for every engine run.
 
-Usage:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--out F]
+Usage:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+            [--use-pallas] [--out F]
 """
 from __future__ import annotations
 
@@ -136,10 +144,64 @@ def bench_continuous(cfg, params, *, max_len, n_requests, prompt_len,
     return stats
 
 
+def bench_pallas(cfg, params, *, max_len, prompt_lens, max_new, repeats,
+                 seed=0):
+    """The --use-pallas column: one small chunked-prefill + decode workload
+    through both attention routes.  Returns per-route wall/compile/sync
+    rows plus the cross-route invariants the CI lane asserts."""
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(1, cfg.vocab_size, size=pl).tolist()
+               for pl in prompt_lens]
+    rows, toks = {}, {}
+    for use_pallas in (False, True):
+        eng = _engine(cfg, params, "chunked", max_len, decode_chunk=4,
+                      use_pallas=use_pallas)
+        res = eng.generate(prompts, max_new_tokens=max_new)  # compile warmup
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            eng.generate(prompts, max_new_tokens=max_new, seed=seed)
+        dt = (time.perf_counter() - t0) / repeats
+        key = "pallas" if use_pallas else "jnp"
+        rows[key] = {
+            "wall_s": dt,
+            "decode_tok_per_s": len(prompts) * max_new / dt,
+            "prefill_compiles": eng._prefill_chunk.trace_count,
+            "decode_compiles": eng._decode_chunk.trace_count,
+            "host_syncs": eng.host_syncs,
+        }
+        toks[key] = res.tokens
+    from repro.kernels import ops as kops
+
+    out = {
+        # interpret-mode wall-clock measures the interpreter, not the TPU
+        # kernel — only the invariants below are meaningful off-TPU
+        "interpret_mode": not kops.on_tpu(),
+        "prompt_lens": [int(p) for p in prompt_lens],
+        "max_new_tokens": int(max_new),
+        "jnp": rows["jnp"],
+        "pallas": rows["pallas"],
+        "greedy_parity": toks["jnp"] == toks["pallas"],
+        "compile_parity": (
+            rows["jnp"]["prefill_compiles"] == rows["pallas"]["prefill_compiles"]
+            and rows["jnp"]["decode_compiles"] == rows["pallas"]["decode_compiles"]),
+        "host_sync_parity": (
+            rows["jnp"]["host_syncs"] == rows["pallas"]["host_syncs"]),
+    }
+    assert out["greedy_parity"] and out["compile_parity"] \
+        and out["host_sync_parity"], out
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized run (small max_len, one repeat)")
+                    help="CI-sized run (small max_len, one repeat); "
+                         "implies --use-pallas")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="add the Pallas-kernel attention column "
+                         "(interpret-mode numbers marked as such off-TPU)")
     ap.add_argument("--arch", default="gpt2-small")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serving.json"))
@@ -182,8 +244,14 @@ def main(argv=None) -> dict:
         "decode": bench_decode(cfg, params, max_len=max_len, **decode_kw),
         "continuous": bench_continuous(cfg, params, max_len=max_len,
                                        **cont_kw),
-        "bench_wall_s": time.time() - t0,
     }
+    if args.use_pallas or args.smoke:
+        # always smoke-sized: off-TPU the kernels run interpreted, so a
+        # bigger workload would only benchmark the interpreter harder
+        report["pallas"] = bench_pallas(cfg, params, max_len=min(max_len, 256),
+                                        prompt_lens=(16, 48), max_new=8,
+                                        repeats=1)
+    report["bench_wall_s"] = time.time() - t0
     out_path = os.path.abspath(args.out)
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
@@ -200,6 +268,14 @@ def main(argv=None) -> dict:
     print(f"  decode: {report['decode']['decode_steps_per_s']:.1f} steps/s")
     print(f"  continuous: {report['continuous']['tok_per_s']:.1f} tok/s, "
           f"{report['continuous']['prefill_chunk_ticks']} prefill ticks")
+    if "pallas" in report:
+        p = report["pallas"]
+        tag = " [interpret]" if p["interpret_mode"] else ""
+        print(f"  pallas{tag}: jnp {p['jnp']['wall_s'] * 1e3:.1f} ms vs "
+              f"pallas {p['pallas']['wall_s'] * 1e3:.1f} ms; "
+              f"parity greedy={p['greedy_parity']} "
+              f"compiles={p['compile_parity']} "
+              f"syncs={p['host_sync_parity']}")
     print(f"  -> {out_path}")
     return report
 

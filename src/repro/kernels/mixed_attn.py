@@ -1,45 +1,60 @@
-"""Pallas TPU kernel: ASTRA mixed-precision flash attention.
+"""Pallas TPU kernels: ASTRA mixed-precision flash attention + the serving
+chunked-prefill flash step.
 
-The TPU adaptation of the paper's Mixed-Precision Attention (DESIGN.md §2):
-instead of materialising the dequantized K-hat/V-hat (T x d_kv bf16) in HBM
-and then running attention over them, the kernel keeps VQ *codes* in HBM and
-dequantizes block-by-block in VMEM while running the online-softmax (flash)
-loop.  HBM traffic for the remote sequence drops from T*hd*2 bytes to
-T*gph*4 bytes per kv-head (~8-64x less), directly attacking the memory
-roofline term of the attention layer.
+``mixed_flash_attention`` is the TPU adaptation of the paper's
+Mixed-Precision Attention (DESIGN.md §2): instead of materialising the
+dequantized K-hat/V-hat (T x d_kv bf16) in HBM and then running attention
+over them, the kernel keeps VQ *codes* in HBM and dequantizes
+block-by-block in VMEM while running the online-softmax (flash) loop.  HBM
+traffic for the remote sequence drops from T*hd*2 bytes to T*gph*4 bytes
+per kv-head (~8-64x less), directly attacking the memory roofline term of
+the attention layer.
 
 Blocks entirely inside the device's local shard use the full-precision
 local K/V tile instead (eq. (1) splice); the caller guarantees the local
-range is block-aligned.
+range is block-aligned.  ``q_start`` decouples the query offset from the
+local-KV splice offset (both ride the scalar-prefetch operand), so a
+prefix view — queries covering only a slice of the key range — traces once
+per *shape*, never per offset.
+
+``chunk_flash_attention`` is the serving sibling used by the chunked
+prefill pipeline (``serving.cache_backend.chunk_attend``): fp K/V view,
+causal-within-chunk + prefix masking against an explicit key-position map
+(ring slots pass their real positions, negative = invalid), optional
+sliding window, traced ``chunk_start``.  It replaces
+``attention._masked_chunk_attn``'s dense (B, H, W, view) score block with
+an online-softmax loop over (bq, bkv) tiles.
 
 Grid: (B, H, Tq/bq, T/bkv) with the kv dim innermost; (m, l, acc) scratch
-carries the flash state across kv blocks.  The shard offset arrives as a
-scalar-prefetch operand so the local-tile index_map can depend on it.
+carries the flash state across kv blocks.  Scalar operands arrive via
+``PrefetchScalarGridSpec`` so index_maps and masks can depend on them.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels import flash
+
+NEG_INF = flash.NEG_INF
 
 
-def _kernel(offset_ref, q_ref, kl_ref, vl_ref, kc_ref, vc_ref, cbk_ref,
+def _kernel(offs_ref, q_ref, kl_ref, vl_ref, kc_ref, vc_ref, cbk_ref,
             cbv_ref, out_ref, m_s, l_s, acc_s, *, bq, bkv, nkb, gph, dg,
             causal, softcap, tl):
     ki = pl.program_id(3)
     qi = pl.program_id(2)
-    offset = offset_ref[0]
+    offset = offs_ref[0]
+    q_start = offs_ref[1]
 
     @pl.when(ki == 0)
     def _init():
-        m_s[...] = jnp.full_like(m_s, NEG_INF)
-        l_s[...] = jnp.zeros_like(l_s)
-        acc_s[...] = jnp.zeros_like(acc_s)
+        flash.init_state(m_s, l_s, acc_s)
 
     # --- assemble the kv tile: dequantized codes or local FP --------------
     codes_k = kc_ref[0]  # (bkv, gph) int32
@@ -70,25 +85,18 @@ def _kernel(offset_ref, q_ref, kl_ref, vl_ref, kc_ref, vc_ref, cbk_ref,
     s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
     if softcap:
         s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.ones((bq, bkv), bool)
     if causal:
-        q_pos = offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        q_pos = q_start + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
         k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
-        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
-
-    m_prev = m_s[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    corr = jnp.exp(m_prev - m_new)
-    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1)
-    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
-        p, v_tile, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_s[...] = m_new
+        valid = q_pos >= k_pos
+        s = jnp.where(valid, s, NEG_INF)
+    flash.update(m_s, l_s, acc_s, s, valid, v_tile)
 
     @pl.when(ki == nkb - 1)
     def _emit():
-        out_ref[0, 0] = (acc_s[...] /
-                         jnp.maximum(l_s[...], 1e-30)[:, None]).astype(out_ref.dtype)
+        out_ref[0, 0] = flash.normalized(acc_s[...],
+                                         l_s[...]).astype(out_ref.dtype)
 
 
 @functools.partial(
@@ -108,8 +116,11 @@ def mixed_flash_attention(
     softcap: float = 0.0,
     block_q: int = 128,
     block_kv: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
+    q_start: Optional[jax.Array] = None,  # () int32 query offset; None = offset
 ) -> jax.Array:
+    from repro.kernels.ops import resolve_interpret
+
     b, h, tq, hd = q.shape
     hkv, tl = k_local.shape[1], k_local.shape[2]
     t, g = k_codes.shape[1], k_codes.shape[2]
@@ -154,10 +165,135 @@ def mixed_flash_attention(
     kern = functools.partial(
         _kernel, bq=bq, bkv=bkv, nkb=nkb, gph=gph, dg=dg, causal=causal,
         softcap=softcap, tl=tl)
+    offset = jnp.asarray(offset, jnp.int32)
+    qs = offset if q_start is None else jnp.asarray(q_start, jnp.int32)
+    offs = jnp.stack([offset, qs]).reshape(2)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        interpret=interpret,
-    )(jnp.asarray(offset, jnp.int32).reshape(1), q, k_local, v_local,
-      k_codes, v_codes, cb_k, cb_v)
+        interpret=resolve_interpret(interpret),
+    )(offs, q, k_local, v_local, k_codes, v_codes, cb_k, cb_v)
+
+
+# ---------------------------------------------------------------------------
+# Serving: chunked-prefill flash attention (fp view, explicit key positions)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_kernel(cs_ref, q_ref, k_ref, v_ref, kp_ref, out_ref, m_s, l_s,
+                  acc_s, *, bq, bkv, nkb, hd, causal, window, softcap):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        flash.init_state(m_s, l_s, acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)      # (bq, hd)
+    k_t = k_ref[0, 0].astype(jnp.float32)    # (bkv, hd)
+    v_t = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k_t, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = cs_ref[0] + qi * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 0)
+    k_pos = jnp.broadcast_to(kp_ref[0][None, :], (bq, bkv))
+    valid = k_pos >= 0  # negative = invalid slot (ring warmup / padding)
+    if causal:
+        valid = jnp.logical_and(valid, k_pos <= q_pos)
+    if window:
+        valid = jnp.logical_and(valid, k_pos > q_pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+    flash.update(m_s, l_s, acc_s, s, valid, v_t)
+
+    @pl.when(ki == nkb - 1)
+    def _emit():
+        out_ref[0, 0] = flash.normalized(acc_s[...], l_s[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_kv",
+                     "interpret"))
+def chunk_flash_attention(
+    q: jax.Array,      # (B, W, H, hd) — one prefill chunk's queries
+    k: jax.Array,      # (B, S, Hkv, hd) — the attention view
+    v: jax.Array,
+    k_pos: jax.Array,  # (S,) int32 global key positions, negative = invalid
+    chunk_start: jax.Array,  # () int32 — global offset of the chunk (traced)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash attention for one chunked-prefill step.
+
+    Masking: a key slot is attendable iff ``k_pos[j] >= 0`` (ring slots with
+    no real source are negative), ``k_pos[j] <= q_pos`` (causal) and, for
+    windowed layers, ``k_pos[j] > q_pos - window``, with
+    ``q_pos = chunk_start + query index``.  ``chunk_start`` rides the
+    scalar-prefetch operand so the grid walk never re-specializes; query /
+    key spans that don't divide the block sizes are zero-padded (padded key
+    slots carry ``k_pos = -1``; padded query rows are sliced off).  Returns
+    the normalized (B, W, H, hd) output in fp32, matching the precision of
+    the dense jnp epilogue it replaces.
+    """
+    from repro.kernels.ops import resolve_interpret
+
+    b, w, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    bq = min(block_q, w)
+    bkv = min(block_kv, s)
+    pad_q = (-w) % bq
+    pad_kv = (-s) % bkv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_kv), constant_values=-1)
+    wq, sk = w + pad_q, s + pad_kv
+    nkb = sk // bkv
+
+    # kernel-friendly layouts: heads outermost, (token, hd) innermost tiles
+    qt = jnp.moveaxis(q, 2, 1)   # (B, H, Wq, hd)
+    kt = jnp.moveaxis(k, 2, 1)   # (B, Hkv, Sk, hd)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    grid = (b, h, wq // bq, nkb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki, cs: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda bi, hi, qi, ki, cs: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda bi, hi, qi, ki, cs: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, bkv), lambda bi, hi, qi, ki, cs: (0, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda bi, hi, qi, ki, cs: (bi, hi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_chunk_kernel, bq=bq, bkv=bkv, nkb=nkb, hd=hd,
+                             causal=causal, window=window, softcap=softcap)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, wq, hd), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(jnp.reshape(jnp.asarray(chunk_start, jnp.int32), (1,)), qt, kt, vt,
+      k_pos.astype(jnp.int32).reshape(1, sk))
+    return jnp.moveaxis(out, 1, 2)[:, :w]

@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for the Pallas kernels."""
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel entry point has an oracle here with the same signature and
+masking semantics; the differential conformance harness
+(``tests/test_pallas_serving.py``, cases from ``kernels.testing``) pins the
+kernels to these block-by-block.
+"""
 from __future__ import annotations
 
 import jax
@@ -28,7 +34,7 @@ def dequant_head(codes: jax.Array, codebook: jax.Array, kv_head: int,
     gph = hd // dg
     g0 = kv_head * gph
     parts = [
-        jnp.take(codebook[g0 + j], codes[:, g0 + j], axis=0)
+        jnp.take(codebook[g0 + j], codes[:, g0 + j].astype(jnp.int32), axis=0)
         for j in range(gph)
     ]
     return jnp.concatenate(parts, axis=-1)
@@ -46,13 +52,17 @@ def mixed_flash_ref(
     *,
     causal: bool = True,
     softcap: float = 0.0,
+    q_start=None,
 ) -> jax.Array:
     """Oracle for the mixed-precision flash kernel: dequantize the full
-    K-hat/V-hat, splice the local FP K/V, run exact softmax attention."""
+    K-hat/V-hat, splice the local FP K/V, run exact softmax attention.
+    ``q_start`` decouples the query offset from the splice offset (prefix
+    views); None keeps them equal."""
     b, h, tq, hd = q.shape
     hkv = k_local.shape[1]
     t = k_codes.shape[1]
     rep = h // hkv
+    qs = offset if q_start is None else q_start
 
     def one_bh(qb, klb, vlb, kcb, vcb, g):
         khat = dequant_head(kcb, cb_k, g, hd)  # (T, hd)
@@ -67,7 +77,7 @@ def mixed_flash_ref(
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
         if causal:
-            qpos = offset + jnp.arange(tq)
+            qpos = qs + jnp.arange(tq)
             kpos = jnp.arange(t)
             s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
         w = jax.nn.softmax(s, axis=-1)
@@ -83,7 +93,96 @@ def mixed_flash_ref(
     return out
 
 
-def vq_decode_attn_ref(q, k_codes, v_codes, cb_k, cb_v, lengths):
+def chunk_flash_ref(
+    q: jax.Array,      # (B, W, H, hd)
+    k: jax.Array,      # (B, S, Hkv, hd)
+    v: jax.Array,
+    k_pos: jax.Array,  # (S,) int32 global key positions, negative = invalid
+    chunk_start,       # () int32 global offset of the chunk
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Oracle for ``chunk_flash_attention``: one dense masked softmax per
+    (batch, head); returns the normalized (B, W, H, hd) output in fp32.
+    Queries with no valid key normalize against an epsilon (output 0)."""
+    b, w, h, hd = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    q_pos = chunk_start + jnp.arange(w)
+    valid = k_pos[None, :] >= 0  # (W, S)
+    if causal:
+        valid = valid & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+
+    out = jnp.zeros((b, w, h, hd), jnp.float32)
+    for bi in range(b):
+        for hi in range(h):
+            g = hi // rep
+            sc = (q[bi, :, hi].astype(jnp.float32)
+                  @ k[bi, :, g].astype(jnp.float32).T) / jnp.sqrt(
+                jnp.asarray(hd, jnp.float32))
+            if softcap:
+                sc = softcap * jnp.tanh(sc / softcap)
+            sc = jnp.where(valid, sc, NEG_INF)
+            m = jnp.max(sc, axis=-1, keepdims=True)
+            p = jnp.where(valid, jnp.exp(sc - m), 0.0)
+            l = jnp.sum(p, axis=-1)
+            o = p @ v[bi, :, g].astype(jnp.float32)
+            out = out.at[bi, :, hi].set(o / jnp.maximum(l, 1e-30)[:, None])
+    return out
+
+
+def _ring_valid(length, s, window):
+    """Ring-semantics slot validity for one row: slot j holds the greatest
+    position ≡ j (mod s) at or below ``length`` (== j when length < s)."""
+    j = jnp.arange(s)
+    pos = length - jnp.mod(length - j, s)
+    valid = (pos >= 0) & (pos <= length)
+    if window:
+        valid = valid & (pos > length - window)
+    return valid
+
+
+def fp_decode_attn_ref(q, k, v, lengths, *, window: int = 0,
+                       softcap: float = 0.0):
+    """Oracle for ``fp_decode_attention``: dense masked softmax per (batch,
+    head) over an fp slab/ring; returns the same (m, l, acc) partials.
+
+    q: (B, H, hd); k/v: (B, S, Hkv, hd); lengths: (B,)."""
+    b, h, hd = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+
+    m_o = jnp.zeros((b, h), jnp.float32)
+    l_o = jnp.zeros((b, h), jnp.float32)
+    a_o = jnp.zeros((b, h, hd), jnp.float32)
+    for bi in range(b):
+        valid = _ring_valid(lengths[bi], s, window)
+        for hi in range(h):
+            g = hi // rep
+            sc = (q[bi, hi].astype(jnp.float32)
+                  @ k[bi, :, g].astype(jnp.float32).T) / jnp.sqrt(
+                jnp.asarray(hd, jnp.float32))
+            if softcap:
+                sc = softcap * jnp.tanh(sc / softcap)
+            sc = jnp.where(valid, sc, NEG_INF)
+            m = jnp.max(sc)
+            p = jnp.where(valid, jnp.exp(sc - m), 0.0)
+            l = jnp.sum(p)
+            acc = p @ v[bi, :, g].astype(jnp.float32)
+            m_o = m_o.at[bi, hi].set(m)
+            l_o = l_o.at[bi, hi].set(l)
+            a_o = a_o.at[bi, hi].set(acc)
+    return m_o, l_o, a_o
+
+
+def vq_decode_attn_ref(q, k_codes, v_codes, cb_k, cb_v, lengths, *,
+                       softcap: float = 0.0):
     """Oracle for vq_decode_attention: dequantize the full cache, one exact
     masked softmax per (batch, head); returns the same (m, l, acc) partials.
 
@@ -105,6 +204,8 @@ def vq_decode_attn_ref(q, k_codes, v_codes, cb_k, cb_v, lengths):
             vhat = dequant_head(v_codes[bi], cb_v, kv, hd)
             sc = (q[bi, hi].astype(jnp.float32) @ khat.T) / jnp.sqrt(
                 jnp.asarray(hd, jnp.float32))
+            if softcap:
+                sc = softcap * jnp.tanh(sc / softcap)
             valid = jnp.arange(s) <= lengths[bi]
             sc = jnp.where(valid, sc, NEG_INF)
             m = jnp.max(sc)

@@ -1,0 +1,148 @@
+"""Shared case generator for the differential kernel-conformance harness.
+
+The harness (``tests/test_pallas_serving.py``) runs every Pallas entry
+point in interpret mode against its pure-jnp oracle (``kernels.ref``) and
+the serving engines against their non-Pallas reference.  Since this box
+has no TPU, these cases are the *only* thing carrying the compiled path's
+correctness — they are deliberately adversarial about block/grid edges:
+
+* key/query spans that do NOT divide ``block_q`` / ``block_kv``,
+* offsets at shard/block boundaries,
+* ring slots with no real source (negative positions),
+* lengths at 0, block edges, span-1, and past a ring's span,
+* uint8/uint16 code dtypes and group geometries down to 1 group/head.
+
+Everything returns plain dicts of arrays + call kwargs so both the pytest
+suite and ad-hoc benchmarks can replay a case verbatim against the kernel
+and the oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_case(seed: int, *, b: int = 1, w: int = 8, s: int = 24, h: int = 2,
+               hkv: int = 1, hd: int = 8, chunk_start: int = 0,
+               window: int = 0, softcap: float = 0.0, causal: bool = True,
+               ring: bool = False) -> Dict:
+    """A ``chunk_flash_attention`` case.
+
+    ``ring=True`` builds the windowed-layer view: the first ``s - w`` slots
+    carry ring positions ending just before ``chunk_start`` (negative
+    during warmup, exactly ``attention.ring_positions``), the last ``w``
+    slots are the chunk itself at its true positions.  ``ring=False`` is
+    the global prefix view ``k_pos = arange(s)``.
+    """
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, w, h, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    if ring:
+        ns = s - w
+        assert ns > 0, "ring case needs s > w"
+        j = jnp.arange(ns)
+        last = chunk_start - 1
+        k_pos_ring = last - jnp.mod(last - j, ns)  # may be negative (warmup)
+        k_pos = jnp.concatenate(
+            [k_pos_ring, chunk_start + jnp.arange(w)]).astype(jnp.int32)
+    else:
+        k_pos = jnp.arange(s, dtype=jnp.int32)
+    return {
+        "q": q, "k": k, "v": v, "k_pos": k_pos,
+        "chunk_start": jnp.asarray(chunk_start, jnp.int32),
+        "kwargs": dict(causal=causal, window=window, softcap=softcap),
+    }
+
+
+def decode_case(seed: int, *, b: int = 2, s: int = 32, h: int = 4,
+                hkv: int = 2, hd: int = 8, window: int = 0,
+                softcap: float = 0.0,
+                lengths: Sequence[int] = ()) -> Dict:
+    """An ``fp_decode_attention`` case.  ``lengths`` defaults to a spread
+    hitting 0, a block edge and the span end; values past ``s`` exercise
+    the ring wrap (only meaningful with ``window``)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    if not lengths:
+        base = [0, s // 2, s - 1, s + s // 2]
+        lengths = [base[i % len(base)] for i in range(b)]
+    lens = jnp.asarray(list(lengths)[:b] + [s - 1] * (b - len(lengths)),
+                       jnp.int32)
+    return {
+        "q": q, "k": k, "v": v, "lengths": lens,
+        "kwargs": dict(window=window, softcap=softcap),
+    }
+
+
+def coded_case(seed: int, *, b: int = 1, s: int = 32, h: int = 4,
+               hkv: int = 2, gph: int = 2, dg: int = 4, kk: int = 16,
+               softcap: float = 0.0, code_dtype=jnp.int32,
+               lengths: Sequence[int] = ()) -> Dict:
+    """A ``vq_decode_attention`` case: (B, S, G) codes in ``code_dtype``
+    (uint8/uint16 exercise the storage-width cast) + (G, K, dg) codebooks;
+    hd = gph * dg per head."""
+    hd = gph * dg
+    g = gph * hkv
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kc = jax.random.randint(ks[1], (b, s, g), 0, kk, jnp.int32)
+    vc = jax.random.randint(ks[2], (b, s, g), 0, kk, jnp.int32)
+    cb_k = jax.random.normal(ks[3], (g, kk, dg))
+    cb_v = jax.random.normal(ks[4], (g, kk, dg))
+    if not lengths:
+        lengths = [s // 2 + i for i in range(b)]
+    lens = jnp.asarray(list(lengths)[:b] + [s - 1] * (b - len(lengths)),
+                       jnp.int32)
+    return {
+        "q": q, "k_codes": kc.astype(code_dtype),
+        "v_codes": vc.astype(code_dtype), "cb_k": cb_k, "cb_v": cb_v,
+        "lengths": lens, "kwargs": dict(softcap=softcap),
+    }
+
+
+def mixed_case(seed: int, *, b: int = 1, h: int = 2, hkv: int = 1,
+               t: int = 64, tl: int = 16, tq: int = 0, hd: int = 8,
+               gph: int = 2, kk: int = 16, offset_blocks: int = 0,
+               bkv: int = 16, q_start=None) -> Tuple:
+    """A ``mixed_flash_attention`` case (positional arg tuple + kwargs):
+    queries over a (possibly distinct) prefix-view offset, local fp tile at
+    ``offset_blocks * bkv``, codes everywhere else."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    g = gph * hkv
+    dg = hd // gph
+    q_t = tq or tl
+    q = jax.random.normal(ks[0], (b, h, q_t, hd))
+    k_local = jax.random.normal(ks[1], (b, hkv, tl, hd))
+    v_local = jax.random.normal(ks[2], (b, hkv, tl, hd))
+    k_codes = jax.random.randint(ks[3], (b, t, g), 0, kk, jnp.int32)
+    v_codes = jax.random.randint(ks[4], (b, t, g), 0, kk, jnp.int32)
+    cb_k = jax.random.normal(ks[5], (g, kk, dg))
+    cb_v = jax.random.normal(ks[6], (g, kk, dg))
+    offset = jnp.asarray(offset_blocks * bkv, jnp.int32)
+    args = (q, k_local, v_local, k_codes, v_codes, cb_k, cb_v, offset)
+    kwargs = {} if q_start is None else {
+        "q_start": jnp.asarray(q_start, jnp.int32)}
+    return args, kwargs
+
+
+def boundary_lengths(max_len: int, *, chunk: int = 32, page: int = 0,
+                     window: int = 0, view_floor: int = 128,
+                     budget: int = 4) -> Tuple[int, ...]:
+    """Prompt lengths straddling every compiled-shape boundary the serving
+    stack has: the prefill chunk bucket, the KV page, the SWA window and
+    the attention-view ladder — each edge ±1 plus the edge itself, capped
+    so prompt + decode budget fits ``max_len``."""
+    edges = {1, chunk - 1, chunk, chunk + 1}
+    if page:
+        edges |= {page - 1, page, page + 1}
+    if window:
+        edges |= {window - 1, window, window + 1}
+    if view_floor < max_len:
+        edges |= {view_floor - 1, view_floor, view_floor + 1}
+    cap = max_len - budget - 1
+    return tuple(sorted(n for n in edges if 0 < n <= cap))

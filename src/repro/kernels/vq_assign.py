@@ -11,6 +11,7 @@ accumulator pattern matches the sequential TPU grid execution.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -53,8 +54,10 @@ def vq_assign(
     *,
     block_t: int = 256,
     block_k: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    from repro.kernels.ops import resolve_interpret
+
     t, g, dg = x.shape
     k = codebook.shape[1]
     bt = min(block_t, t)
@@ -76,5 +79,5 @@ def vq_assign(
             pltpu.VMEM((bt,), jnp.float32),
             pltpu.VMEM((bt,), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, codebook)

@@ -1,42 +1,55 @@
-"""Pallas TPU kernel: flash-decoding over a VQ-compressed KV cache.
+"""Pallas TPU kernels: flash-decoding over VQ-compressed and fp KV caches.
 
-The Appendix-G runtime stores non-local KV as VQ codes (uint8/16 per group).
-At decode, the reference path dequantizes the WHOLE cache to bf16 in HBM
-(S x d_kv bytes) before attention; this kernel keeps codes in HBM and
-dequantizes block-by-block in VMEM while running the online-softmax loop —
-the decode-side sibling of ``mixed_attn.py`` (HBM traffic drops by the
-dequant ratio, ~12.8x for G=32/K=1024 vs bf16).
+``vq_decode_attention`` — the Appendix-G runtime stores non-local KV as VQ
+codes (uint8/16 per group).  At decode, the reference path dequantizes the
+WHOLE cache to bf16 in HBM (S x d_kv bytes) before attention; this kernel
+keeps codes in HBM and dequantizes block-by-block in VMEM while running
+the online-softmax loop — the decode-side sibling of ``mixed_attn.py``
+(HBM traffic drops by the dequant ratio, ~12.8x for G=32/K=1024 vs bf16).
 
-Emits per-device flash partials (m, l, acc) so the sequence-sharded decode
-can merge across shards with ``merge_partial_stats`` (one tiny collective),
-exactly mirroring ``attention._decode_sharded``.
+``fp_decode_attention`` — the same flash-decoding loop over a
+full-precision slab or ring: the serving path for every layout whose
+decode view is fp (dense slabs, SWA rings, page-table-gathered tiles, and
+coded layers whose group geometry the vq kernel cannot split).  Slot
+validity uses *ring semantics*: slot ``j`` holds the greatest position
+``p ≡ j (mod S)`` at or below ``lengths`` — exactly
+``attention.ring_positions`` — which degenerates to the plain
+``pos <= lengths`` prefix mask whenever ``lengths < S``, so one mask
+covers dense and windowed layouts alike.
+
+Both emit per-device flash partials (m, l, acc) so the sequence-sharded
+decode can merge across shards with ``merge_partial_stats`` (one tiny
+collective), exactly mirroring ``attention._decode_sharded``.
 
 Grid: (B, Hkv, S/bkv), kv innermost; scratch carries the flash state.
+Key spans that don't divide ``block_kv`` are zero-padded and the padded
+slots masked out via the static real length.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels import flash
+
+NEG_INF = flash.NEG_INF
 
 
 def _kernel(lengths_ref, q_ref, kc_ref, vc_ref, cbk_ref, cbv_ref,
             m_ref, l_ref, acc_ref, m_s, l_s, acc_s, *,
-            bkv, nkb, gph, dg, rep):
+            bkv, nkb, s_real, gph, dg, rep, softcap):
     ki = pl.program_id(2)
     bi = pl.program_id(0)
     length = lengths_ref[bi]
 
     @pl.when(ki == 0)
     def _init():
-        m_s[...] = jnp.full_like(m_s, NEG_INF)
-        l_s[...] = jnp.zeros_like(l_s)
-        acc_s[...] = jnp.zeros_like(acc_s)
+        flash.init_state(m_s, l_s, acc_s)
 
     hd = gph * dg
     codes_k = kc_ref[0]  # (bkv, gph)
@@ -54,19 +67,12 @@ def _kernel(lengths_ref, q_ref, kc_ref, vc_ref, cbk_ref, cbv_ref,
     s = jax.lax.dot_general(q, k_tile, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
     pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (rep, bkv), 1)
-    s = jnp.where(pos <= length, s, NEG_INF)
-
-    m_prev = m_s[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    p = jnp.where(pos <= length, p, 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1)
-    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
-        p, v_tile, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_s[...] = m_new
+    valid = jnp.logical_and(pos < s_real, pos <= length)
+    s = jnp.where(valid, s, NEG_INF)
+    flash.update(m_s, l_s, acc_s, s, valid, v_tile)
 
     @pl.when(ki == nkb - 1)
     def _emit():
@@ -75,21 +81,25 @@ def _kernel(lengths_ref, q_ref, kc_ref, vc_ref, cbk_ref, cbv_ref,
         acc_ref[0, 0] = acc_s[...]
 
 
-@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_kv", "softcap", "interpret"))
 def vq_decode_attention(
     q: jax.Array,  # (B, H, hd) — one decode step's queries
-    k_codes: jax.Array,  # (B, S, G) int32
+    k_codes: jax.Array,  # (B, S, G) any uint8/16/int dtype
     v_codes: jax.Array,
     cb_k: jax.Array,  # (G, K, dg)
     cb_v: jax.Array,
     lengths: jax.Array,  # (B,) — positions <= lengths[b] are valid
     *,
+    softcap: float = 0.0,
     block_kv: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Returns flash partials (m (B,H), l (B,H), acc (B,H,hd)) over the
     coded cache.  out = acc / l; cross-shard merging follows
     ``merge_partial_stats`` semantics."""
+    from repro.kernels.ops import resolve_interpret
+
     b, h, hd = q.shape
     s, g = k_codes.shape[1], k_codes.shape[2]
     k = cb_k.shape[1]
@@ -99,9 +109,14 @@ def vq_decode_attention(
     rep = h // hkv
     gph = g // hkv
     assert gph * dg == hd, (gph, dg, hd)
+    k_codes = k_codes.astype(jnp.int32)  # uint8/16 code slabs index as int32
+    v_codes = v_codes.astype(jnp.int32)
     bkv = min(block_kv, s)
-    assert s % bkv == 0
-    nkb = s // bkv
+    pad = (-s) % bkv
+    if pad:  # zero-pad to a block multiple; code 0 is valid, mask rejects
+        k_codes = jnp.pad(k_codes, ((0, 0), (0, pad), (0, 0)))
+        v_codes = jnp.pad(v_codes, ((0, 0), (0, pad), (0, 0)))
+    nkb = (s + pad) // bkv
 
     qg = q.reshape(b, hkv, rep, hd)
     grid = (b, hkv, nkb)
@@ -126,8 +141,8 @@ def vq_decode_attention(
             pltpu.VMEM((rep, hd), jnp.float32),
         ],
     )
-    kern = functools.partial(_kernel, bkv=bkv, nkb=nkb, gph=gph, dg=dg,
-                             rep=rep)
+    kern = functools.partial(_kernel, bkv=bkv, nkb=nkb, s_real=s, gph=gph,
+                             dg=dg, rep=rep, softcap=softcap)
     m, l, acc = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
@@ -136,6 +151,116 @@ def vq_decode_attention(
             jax.ShapeDtypeStruct((b, hkv, rep), jnp.float32),
             jax.ShapeDtypeStruct((b, hkv, rep, hd), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(lengths.astype(jnp.int32), qg, k_codes, v_codes, cb_k, cb_v)
+    return (m.reshape(b, h), l.reshape(b, h), acc.reshape(b, h, hd))
+
+
+# ---------------------------------------------------------------------------
+# fp flash decode (dense slabs, SWA rings, gathered page tiles)
+# ---------------------------------------------------------------------------
+
+
+def _fp_kernel(lengths_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
+               m_s, l_s, acc_s, *, bkv, nkb, s_real, hd, rep, window,
+               softcap):
+    ki = pl.program_id(2)
+    bi = pl.program_id(0)
+    length = lengths_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        flash.init_state(m_s, l_s, acc_s)
+
+    k_tile = k_ref[0, 0].astype(jnp.float32)  # (bkv, hd)
+    v_tile = v_ref[0, 0].astype(jnp.float32)
+    q = q_ref[0, 0].astype(jnp.float32)       # (rep, hd)
+    s = jax.lax.dot_general(q, k_tile, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # ring semantics: slot j holds the greatest position ≡ j (mod S) at or
+    # below `length` (== j itself whenever length < S); negative = warmup.
+    j = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (rep, bkv), 1)
+    pos = length - jnp.mod(length - j, s_real)
+    valid = jnp.logical_and(j < s_real,
+                            jnp.logical_and(pos >= 0, pos <= length))
+    if window:
+        valid = jnp.logical_and(valid, pos > length - window)
+    s = jnp.where(valid, s, NEG_INF)
+    flash.update(m_s, l_s, acc_s, s, valid, v_tile)
+
+    @pl.when(ki == nkb - 1)
+    def _emit():
+        m_ref[0, 0] = m_s[...]
+        l_ref[0, 0] = l_s[...]
+        acc_ref[0, 0] = acc_s[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "block_kv", "interpret"))
+def fp_decode_attention(
+    q: jax.Array,        # (B, H, hd) — one decode step's queries
+    k: jax.Array,        # (B, S, Hkv, hd) fp slab / ring / gathered tile
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) — the new token's position per row
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_kv: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """Returns flash partials (m (B,H), l (B,H), acc (B,H,hd)) over an fp
+    KV view with ring-semantics masking (see module docstring).  out =
+    acc / l; cross-shard merging follows ``merge_partial_stats``."""
+    from repro.kernels.ops import resolve_interpret
+
+    b, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    bkv = min(block_kv, s)
+    pad = (-s) % bkv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkb = (s + pad) // bkv
+
+    qg = q.reshape(b, hkv, rep, hd)
+    kt = jnp.moveaxis(k, 2, 1)  # (B, Hkv, Sk, hd)
+    vt = jnp.moveaxis(v, 2, 1)
+    grid = (b, hkv, nkb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda bi, gi, ki, L: (bi, gi, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda bi, gi, ki, L: (bi, gi, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda bi, gi, ki, L: (bi, gi, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rep), lambda bi, gi, ki, L: (bi, gi, 0)),
+            pl.BlockSpec((1, 1, rep), lambda bi, gi, ki, L: (bi, gi, 0)),
+            pl.BlockSpec((1, 1, rep, hd), lambda bi, gi, ki, L: (bi, gi, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_fp_kernel, bkv=bkv, nkb=nkb, s_real=s, hd=hd,
+                             rep=rep, window=window, softcap=softcap)
+    m, l, acc = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, rep), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, rep), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, rep, hd), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(lengths.astype(jnp.int32), qg, kt, vt)
     return (m.reshape(b, h), l.reshape(b, h), acc.reshape(b, h, hd))

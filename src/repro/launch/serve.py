@@ -39,6 +39,11 @@ def main() -> None:
                     help="on-device decode chunk size; 0 = the persisted "
                          "autotune winner (results/autotune/) or the "
                          "engine default")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route the attention hot loops (decode + chunked "
+                         "prefill, every cache mode) through the Pallas "
+                         "kernels: compiled on TPU, interpret-mode (slow, "
+                         "correctness-equivalent) elsewhere")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -58,7 +63,8 @@ def main() -> None:
         cfg, params, max_len=args.max_len,
         astra_mode="sim" if cfg.astra.enabled else "off",
         cache_mode=args.cache_mode, page_size=args.page_size,
-        decode_chunk=args.decode_chunk or None)
+        decode_chunk=args.decode_chunk or None,
+        use_pallas=args.use_pallas)
 
     rng = np.random.RandomState(args.seed)
     prompts = [

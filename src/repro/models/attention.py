@@ -237,6 +237,55 @@ def _masked_decode_attn(params, q, k_all, v_all, valid, cap) -> jax.Array:
     return out.reshape(b, 1, -1) @ params["wo"]
 
 
+# ---------------------------------------------------------------------------
+# Pallas epilogue twins (StepCtx.use_pallas): same y = flash(q, KV) @ wo
+# contract as the jnp funnels above, but the score block never materializes
+# — the online-softmax runs in the kernels (interpret on CPU, compiled TPU)
+# ---------------------------------------------------------------------------
+
+
+def _pallas_decode_attn(params, q, k_all, v_all, lengths, window,
+                        cap) -> jax.Array:
+    """Pallas twin of ``_masked_decode_attn`` for fp views: the validity
+    mask is derived inside the kernel from ``lengths`` with ring semantics
+    (identical to the dense masks for every serving layout — see
+    ``kernels.vq_decode_attn``)."""
+    from repro.kernels import ops
+
+    b = q.shape[0]
+    out = ops.decode_attention(q, k_all, v_all, lengths, window=window,
+                               softcap=cap)
+    return out.reshape(b, 1, -1) @ params["wo"]
+
+
+def _pallas_coded_decode_attn(params, q, k_codes, v_codes, vq_params,
+                              lengths, cap) -> jax.Array:
+    """Decode directly over a coded cache: VQ codes are dequantized
+    block-by-block in VMEM, never materialized in HBM (the jnp path
+    dequantizes the whole cache first)."""
+    from repro.kernels import ops
+
+    b = q.shape[0]
+    out = ops.coded_decode_attention(
+        q, k_codes, v_codes, vq_params["k"]["codebook"],
+        vq_params["v"]["codebook"], lengths, softcap=cap)
+    return out.reshape(b, 1, -1) @ params["wo"]
+
+
+def _pallas_chunk_attn(params, q, k_all, v_all, chunk_start, k_pos, window,
+                       cap) -> jax.Array:
+    """Pallas twin of ``_masked_chunk_attn``: ``chunk_start`` rides the
+    kernel's scalar-prefetch operand (traced — the chunk grid walk never
+    re-specializes) and ``k_pos`` (1-d, negative = invalid slot) carries
+    the prefix/ring key-position map."""
+    from repro.kernels import ops
+
+    b, wq = q.shape[:2]
+    out = ops.chunk_attention(q, k_all, v_all, k_pos, chunk_start,
+                              causal=True, window=window, softcap=cap)
+    return out.reshape(b, wq, -1) @ params["wo"]
+
+
 def attention_chunk(
     params: Dict[str, jax.Array],
     x: jax.Array,  # (B, W, D) one prefill chunk of hidden states

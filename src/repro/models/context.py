@@ -35,8 +35,13 @@ class StepCtx:
     logits_last_only: bool = False
     # blocked (flash-style) attention KV chunk for the spmd path; 0 = off
     attn_chunk: int = 0
+    # route the serving attention hot loops (decode_attend + chunk_attend,
+    # every cache layout) through the Pallas kernels instead of the dense
+    # jnp epilogues: compiled on TPU, interpret-mode elsewhere (the
+    # conformance harness pins greedy-token parity either way)
+    use_pallas: bool = False
     # route the sharded vq-cache decode through the Pallas flash-decode
-    # kernel (kernels/vq_decode_attn.py); interpret-mode on CPU
+    # kernel (kernels/vq_decode_attn.py); implied by use_pallas
     use_pallas_decode: bool = False
 
     @property

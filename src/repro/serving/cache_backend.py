@@ -25,6 +25,20 @@ Everything outside this file talks to ``ctx.backend`` (resolved from
 ``StepCtx.cache_mode``); a tokenize-based grep test forbids ``cache_mode``
 string dispatch anywhere else, so adding a cache layout is one new class
 here, not five call-site edits.
+
+Pallas routing (``StepCtx.use_pallas``): every ``decode_attend`` /
+``chunk_attend`` below forks between the dense jnp epilogues
+(``attention._masked_{decode,chunk}_attn`` — the reference path) and their
+Pallas twins (``attention._pallas_*``), which run the same online-softmax
+in ``kernels/`` tiles: fp views (slabs, SWA rings, page-gathered tiles) go
+through the flash kernels directly; coded layers keep their VQ codes
+compressed in HBM when the group geometry splits per kv head
+(``kernels.ops.vq_kernel_geometry_ok``) and otherwise dequantize in jnp
+but still attend through the fp kernel.  Paged layouts gather their pages
+into block-aligned contiguous tiles *before* kernel entry, so the kernels
+never see a block table.  The differential conformance harness
+(``tests/test_pallas_serving.py``) pins greedy-token parity between the
+two forks for every layout on both engines.
 """
 from __future__ import annotations
 
@@ -75,13 +89,16 @@ def donation_supported(platform: Optional[str] = None) -> bool:
 # ---------------------------------------------------------------------------
 
 
-def _ring_decode(params, q, k_new, v_new, cache, lengths, window, cap):
+def _ring_decode(params, q, k_new, v_new, cache, lengths, window, cap, ctx):
     """Dense ring cache decode (windowed layers): write slot ``l % S``,
     mask to the last ``window`` positions."""
     s = cache["k"].shape[1]
     slot = jnp.mod(lengths, s)
     ck = attn._write_at(cache["k"], k_new, slot)
     cv = attn._write_at(cache["v"], v_new, slot)
+    if ctx.use_pallas:
+        y = attn._pallas_decode_attn(params, q, ck, cv, lengths, window, cap)
+        return y, {"k": ck, "v": cv}
     pos = attn.ring_positions(s, lengths)  # (B, S)
     valid = (pos >= 0) & (pos >= (lengths[:, None] - window + 1)) & (
         pos <= lengths[:, None])
@@ -150,6 +167,19 @@ def _view_len(full: int, history_len: int) -> int:
     return full if history_len <= 0 else min(int(history_len), full)
 
 
+def _view_chunk_attn(params, q, k_view, v_view, chunk_start, hv, cap, ctx):
+    """Global-layer chunk attention over the first ``hv`` cache positions
+    (the written prefix / fp scratch / gathered pages): causal against
+    ``k_pos = arange(hv)``, jnp or Pallas per ``ctx.use_pallas``."""
+    k_pos = jnp.arange(hv)
+    if ctx.use_pallas:
+        return attn._pallas_chunk_attn(params, q, k_view, v_view,
+                                       chunk_start, k_pos, 0, cap)
+    return attn._masked_chunk_attn(params, q, k_view, v_view,
+                                   chunk_start + jnp.arange(q.shape[1]),
+                                   k_pos, 0, cap)
+
+
 def _require_scratch(cache: Dict, name: str) -> None:
     if "k_fp" not in cache:
         raise ValueError(
@@ -187,8 +217,16 @@ def _ring_chunk_write(cache: Dict, k: jax.Array, v: jax.Array,
             "v": jnp.where(t4, vn.astype(cache["v"].dtype), cache["v"])}
 
 
+def _ring_k_pos(s: int, chunk_start: jax.Array, w: int) -> jax.Array:
+    """Key positions of ``concat(ring-before-write, chunk)`` for one chunk
+    step: ring slot j holds position ≡ j (mod S) just below ``chunk_start``
+    (negative during warmup = invalid), the chunk holds its own."""
+    rp = attn.ring_positions(s, jnp.reshape(chunk_start - 1, (1,)))[0]
+    return jnp.concatenate([rp, chunk_start + jnp.arange(w)])
+
+
 def _ring_chunk_attend(params, q, k_new, v_new, cache, chunk_start, lengths,
-                       window, cap) -> Tuple[jax.Array, Dict]:
+                       window, cap, ctx) -> Tuple[jax.Array, Dict]:
     """Windowed-layer chunk attention over ``concat(ring-before-write,
     chunk)``: the ring supplies the last ``S >= window`` positions before
     ``chunk_start`` and the chunk supplies its own K/V at exact positions —
@@ -196,18 +234,28 @@ def _ring_chunk_attend(params, q, k_new, v_new, cache, chunk_start, lengths,
     that *early* queries of the same chunk still need."""
     b, w = k_new.shape[:2]
     s = cache["k"].shape[1]
-    rp = jnp.broadcast_to(
-        attn.ring_positions(s, jnp.reshape(chunk_start - 1, (1,))), (b, s))
-    q_pos = chunk_start + jnp.arange(w)
-    k_pos = jnp.concatenate(
-        [rp, jnp.broadcast_to(q_pos[None], (b, w))], axis=1)
+    k_pos = _ring_k_pos(s, chunk_start, w)
     k_all = jnp.concatenate(
         [cache["k"].astype(k_new.dtype), k_new], axis=1)
     v_all = jnp.concatenate(
         [cache["v"].astype(v_new.dtype), v_new], axis=1)
-    y = attn._masked_chunk_attn(params, q, k_all, v_all, q_pos, k_pos,
-                                window, cap)
+    if ctx.use_pallas:
+        y = attn._pallas_chunk_attn(params, q, k_all, v_all, chunk_start,
+                                    k_pos, window, cap)
+    else:
+        y = attn._masked_chunk_attn(params, q, k_all, v_all,
+                                    chunk_start + jnp.arange(w), k_pos,
+                                    window, cap)
     return y, _ring_chunk_write(cache, k_new, v_new, chunk_start, lengths)
+
+
+def _coded_kernel_ok(cfg) -> bool:
+    """Whether the Pallas coded-decode kernel can consume this config's
+    codes directly (whole VQ groups per kv head); otherwise the use_pallas
+    path dequantizes in jnp and attends through the fp flash kernel."""
+    from repro.kernels.ops import vq_kernel_geometry_ok
+
+    return vq_kernel_geometry_ok(cfg.num_kv_heads, cfg.astra.groups)
 
 
 def _encode_pair(k, v, cfg, vq_params):
@@ -384,9 +432,12 @@ class FPSlabBackend(CacheBackend):
         window = attn.kind_window(kind, cfg)
         if window:
             return _ring_decode(params, q, k_new, v_new, cache, lengths,
-                                window, cap)
+                                window, cap, ctx)
         ck = attn._write_at(cache["k"], k_new, lengths)
         cv = attn._write_at(cache["v"], v_new, lengths)
+        if ctx.use_pallas:
+            y = attn._pallas_decode_attn(params, q, ck, cv, lengths, 0, cap)
+            return y, {"k": ck, "v": cv}
         pos = jnp.arange(ck.shape[1])[None, :]
         valid = pos <= lengths[:, None]
         y = attn._masked_decode_attn(params, q, ck, cv, valid, cap)
@@ -400,18 +451,16 @@ class FPSlabBackend(CacheBackend):
         window = attn.kind_window(kind, cfg)
         if window:
             return _ring_chunk_attend(params, q, k_new, v_new, cache,
-                                      chunk_start, lengths, window, cap)
+                                      chunk_start, lengths, window, cap, ctx)
         # global slab: write the chunk, attend over the (masked) written
         # prefix.  Positions past a row's prompt end hold junk but are
         # causally unreachable from any valid query, and decode overwrites
         # them in order before they ever become valid.
         new = {"k": _chunk_slab_write(cache["k"], k_new, chunk_start),
                "v": _chunk_slab_write(cache["v"], v_new, chunk_start)}
-        q_pos = chunk_start + jnp.arange(q.shape[1])
         hv = _view_len(new["k"].shape[1], history_len)
-        y = attn._masked_chunk_attn(params, q, new["k"][:, :hv],
-                                    new["v"][:, :hv], q_pos,
-                                    jnp.arange(hv), 0, cap)
+        y = _view_chunk_attn(params, q, new["k"][:, :hv], new["v"][:, :hv],
+                             chunk_start, hv, cap, ctx)
         return y, new
 
 
@@ -455,15 +504,24 @@ class VQSlabBackend(CacheBackend):
         window = attn.kind_window(kind, cfg)
         if window:
             return _ring_decode(params, q, k_new, v_new, cache, lengths,
-                                window, cap)
+                                window, cap, ctx)
         b = k_new.shape[0]
         kc, vc, _ = _encode_pair(k_new, v_new, cfg, vq_params)
         ck = attn._write_at(cache["k_codes"],
                             kc.astype(cache["k_codes"].dtype), lengths)
         cv = attn._write_at(cache["v_codes"],
                             vc.astype(cache["v_codes"].dtype), lengths)
+        if ctx.use_pallas and _coded_kernel_ok(cfg):
+            # codes stay compressed in HBM; dequant happens in VMEM tiles
+            y = attn._pallas_coded_decode_attn(params, q, ck, cv, vq_params,
+                                               lengths, cap)
+            return y, {"k_codes": ck, "v_codes": cv}
         k_all = _decode_codes(ck, cfg, vq_params, "k")
         v_all = _decode_codes(cv, cfg, vq_params, "v")
+        if ctx.use_pallas:  # geometry the coded kernel can't split
+            y = attn._pallas_decode_attn(params, q, k_all, v_all, lengths,
+                                         0, cap)
+            return y, {"k_codes": ck, "v_codes": cv}
         pos = jnp.arange(k_all.shape[1])[None, :]
         valid = pos <= lengths[:, None]
         y = attn._masked_decode_attn(params, q, k_all, v_all, valid, cap)
@@ -477,7 +535,7 @@ class VQSlabBackend(CacheBackend):
         window = attn.kind_window(kind, cfg)
         if window:  # fp ring, identical to the fp slab
             return _ring_chunk_attend(params, q, k_new, v_new, cache,
-                                      chunk_start, lengths, window, cap)
+                                      chunk_start, lengths, window, cap, ctx)
         _require_scratch(cache, self.name)
         kc, vc, _ = _encode_pair(k_new, v_new, cfg, vq_params)
         # persistent cache: codes.  attention view: the fp scratch slab —
@@ -490,11 +548,9 @@ class VQSlabBackend(CacheBackend):
                                             chunk_start),
                "k_fp": _chunk_slab_write(cache["k_fp"], k_new, chunk_start),
                "v_fp": _chunk_slab_write(cache["v_fp"], v_new, chunk_start)}
-        q_pos = chunk_start + jnp.arange(q.shape[1])
         hv = _view_len(new["k_fp"].shape[1], history_len)
-        y = attn._masked_chunk_attn(params, q, new["k_fp"][:, :hv],
-                                    new["v_fp"][:, :hv], q_pos,
-                                    jnp.arange(hv), 0, cap)
+        y = _view_chunk_attn(params, q, new["k_fp"][:, :hv],
+                             new["v_fp"][:, :hv], chunk_start, hv, cap, ctx)
         return y, new
 
 
@@ -572,17 +628,30 @@ class PagedBackend(CacheBackend):
             kc, vc, spec = _encode_pair(k_new, v_new, cfg, vq_params)
             kp = kp.at[page_ids, offs].set(kc[:, 0].astype(kp.dtype))
             vp = vp.at[page_ids, offs].set(vc[:, 0].astype(vp.dtype))
-            k_all = _decode_codes(kp[table].reshape(b, s, spec.groups),
-                                  cfg, vq_params, "k")
-            v_all = _decode_codes(vp[table].reshape(b, s, spec.groups),
-                                  cfg, vq_params, "v")
             new_cache = {"k_code_pages": kp, "v_code_pages": vp}
+            # gather code pages into one contiguous (B, s, G) tile — the
+            # kernels never see a block table, only block-aligned tiles
+            codes_k = kp[table].reshape(b, s, spec.groups)
+            codes_v = vp[table].reshape(b, s, spec.groups)
+            if ctx.use_pallas and not window and _coded_kernel_ok(cfg):
+                y = attn._pallas_coded_decode_attn(params, q, codes_k,
+                                                   codes_v, vq_params,
+                                                   lengths, cap)
+                return y, new_cache
+            k_all = _decode_codes(codes_k, cfg, vq_params, "k")
+            v_all = _decode_codes(codes_v, cfg, vq_params, "v")
         else:
             kp = kp.at[page_ids, offs].set(k_new[:, 0].astype(kp.dtype))
             vp = vp.at[page_ids, offs].set(v_new[:, 0].astype(vp.dtype))
             k_all = kp[table].reshape((b, s) + kp.shape[2:])
             v_all = vp[table].reshape((b, s) + vp.shape[2:])
             new_cache = {"k_pages": kp, "v_pages": vp}
+        if ctx.use_pallas:
+            # the gathered view is a ring over the table span; the kernel's
+            # ring mask mirrors the dense validity mask below exactly
+            y = attn._pallas_decode_attn(params, q, k_all, v_all, lengths,
+                                         window, cap)
+            return y, new_cache
         pos = attn.ring_positions(s, lengths)  # (B, s)
         valid = (pos >= 0) & (pos <= lengths[:, None])
         if window:
@@ -611,15 +680,15 @@ class PagedBackend(CacheBackend):
         if window:  # fp page ring (windowed layers keep fp pages under vq)
             ring_k = kp[table].reshape((b, s) + kp.shape[2:])
             ring_v = vp[table].reshape((b, s) + vp.shape[2:])
-            rp = jnp.broadcast_to(
-                attn.ring_positions(s, jnp.reshape(chunk_start - 1, (1,))),
-                (b, s))
-            k_pos = jnp.concatenate(
-                [rp, jnp.broadcast_to(q_pos[None], (b, w))], axis=1)
+            k_pos = _ring_k_pos(s, chunk_start, w)
             k_all = jnp.concatenate([ring_k.astype(k_new.dtype), k_new], 1)
             v_all = jnp.concatenate([ring_v.astype(v_new.dtype), v_new], 1)
-            y = attn._masked_chunk_attn(params, q, k_all, v_all, q_pos,
-                                        k_pos, window, cap)
+            if ctx.use_pallas:
+                y = attn._pallas_chunk_attn(params, q, k_all, v_all,
+                                            chunk_start, k_pos, window, cap)
+            else:
+                y = attn._masked_chunk_attn(params, q, k_all, v_all, q_pos,
+                                            k_pos, window, cap)
             # keep-latest write through the page ring; slots whose latest
             # source is not in this chunk are routed to the scratch page
             take, src = _ring_chunk_sources(s, chunk_start, lengths, w)
@@ -649,9 +718,8 @@ class PagedBackend(CacheBackend):
             k_view = _chunk_slab_write(cache["k_fp"], k_new, chunk_start)
             v_view = _chunk_slab_write(cache["v_fp"], v_new, chunk_start)
             hv = _view_len(k_view.shape[1], history_len)
-            y = attn._masked_chunk_attn(params, q, k_view[:, :hv],
-                                        v_view[:, :hv], q_pos,
-                                        jnp.arange(hv), 0, cap)
+            y = _view_chunk_attn(params, q, k_view[:, :hv], v_view[:, :hv],
+                                 chunk_start, hv, cap, ctx)
             return y, {"k_code_pages": kp, "v_code_pages": vp,
                        "k_fp": k_view, "v_fp": v_view}
         kp = kp.at[dest.reshape(-1), offs.reshape(-1)].set(
@@ -659,14 +727,15 @@ class PagedBackend(CacheBackend):
         vp = vp.at[dest.reshape(-1), offs.reshape(-1)].set(
             v_new.reshape((b * w,) + v_new.shape[2:]).astype(vp.dtype))
         # gather only the first ceil(hv/ps) pages per row — the view length
-        # ladder keeps both the gather and the score matrix prompt-sized
+        # ladder keeps both the gather (a block-aligned contiguous tile the
+        # kernel can consume) and the score matrix prompt-sized
         hv = _view_len(s, history_len)
         n_view = -(-hv // ps)
         sv = n_view * ps
         k_all = kp[table[:, :n_view]].reshape((b, sv) + kp.shape[2:])
         v_all = vp[table[:, :n_view]].reshape((b, sv) + vp.shape[2:])
-        y = attn._masked_chunk_attn(params, q, k_all, v_all, q_pos,
-                                    jnp.arange(sv), 0, cap)
+        y = _view_chunk_attn(params, q, k_all, v_all, chunk_start, sv, cap,
+                             ctx)
         return y, {"k_pages": kp, "v_pages": vp}
 
     def make_state(self, cfg, *, slots, max_len, ctx, dtype=None,
@@ -729,7 +798,7 @@ class ShardedBackend(CacheBackend):
         window = attn.kind_window(kind, cfg)
         if window:  # ring cache, replicated over the seq axis (small)
             return _ring_decode(params, q, k_new, v_new, cache, lengths,
-                                window, cfg.attn_logit_softcap)
+                                window, cfg.attn_logit_softcap, ctx)
         return _decode_sharded(params, q, k_new, v_new, cache, lengths,
                                ctx, cfg, cfg.attn_logit_softcap, vq_params)
 
@@ -752,16 +821,17 @@ def _decode_sharded(params, q, k_new, v_new, cache, lengths, ctx, cfg, cap,
     bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
     b = q.shape[0]
     vq_cache = "k_codes" in cache
-    # the Pallas decode kernel needs whole groups per kv head
-    kernel_ok = (ctx.use_pallas_decode and vq_cache
-                 and cfg.num_kv_heads > 0
-                 and cfg.astra.groups % cfg.num_kv_heads == 0)
+    pallas_on = ctx.use_pallas or ctx.use_pallas_decode
+    # the Pallas coded-decode kernel needs whole groups per kv head; other
+    # geometries dequantize in jnp but still flash through the fp kernel
+    kernel_ok = pallas_on and vq_cache and _coded_kernel_ok(cfg)
 
     def body(q_l, k_n, v_n, ck, cv, lens, cb_k, cb_v):
         s_loc = ck.shape[1]
         off = jax.lax.axis_index(axis) * s_loc
         local_idx = jnp.clip(lens - off, 0, s_loc - 1)
         mine = (lens >= off) & (lens < off + s_loc)
+        lens_local = lens - off  # negative => nothing valid on this shard
         if vq_cache:
             spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups,
                              cfg.astra.codebook_size)
@@ -779,14 +849,11 @@ def _decode_sharded(params, q, k_new, v_new, cache, lengths, ctx, cfg, cap,
                 # dequantized in HBM (kernels/vq_decode_attn.py)
                 from repro.kernels.ops import decode_attention_partials
 
-                lens_local = lens - off  # negative => nothing valid here
                 m_, l_, acc_ = decode_attention_partials(
-                    q_l[:, 0], ck2.astype(jnp.int32), cv2.astype(jnp.int32),
-                    cb_k, cb_v, lens_local, use_pallas=True)
-                m = m_[..., None]  # (B, H, 1)
-                l = l_[..., None]
-                o = acc_[:, None]  # (B, 1, H, hd)
-                out = merge_partial_stats(m, l, o, axis)
+                    q_l[:, 0], ck2, cv2, cb_k, cb_v, lens_local,
+                    softcap=cap, use_pallas=True)
+                out = merge_partial_stats(m_[..., None], l_[..., None],
+                                          acc_[:, None], axis)
                 return out, ck2, cv2
             k_shard = vq.decode({"codebook": cb_k}, ck2.astype(jnp.int32),
                                 spec).reshape(bl, s_loc, cfg.num_kv_heads,
@@ -800,6 +867,17 @@ def _decode_sharded(params, q, k_new, v_new, cache, lengths, ctx, cfg, cap,
             cv2 = jnp.where(mine[:, None, None, None],
                             attn._write_at(cv, v_n, local_idx), cv)
             k_shard, v_shard = ck2, cv2
+        if pallas_on:
+            # fp shard tiles (and de-coded tiles when the coded kernel
+            # can't split the groups) flash through the fp decode kernel
+            from repro.kernels.ops import fp_decode_partials
+
+            m_, l_, acc_ = fp_decode_partials(q_l[:, 0], k_shard, v_shard,
+                                              lens_local, softcap=cap,
+                                              use_pallas=True)
+            out = merge_partial_stats(m_[..., None], l_[..., None],
+                                      acc_[:, None], axis)
+            return out, ck2, cv2
         pos = off + jnp.arange(s_loc)[None, :]
         valid = pos <= lens[:, None]
         m, l, o = partial_attention_stats(q_l, k_shard, v_shard,

@@ -64,6 +64,7 @@ class ServingEngine:
         donate: Optional[bool] = None,
         prefill_mode: str = "chunked",
         prefill_chunk: Optional[int] = None,
+        use_pallas: bool = False,
     ):
         seq_sharded = (mesh_ctx.seq_axis is not None
                        and mesh_ctx.mesh is not None)
@@ -78,10 +79,17 @@ class ServingEngine:
                             or DEFAULT_DECODE_CHUNK)
         self.decode_chunk = max(int(decode_chunk), 1)
         self.page_size = page_size
+        # use_pallas routes the attention hot loops (decode_attend +
+        # chunk_attend, every layout) through the Pallas kernels — compiled
+        # on TPU, interpret-mode elsewhere; greedy tokens match the jnp
+        # path either way (tests/test_pallas_serving.py)
+        self.use_pallas = bool(use_pallas)
         self.prefill_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="prefill",
-                                   astra_mode=astra_mode, cache_mode=cache_mode)
+                                   astra_mode=astra_mode, cache_mode=cache_mode,
+                                   use_pallas=self.use_pallas)
         self.decode_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="decode",
-                                  astra_mode=astra_mode, cache_mode=cache_mode)
+                                  astra_mode=astra_mode, cache_mode=cache_mode,
+                                  use_pallas=self.use_pallas)
         if prefill_mode not in ("chunked", "padded"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         # chunked prefill rides the CacheBackend chunk ops; the seq-sharded

@@ -102,7 +102,8 @@ class ContinuousBatchingEngine:
                  num_pages: Optional[int] = None,
                  donate: Optional[bool] = None,
                  prefill_mode: str = "chunked",
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 use_pallas: bool = False):
         if cfg.arch_type in ("vit",):
             raise ValueError("classification models are not generative")
         seq_sharded = (mesh_ctx.seq_axis is not None
@@ -119,12 +120,16 @@ class ContinuousBatchingEngine:
                 serving_autotune.load_decode_chunk(cfg.name, batch=slots)
                 or DEFAULT_DECODE_CHUNK)
         self.decode_chunk = max(int(decode_chunk), 1)
+        # use_pallas: Pallas-kernel attention hot loops (see ServingEngine)
+        self.use_pallas = bool(use_pallas)
         self.prefill_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="prefill",
                                    astra_mode=astra_mode,
-                                   cache_mode=cache_mode)
+                                   cache_mode=cache_mode,
+                                   use_pallas=self.use_pallas)
         self.decode_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="decode",
                                   astra_mode=astra_mode,
-                                  cache_mode=cache_mode)
+                                  cache_mode=cache_mode,
+                                  use_pallas=self.use_pallas)
         if prefill_mode not in ("chunked", "padded"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.prefill_mode = prefill_mode

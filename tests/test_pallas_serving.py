@@ -1,0 +1,547 @@
+"""Differential kernel-conformance harness for the Pallas serving path.
+
+This box has no TPU, so the compiled attention path lands pre-verified by
+construction: every Pallas entry point runs here in interpret mode (the
+kernel body executes as traced jnp) against two independent references —
+
+  * kernel level: the pure-jnp oracles in ``kernels.ref`` over the
+    adversarial block/grid cases of ``kernels.testing`` (bq/bkv not
+    dividing the span, offsets at shard edges, ring slots with no real
+    source, lengths at 0 / block edges / past a ring's span, uint8/16 code
+    dtypes, group-geometry mismatches), plus hypothesis-driven sweeps
+    (``slow``-marked for the heavy profiles);
+  * engine level: greedy-token parity ``use_pallas=True == use_pallas=False``
+    for every CACHE_MODE x both engines x {chunked, padded} prefill at
+    boundary lengths spanning chunk/page/window/view-bucket edges, with
+    CountingJit asserting the Pallas route adds no extra traces and the
+    ``kernels.ops.KERNEL_INVOCATIONS`` counter proving the kernels actually
+    engaged (a silent fallback would pass parity trivially).
+
+Also pins the satellite contracts: the ``interpret=None -> platform``
+gate, online-softmax invariance under kv-block permutation-of-arrival,
+dequant round-trips over narrow code dtypes, and the seq-sharded
+local-fp/remote-codes splice.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised when hypothesis absent
+    from _fallback_hypothesis import given, settings, st
+
+from repro.compat import make_mesh
+from repro.configs import get_config
+from repro.core.sequence_parallel import MeshContext
+from repro.kernels import ops, ref
+from repro.kernels import testing as ktest
+from repro.kernels.vq_decode_attn import fp_decode_attention, vq_decode_attention
+from repro.models import model_factory as mf
+from repro.serving import steps as serving_steps
+from repro.serving.cache_backend import CACHE_MODES
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import ContinuousBatchingEngine
+
+MAX_LEN = 96
+_MODELS = {}
+
+
+def model(arch, astra=False):
+    if (arch, astra) not in _MODELS:
+        cfg = get_config(arch).reduced()
+        if not astra:
+            cfg = dataclasses.replace(
+                cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+        params = mf.init_params(jax.random.PRNGKey(0), cfg)
+        _MODELS[(arch, astra)] = (cfg, params)
+    return _MODELS[(arch, astra)]
+
+
+def prompts_of(cfg, lengths, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, cfg.vocab_size, size=n).tolist() for n in lengths]
+
+
+def mesh_ctx():
+    return MeshContext(mesh=make_mesh((1,), ("model",)), batch_axes=(),
+                       seq_axis="model")
+
+
+def kernel_hits(before, after):
+    return {k: after[k] - before.get(k, 0) for k in after
+            if after[k] != before.get(k, 0)}
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: chunk_flash_attention vs oracle
+# ---------------------------------------------------------------------------
+
+
+def _check_chunk(case, bq, bkv):
+    got = ops.chunk_attention(case["q"], case["k"], case["v"], case["k_pos"],
+                              case["chunk_start"], block_q=bq, block_kv=bkv,
+                              **case["kwargs"])
+    want = ref.chunk_flash_ref(case["q"], case["k"], case["v"],
+                               case["k_pos"], case["chunk_start"],
+                               **case["kwargs"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(w=st.sampled_from([5, 8, 32, 33]),
+       s=st.sampled_from([16, 24, 90, 100]),
+       cs=st.integers(0, 70),
+       bq=st.sampled_from([8, 16, 128]),
+       bkv=st.sampled_from([8, 16, 128]),
+       softcap=st.sampled_from([0.0, 30.0]),
+       causal=st.booleans())
+def test_chunk_attention_vs_ref(w, s, cs, bq, bkv, softcap, causal):
+    """Global prefix views at hypothesis-driven block/grid edge cases —
+    bq/bkv not dividing W/S, chunk_start anywhere in the span."""
+    case = ktest.chunk_case(w * 1000 + s, w=w, s=s, h=4, hkv=2,
+                            chunk_start=cs, softcap=softcap, causal=causal)
+    _check_chunk(case, bq, bkv)
+
+
+@settings(max_examples=8, deadline=None)
+@given(w=st.sampled_from([4, 8, 16]),
+       window=st.sampled_from([4, 10, 16]),
+       cs=st.integers(0, 80),
+       bkv=st.sampled_from([8, 16, 128]))
+def test_chunk_attention_ring_vs_ref(w, window, cs, bkv):
+    """Windowed (ring) views: ring slots carry real positions just below
+    chunk_start (negative during warmup) + the chunk at its own."""
+    case = ktest.chunk_case(w * 77 + cs, w=w, s=w + 24, h=2, hkv=1,
+                            chunk_start=cs, window=window, ring=True)
+    _check_chunk(case, 16, bkv)
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(1, 3), w=st.integers(1, 40), s=st.integers(1, 120),
+       cs=st.integers(0, 100), h=st.sampled_from([1, 2, 4]),
+       rep=st.sampled_from([1, 2]), window=st.sampled_from([0, 7, 16]),
+       bq=st.sampled_from([4, 16, 128]), bkv=st.sampled_from([4, 16, 128]))
+def test_chunk_attention_vs_ref_exhaustive(b, w, s, cs, h, rep, window, bq,
+                                           bkv):
+    hkv = max(h // rep, 1)
+    h = hkv * rep
+    case = ktest.chunk_case(b * 7919 + w * 13 + s, b=b, w=w, s=s, h=h,
+                            hkv=hkv, chunk_start=cs, window=window,
+                            ring=window > 0 and s > w)
+    _check_chunk(case, bq, bkv)
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: fp / coded flash decode vs oracles
+# ---------------------------------------------------------------------------
+
+
+def _check_fp_decode(case, bkv):
+    got = fp_decode_attention(case["q"], case["k"], case["v"],
+                              case["lengths"], block_kv=bkv,
+                              **case["kwargs"])
+    want = ref.fp_decode_attn_ref(case["q"], case["k"], case["v"],
+                                  case["lengths"], **case["kwargs"])
+    # partials normalise to the same output; m/l are block-order dependent
+    # only through fp rounding, so compare both raw and normalised
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-5,
+                                   atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([16, 30, 33, 64]),
+       window=st.sampled_from([0, 12]),
+       l0=st.integers(0, 90),
+       bkv=st.sampled_from([8, 16, 128]),
+       softcap=st.sampled_from([0.0, 20.0]))
+def test_fp_decode_vs_ref(s, window, l0, bkv, softcap):
+    """Lengths at 0 / block edges / past the span (ring wrap); spans that
+    don't divide block_kv."""
+    case = ktest.decode_case(s * 31 + l0, b=3, s=s, h=4, hkv=2,
+                             window=window, softcap=softcap,
+                             lengths=(l0 if window else min(l0, s - 1),
+                                      0, s - 1))
+    _check_fp_decode(case, bkv)
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(1, 4), s=st.integers(1, 100), window=st.integers(0, 40),
+       l0=st.integers(0, 200), bkv=st.sampled_from([4, 8, 16, 128]))
+def test_fp_decode_vs_ref_exhaustive(b, s, window, l0, bkv):
+    case = ktest.decode_case(b * 37 + s + l0, b=b, s=s, h=4, hkv=4,
+                             window=window,
+                             lengths=(l0 if window else min(l0, s - 1),))
+    _check_fp_decode(case, bkv)
+
+
+@pytest.mark.parametrize("code_dtype", [jnp.uint8, jnp.uint16, jnp.int32])
+def test_coded_decode_code_dtypes(code_dtype):
+    """The coded kernel accepts the storage dtypes the code slabs really
+    use (uint8/uint16) and matches the int32 reference bit-for-bit."""
+    kk = 300 if code_dtype == jnp.uint16 else 16
+    case = ktest.coded_case(5, b=2, s=33, softcap=25.0, kk=kk,
+                            code_dtype=code_dtype)
+    got = vq_decode_attention(case["q"], case["k_codes"], case["v_codes"],
+                              case["cb_k"], case["cb_v"], case["lengths"],
+                              block_kv=16, **case["kwargs"])
+    want = ref.vq_decode_attn_ref(
+        case["q"], case["k_codes"].astype(jnp.int32),
+        case["v_codes"].astype(jnp.int32), case["cb_k"], case["cb_v"],
+        case["lengths"], **case["kwargs"])
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-5,
+                                   atol=2e-5)
+
+
+def test_coded_kernel_rejects_geometry_mismatch():
+    """gph * dg must equal hd — a codebook whose groups cannot tile the
+    head dim is a hard error, not a silent wrong answer."""
+    case = ktest.coded_case(0, s=16)
+    bad_cb = jnp.zeros((3, 16, 4))  # g=3 over hd=8: gph*dg = 12 != 8
+    with pytest.raises((AssertionError, ZeroDivisionError)):
+        vq_decode_attention(case["q"], case["k_codes"][..., :3],
+                            case["v_codes"][..., :3], bad_cb, bad_cb,
+                            case["lengths"])
+
+
+def test_vq_kernel_geometry_gate():
+    assert ops.vq_kernel_geometry_ok(num_kv_heads=4, groups=4)
+    assert ops.vq_kernel_geometry_ok(num_kv_heads=2, groups=8)
+    assert not ops.vq_kernel_geometry_ok(num_kv_heads=4, groups=1)
+    assert not ops.vq_kernel_geometry_ok(num_kv_heads=4, groups=6)
+    # attention-free configs (mamba2 sets num_kv_heads=0) must report
+    # unsupported, not divide by zero
+    assert not ops.vq_kernel_geometry_ok(num_kv_heads=0, groups=4)
+
+
+def _norm(partials):
+    m, l, acc = partials
+    return np.asarray(acc) / np.maximum(np.asarray(l)[..., None], 1e-30)
+
+
+def test_partials_wrappers_pallas_vs_ref_route():
+    """The sharded decode's partials wrappers must agree across their own
+    use_pallas fork (the shard_map body swaps routes on the same data)."""
+    d = ktest.decode_case(3, s=32, window=12, lengths=(40, 5, 0))
+    a = ops.fp_decode_partials(d["q"], d["k"], d["v"], d["lengths"],
+                               use_pallas=True, **d["kwargs"])
+    b = ops.fp_decode_partials(d["q"], d["k"], d["v"], d["lengths"],
+                               use_pallas=False, **d["kwargs"])
+    np.testing.assert_allclose(_norm(a), _norm(b), rtol=2e-5, atol=2e-5)
+    c = ktest.coded_case(3, s=32, softcap=15.0, code_dtype=jnp.uint8)
+    a = ops.decode_attention_partials(c["q"], c["k_codes"], c["v_codes"],
+                                      c["cb_k"], c["cb_v"], c["lengths"],
+                                      use_pallas=True, **c["kwargs"])
+    b = ops.decode_attention_partials(c["q"], c["k_codes"], c["v_codes"],
+                                      c["cb_k"], c["cb_v"], c["lengths"],
+                                      use_pallas=False, **c["kwargs"])
+    np.testing.assert_allclose(_norm(a), _norm(b), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the interpret=None platform gate
+# ---------------------------------------------------------------------------
+
+
+def test_interpret_default_resolves_from_backend(monkeypatch):
+    """interpret=None (every kernel's default) must resolve to interpret
+    off-TPU and compiled on TPU — no caller can ship the interpreter to the
+    TPU hot path by forgetting a flag."""
+    assert ops.resolve_interpret(None) is True  # this suite runs on CPU
+    assert ops.resolve_interpret(True) is True
+    assert ops.resolve_interpret(False) is False
+    monkeypatch.setattr(ops, "on_tpu", lambda: True)
+    assert ops.resolve_interpret(None) is False
+    assert ops.resolve_interpret(True) is True
+
+
+def test_kernels_run_without_interpret_arg():
+    """Every entry point is callable with no interpret argument at all."""
+    case = ktest.chunk_case(1, w=4, s=8)
+    ops.chunk_attention(case["q"], case["k"], case["v"], case["k_pos"],
+                        case["chunk_start"])
+    d = ktest.decode_case(1, s=8)
+    fp_decode_attention(d["q"], d["k"], d["v"], d["lengths"])
+    c = ktest.coded_case(1, s=8)
+    vq_decode_attention(c["q"], c["k_codes"], c["v_codes"], c["cb_k"],
+                        c["cb_v"], c["lengths"])
+    from repro.kernels.vq_assign import vq_assign
+
+    vq_assign(jnp.zeros((8, 2, 4)), jnp.zeros((2, 8, 4)))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: online-softmax block math + dequant round-trips
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(nblocks=st.sampled_from([2, 3, 5]), bkv=st.sampled_from([4, 8]),
+       seed=st.integers(0, 99))
+def test_online_softmax_kv_block_permutation_invariance(nblocks, bkv, seed):
+    """The flash state (m, l, acc) is an associative-commutative reduction
+    over kv blocks: for the non-causal all-valid case, permuting the order
+    blocks *arrive* must leave the normalised output unchanged (up to fp
+    rounding).  This pins the m-rescale/accumulate algebra independently of
+    any masking."""
+    s = nblocks * bkv
+    case = ktest.chunk_case(seed, w=4, s=s, h=2, hkv=1, chunk_start=0,
+                            causal=False)
+    base = ops.chunk_attention(case["q"], case["k"], case["v"],
+                               case["k_pos"], case["chunk_start"],
+                               block_kv=bkv, causal=False)
+    rng = np.random.RandomState(seed)
+    perm_blocks = rng.permutation(nblocks)
+    perm = np.concatenate([np.arange(b * bkv, (b + 1) * bkv)
+                           for b in perm_blocks])
+    got = ops.chunk_attention(case["q"], case["k"][:, perm],
+                              case["v"][:, perm], case["k_pos"][perm],
+                              case["chunk_start"], block_kv=bkv,
+                              causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("kk", [64, 256, 4096])
+def test_dequant_roundtrip_code_dtypes(kk):
+    """Codes narrowed to their storage dtype (uint8 for K<=256, uint16
+    above) must dequantize — via the kernels' per-group ``jnp.take`` — to
+    exactly the centroids ``ref.vq_assign_ref`` picked, and re-assigning
+    the dequantized vectors must reproduce the codes (centroids are their
+    own nearest centroid)."""
+    from repro.core import vq as core_vq
+
+    g, dg, t = 2, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(kk), 2)
+    x = jax.random.normal(ks[0], (t, g, dg))
+    cb = jax.random.normal(ks[1], (g, kk, dg))
+    codes = ref.vq_assign_ref(x, cb)
+    narrow = codes.astype(core_vq.code_dtype(kk))
+    assert narrow.dtype == (jnp.uint8 if kk <= 256 else jnp.uint16)
+    # kernel-style dequant (per-group take) over the narrow dtype
+    deq = jnp.stack([jnp.take(cb[j], narrow[:, j].astype(jnp.int32), axis=0)
+                     for j in range(g)], axis=1)  # (T, G, dg)
+    want = core_vq.decode({"codebook": cb}, codes,
+                          core_vq.VQSpec(g * dg, g, kk)).reshape(t, g, dg)
+    np.testing.assert_array_equal(np.asarray(deq), np.asarray(want))
+    again = ref.vq_assign_ref(deq, cb)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(codes))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: mixed-precision splice under a prefix-view q_start
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_flash_prefix_view_local_fp_remote_codes():
+    """With the query offset decoupled from the splice offset (both scalar
+    prefetch), the kernel must still read fp inside the local range ONLY:
+    poisoned local codes are inert, poisoned remote codes and poisoned
+    local fp both show up."""
+    args, kwargs = ktest.mixed_case(11, t=64, tl=16, tq=16, offset_blocks=1,
+                                    bkv=16, q_start=48)
+    q, kl, vl, kc, vc, cbk, cbv, off = args
+    base = ops.mixed_attention(*args, use_pallas=True, block_q=16,
+                               block_kv=16, **kwargs)
+    want = ref.mixed_flash_ref(*args, **kwargs)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # poison codes inside the local range [16, 32): inert (fp splice wins)
+    got = ops.mixed_attention(q, kl, vl, kc.at[:, 16:32].set(0),
+                              vc.at[:, 16:32].set(0), cbk, cbv, off,
+                              use_pallas=True, block_q=16, block_kv=16,
+                              **kwargs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-6)
+    # poison remote codes at [32, 48) (causally visible to q_pos >= 48)
+    got = ops.mixed_attention(q, kl, vl, kc.at[:, 32:48].set(0),
+                              vc.at[:, 32:48].set(0), cbk, cbv, off,
+                              use_pallas=True, block_q=16, block_kv=16,
+                              **kwargs)
+    assert not np.allclose(np.asarray(got), np.asarray(base), atol=1e-4)
+    # poison the local fp tile itself
+    got = ops.mixed_attention(q, jnp.zeros_like(kl), jnp.zeros_like(vl), kc,
+                              vc, cbk, cbv, off, use_pallas=True,
+                              block_q=16, block_kv=16, **kwargs)
+    assert not np.allclose(np.asarray(got), np.asarray(base), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Engine level: use_pallas greedy-token parity, every mode/engine/prefill
+# ---------------------------------------------------------------------------
+
+BOUNDARY = ktest.boundary_lengths(MAX_LEN, chunk=32, page=8)
+
+
+def _static(cfg, params, mode, prefill_mode, use_pallas, prompts,
+            max_new=4, **kw):
+    eng = ServingEngine(cfg, params, max_len=MAX_LEN, astra_mode="off",
+                        cache_mode=mode, page_size=8, decode_chunk=4,
+                        prefill_mode=prefill_mode, prefill_chunk=32,
+                        use_pallas=use_pallas, **kw)
+    out = eng.generate(prompts, max_new_tokens=max_new, temperature=0.0)
+    return out.tokens, eng
+
+
+@pytest.mark.parametrize("prefill_mode", ["chunked", "padded"])
+@pytest.mark.parametrize("mode", CACHE_MODES)
+def test_static_engine_pallas_parity(mode, prefill_mode):
+    """Acceptance: use_pallas (interpret) == the jnp reference path exactly
+    for every cache mode, both prefill pipelines, boundary lengths, with no
+    extra compiled traces and the kernels provably engaged."""
+    cfg, params = model("gpt2-small", astra=mode in ("vq", "paged_vq"))
+    prompts = prompts_of(cfg, BOUNDARY)
+    want, eng_ref = _static(cfg, params, mode, prefill_mode, False, prompts)
+    before = dict(ops.KERNEL_INVOCATIONS)
+    got, eng_pal = _static(cfg, params, mode, prefill_mode, True, prompts)
+    hits = kernel_hits(before, ops.KERNEL_INVOCATIONS)
+    assert got == want, (mode, prefill_mode)
+    assert hits, "Pallas path silently fell back to jnp"
+    # identical compile behaviour: the kernels ride the same jitted steps
+    assert (eng_pal._decode_chunk.trace_count
+            == eng_ref._decode_chunk.trace_count)
+    assert (eng_pal._prefill_chunk.trace_count
+            == eng_ref._prefill_chunk.trace_count)
+    assert eng_pal._prefill.trace_count == eng_ref._prefill.trace_count
+
+
+@pytest.mark.parametrize("mode", CACHE_MODES)
+def test_continuous_engine_pallas_parity(mode):
+    cfg, params = model("gpt2-small", astra=mode in ("vq", "paged_vq"))
+    prompts = prompts_of(cfg, (7, 8, 31, 33))
+    want, _ = _static(cfg, params, mode, "padded", False, prompts,
+                      max_new=5)
+    before = dict(ops.KERNEL_INVOCATIONS)
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                                   decode_chunk=2, cache_mode=mode,
+                                   page_size=8, prefill_chunk=32,
+                                   use_pallas=True)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    eng.run_until_drained()
+    assert kernel_hits(before, ops.KERNEL_INVOCATIONS)
+    got = {tuple(r.prompt): r.output for r in eng.finished}
+    for p, w in zip(prompts, want):
+        assert got[tuple(p)] == w, (mode, p)
+
+
+@pytest.mark.parametrize("mode", ["fp", "vq", "paged", "paged_vq"])
+def test_windowed_softcap_arch_pallas_parity(mode):
+    """gemma2 (local/global, window=64, softcap=50, astra groups that the
+    coded kernel CAN split): window-boundary prompts through both
+    pipelines; the codes-only decode must engage the coded kernel."""
+    cfg, params = model("gemma2-27b", astra=True)
+    lens = ktest.boundary_lengths(MAX_LEN, chunk=32, page=8,
+                                  window=cfg.window_size)
+    prompts = prompts_of(cfg, lens)
+    want, _ = _static(cfg, params, mode, "chunked", False, prompts)
+    before = dict(ops.KERNEL_INVOCATIONS)
+    got, _ = _static(cfg, params, mode, "chunked", True, prompts)
+    hits = kernel_hits(before, ops.KERNEL_INVOCATIONS)
+    assert got == want, (mode, hits)
+    if mode in ("vq", "paged_vq"):
+        assert hits.get("coded_decode_attention"), hits
+    assert hits.get("chunk_attention") and hits.get("decode_attention")
+
+
+def test_non_pallas_run_never_touches_kernels():
+    """The reference fork must stay kernel-free — parity tests would pass
+    trivially if both forks routed through the same code."""
+    cfg, params = model("gpt2-small")
+    before = dict(ops.KERNEL_INVOCATIONS)
+    _static(cfg, params, "fp", "chunked", False, prompts_of(cfg, (9,)))
+    assert not kernel_hits(before, ops.KERNEL_INVOCATIONS)
+
+
+# ---------------------------------------------------------------------------
+# Engine level: seq-sharded splice (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["static", "continuous"])
+@pytest.mark.parametrize("mode", ["fp", "vq"])
+def test_sharded_backend_pallas_parity(mode, engine):
+    """ShardedBackend under a seq mesh: the Pallas fork consumes fp local
+    shard tiles (fp partials kernel) and VQ codes for the coded cache, and
+    merges flash partials across shards — tokens must match the jnp
+    shard_map reference on both engines."""
+    cfg, params = model("gpt2-small", astra=mode == "vq")
+    prompts = prompts_of(cfg, (3, 9, 17))
+    kw = dict(max_len=64, astra_mode="off", cache_mode=mode, decode_chunk=3)
+    want = ServingEngine(cfg, params, mesh_ctx=mesh_ctx(), **kw).generate(
+        prompts, max_new_tokens=5, temperature=0.0).tokens
+    before = dict(ops.KERNEL_INVOCATIONS)
+    if engine == "static":
+        got = ServingEngine(cfg, params, mesh_ctx=mesh_ctx(),
+                            use_pallas=True, **kw).generate(
+            prompts, max_new_tokens=5, temperature=0.0).tokens
+    else:
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, cache_mode=mode,
+                                       mesh_ctx=mesh_ctx(), use_pallas=True,
+                                       max_len=64, decode_chunk=3)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5)
+        eng.run_until_drained()
+        by_prompt = {tuple(r.prompt): r.output for r in eng.finished}
+        got = [by_prompt[tuple(p)] for p in prompts]
+    hits = kernel_hits(before, ops.KERNEL_INVOCATIONS)
+    assert got == want, (mode, engine, hits)
+    # gpt2's groups (1) < kv heads (4): the coded kernel cannot split, so
+    # the shard body dequantizes and flashes through the fp kernel — the
+    # splice still consumes fp tiles for the local shard by construction
+    assert hits.get("fp_decode_partials"), hits
+
+
+def test_sharded_coded_kernel_engages_when_geometry_allows():
+    """gemma2's groups (4) == kv heads (4): the sharded vq decode keeps
+    codes compressed and the coded partials kernel engages (the fp kernel
+    still serves the replicated SWA rings)."""
+    cfg, params = model("gemma2-27b", astra=True)
+    prompts = prompts_of(cfg, (3, 9))
+    kw = dict(max_len=64, astra_mode="off", cache_mode="vq", decode_chunk=3)
+    want = ServingEngine(cfg, params, mesh_ctx=mesh_ctx(), **kw).generate(
+        prompts, max_new_tokens=4, temperature=0.0).tokens
+    before = dict(ops.KERNEL_INVOCATIONS)
+    got = ServingEngine(cfg, params, mesh_ctx=mesh_ctx(), use_pallas=True,
+                        **kw).generate(
+        prompts, max_new_tokens=4, temperature=0.0).tokens
+    hits = kernel_hits(before, ops.KERNEL_INVOCATIONS)
+    assert got == want
+    assert hits.get("decode_attention_partials"), hits
+    assert hits.get("decode_attention"), hits  # the replicated SWA rings
+
+
+# ---------------------------------------------------------------------------
+# Compile counts: the Pallas route adds no traces, ever
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_prefill_compiles_stay_bucket_bounded():
+    """chunk_start and the prefix-view offsets ride scalar-prefetch
+    operands, so new prompt *lengths* must not add traces on the Pallas
+    route either — the same O(width x view-bucket) bound as the jnp path."""
+    cfg, params = model("gpt2-small")
+    eng = ServingEngine(cfg, params, max_len=MAX_LEN, astra_mode="off",
+                        prefill_chunk=32, decode_chunk=4, use_pallas=True)
+    for n in (3, 5, 9, 17, 33):
+        eng.generate(prompts_of(cfg, (n,), seed=n), max_new_tokens=2,
+                     temperature=0.0)
+    traces = eng._prefill_chunk.trace_count
+    bound = len({(w, serving_steps.view_bucket(s + w, eng.max_len))
+                 for n in range(1, eng.max_len)
+                 for s, w in serving_steps.plan_chunks(
+                     n, eng.prefill_buckets)})
+    assert traces <= bound
+    assert eng._decode_chunk.trace_count == 1
+    for n in (4, 11, 23, 41):
+        eng.generate(prompts_of(cfg, (n,), seed=n), max_new_tokens=2,
+                     temperature=0.0)
+    assert eng._prefill_chunk.trace_count == traces
+    assert eng._decode_chunk.trace_count == 1
