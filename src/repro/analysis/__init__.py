@@ -1,0 +1,20 @@
+"""repro.analysis — repo-native static analysis & compiled-artifact lint.
+
+Source rules (``source.py``) enforce the serving stack's structural
+invariants; HLO auditors (``hlo.py`` + ``trace_audit.py``) lint what the
+compiler actually built.  One CLI runs both:
+``python -m repro.analysis.lint [--strict] [--rule ID] [--json PATH]
+[--trace]``.  This module imports only the stdlib pieces; the trace
+audit (which needs jax) loads lazily behind ``--trace``.
+"""
+from repro.analysis.rules import (  # noqa: F401
+    ALLOW_RULE,
+    Finding,
+    REGISTRY,
+    Rule,
+    SRC_ROOT,
+    get_rules,
+    register,
+    run_rules,
+)
+from repro.analysis import source as _source  # noqa: F401  (registers rules)

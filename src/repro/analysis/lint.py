@@ -1,0 +1,94 @@
+"""CLI for the repo-native static analysis.
+
+Usage::
+
+  python -m repro.analysis.lint                  # report, exit 0
+  python -m repro.analysis.lint --strict         # exit 1 on any finding
+  python -m repro.analysis.lint --rule host-sync --rule bare-jit
+  python -m repro.analysis.lint --json report.json   # ('-' for stdout)
+  python -m repro.analysis.lint --root tests/fixtures/analysis/bad_tree
+  python -m repro.analysis.lint --trace          # + compiled-artifact audit
+  python -m repro.analysis.lint --list-rules
+
+The default run is source-rules only — stdlib imports, no jax — so the
+CI lint lane finishes in seconds.  ``--trace`` additionally compiles the
+jitted serving steps for a small (cache_mode, use_pallas) matrix and
+lints the optimized HLO + kernel-engagement counters (slow; needs jax).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import List, Optional
+
+from repro.analysis.rules import REGISTRY, SRC_ROOT, Finding, run_rules
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repo-native static analysis: source rules + "
+                    "compiled-artifact audits")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero on any finding")
+    ap.add_argument("--rule", action="append", default=None,
+                    metavar="ID", help="run only this rule (repeatable)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a JSON report to PATH ('-' for stdout)")
+    ap.add_argument("--root", default=None, metavar="DIR",
+                    help=f"source tree to scan (default: {SRC_ROOT})")
+    ap.add_argument("--trace", action="store_true",
+                    help="also lower+audit the jitted serving steps "
+                         "(slow; imports jax)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list registered rules and exit")
+    args = ap.parse_args(argv)
+
+    # importing the module registers the built-in rules
+    import repro.analysis.source  # noqa: F401
+
+    if args.list_rules:
+        for rid in sorted(REGISTRY):
+            print(f"{rid:24s} {REGISTRY[rid].description}")
+        return 0
+
+    root = pathlib.Path(args.root) if args.root else SRC_ROOT
+    findings: List[Finding] = run_rules(root, rules=args.rule)
+
+    reports: List[dict] = []
+    if args.trace:
+        from repro.analysis.trace_audit import audit_matrix
+
+        trace_findings, reports = audit_matrix()
+        findings.extend(trace_findings)
+
+    for f in findings:
+        print(f)
+    n_rules = len(args.rule) if args.rule else len(REGISTRY)
+    summary = (f"repro.analysis.lint: {len(findings)} finding(s) "
+               f"({n_rules} rule(s) over {root})")
+    print(summary if findings else
+          f"repro.analysis.lint: clean ({n_rules} rule(s) over {root})")
+
+    if args.json:
+        payload = {
+            "root": str(root),
+            "rules": sorted(args.rule) if args.rule else sorted(REGISTRY),
+            "strict": bool(args.strict),
+            "findings": [f.to_dict() for f in findings],
+        }
+        if reports:
+            payload["trace_reports"] = reports
+        text = json.dumps(payload, indent=1)
+        if args.json == "-":
+            print(text)
+        else:
+            pathlib.Path(args.json).write_text(text + "\n")
+
+    return 1 if (args.strict and findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

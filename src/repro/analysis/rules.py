@@ -1,0 +1,129 @@
+"""Rule framework for the repo-native static analysis (`repro.analysis`).
+
+The serving stack's correctness rests on invariants no generic linter
+knows about — no ``cache_mode`` string dispatch outside the backend
+module, no version-sensitive jax APIs outside ``compat.py``, no
+``interpret=True`` shipped to the TPU hot path, no host syncs inside the
+jitted serving modules.  Each invariant is a named :class:`Rule` in one
+registry; :func:`run_rules` walks a source tree, runs every (selected)
+rule against every file and returns structured :class:`Finding` records.
+The same registry backs the ``python -m repro.analysis.lint`` CLI, the
+tier-1 pytest wrapper (``tests/test_analysis.py``) and the CI lint lane.
+
+Allowlist policy
+----------------
+A finding may be suppressed at the offending line with an inline marker
+carrying a mandatory reason::
+
+    stats = jax.device_get(stats)  # lint: allow[host-sync] host boundary
+
+or, for long lines, on a comment-only line immediately above::
+
+    # lint: allow[host-sync] host boundary fetch, runs outside jit
+    stats = jax.device_get(stats)
+
+A marker without a reason does NOT suppress anything and is itself
+reported (rule ``lint-allow``) — the escape hatch must document why.
+Structural exemptions (e.g. ``compat.py`` may use the raw jax APIs it
+wraps) live on the rule itself via ``only``/``exclude`` path globs, so
+the sanctioned home of each pattern is part of the rule's definition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import pathlib
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+# the default scan root: src/repro (this package's parent)
+SRC_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# rule id reserved for malformed/unknown allow markers
+ALLOW_RULE = "lint-allow"
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation: ``path:line: [rule] message``."""
+
+    path: str  # posix path relative to the scanned root
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A named invariant checked per source file.
+
+    ``check`` receives a :class:`repro.analysis.source.SourceFile` and
+    yields findings; ``only`` / ``exclude`` are fnmatch globs over the
+    root-relative posix path — ``only=()`` means every file, and an
+    ``exclude`` match wins (that's where the pattern legitimately lives).
+    """
+
+    id: str
+    description: str
+    check: Callable[["object"], Iterable[Finding]]
+    only: Sequence[str] = ()
+    exclude: Sequence[str] = ()
+
+    def applies_to(self, rel: str) -> bool:
+        if self.only and not any(fnmatch.fnmatch(rel, g) for g in self.only):
+            return False
+        return not any(fnmatch.fnmatch(rel, g) for g in self.exclude)
+
+
+REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    if rule.id in REGISTRY:
+        raise ValueError(f"duplicate rule id {rule.id!r}")
+    REGISTRY[rule.id] = rule
+    return rule
+
+
+def get_rules(ids: Optional[Sequence[str]] = None) -> List[Rule]:
+    """Selected rules (all registered when ``ids`` is None), order-stable."""
+    if ids is None:
+        return list(REGISTRY.values())
+    missing = [i for i in ids if i not in REGISTRY]
+    if missing:
+        known = ", ".join(sorted(REGISTRY))
+        raise KeyError(f"unknown rule id(s) {missing} (known: {known})")
+    return [REGISTRY[i] for i in ids]
+
+
+def run_rules(root: Optional[pathlib.Path] = None, *,
+              rules: Optional[Sequence[str]] = None,
+              files: Optional[Sequence[pathlib.Path]] = None
+              ) -> List[Finding]:
+    """Run the (selected) source rules over every ``*.py`` under ``root``.
+
+    Returns all findings sorted by path/line.  Inline ``lint: allow``
+    markers suppress same-rule findings on their line; malformed markers
+    (no reason / unknown rule id) surface as ``lint-allow`` findings so a
+    broken suppression can never silently pass.
+    """
+    from repro.analysis.source import SourceFile  # cycle-free at call time
+
+    root = pathlib.Path(root) if root is not None else SRC_ROOT
+    selected = get_rules(rules)
+    findings: List[Finding] = []
+    for path in sorted(files) if files is not None else sorted(root.rglob("*.py")):
+        sf = SourceFile(pathlib.Path(path), root)
+        findings.extend(sf.meta_findings)
+        for rule in selected:
+            if not rule.applies_to(sf.rel):
+                continue
+            for f in rule.check(sf):
+                if rule.id not in sf.allows.get(f.line, set()):
+                    findings.append(f)
+    return sorted(findings)

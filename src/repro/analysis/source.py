@@ -1,0 +1,296 @@
+"""Tokenize/AST source model + the built-in source rules.
+
+:class:`SourceFile` is the per-file view every rule checks against: the
+token stream with comments and string literals stripped (so docstrings
+and prose can't trip a rule — the same trick the old copy-pasted
+``_code_only`` helpers in ``tests/test_compat.py`` and
+``tests/test_cache_backend.py`` used), re-joined into one searchable
+string with an offset→line map so findings carry real line numbers, plus
+the parsed AST for rules that need structure (e.g. ``float(traced)``).
+
+The rules registered here (see each ``register`` call):
+
+``compat-api``
+    Version-sensitive jax APIs outside ``compat.py`` — the PR-1
+    invariant that keeps the pinned-jax migration in one file.
+``cache-mode-dispatch``
+    ``cache_mode`` string comparisons outside ``serving/cache_backend.py``
+    — layouts are backends behind one protocol, not scattered branches.
+``interpret-literal``
+    ``interpret=True`` literals outside ``kernels/ops.py`` — the single
+    platform gate (``resolve_interpret``) decides interpret vs compiled;
+    a literal ``True`` ships the Pallas interpreter to the TPU hot path.
+``pallas-call``
+    ``pl.pallas_call`` outside ``kernels/`` — kernels are wrapped once,
+    with invocation counters, oracles and geometry gates; ad-hoc call
+    sites bypass all three.
+``host-sync``
+    ``.item()`` / ``float(non-literal)`` / ``np.asarray`` /
+    ``jax.device_get`` inside the jitted serving modules
+    (``serving/steps.py``, ``serving/cache_backend.py``, ``kernels/``) —
+    a blocking device→host transfer inside the hot path serializes the
+    decode loop the whole PR-1 chunked-decode design exists to avoid.
+``bare-jit``
+    ``jax.jit`` in ``serving/`` outside ``steps.py`` — serving steps go
+    through ``CountingJit`` so retraces stay observable and cache
+    donation is applied uniformly.
+"""
+from __future__ import annotations
+
+import ast
+import bisect
+import io
+import pathlib
+import re
+import tokenize
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.rules import (
+    ALLOW_RULE,
+    Finding,
+    REGISTRY,
+    Rule,
+    register,
+)
+
+# inline suppression marker (see module docstring; reason required)
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[([A-Za-z0-9_-]+)\]\s*(.*)")
+
+# token types that never count as code
+_NON_CODE = (tokenize.COMMENT, tokenize.STRING, tokenize.NEWLINE,
+             tokenize.NL, tokenize.INDENT, tokenize.DEDENT)
+
+
+class SourceFile:
+    """One python file, tokenized once and shared by every rule."""
+
+    def __init__(self, path: pathlib.Path, root: pathlib.Path):
+        self.path = path
+        try:
+            self.rel = path.resolve().relative_to(
+                pathlib.Path(root).resolve()).as_posix()
+        except ValueError:
+            self.rel = path.as_posix()
+        self.text = path.read_text(encoding="utf-8")
+        self.allows: Dict[int, Set[str]] = {}
+        self.meta_findings: List[Finding] = []
+        self._tree: Optional[ast.AST] = None
+        self._tree_parsed = False
+
+        pieces: List[str] = []
+        lines: List[int] = []
+        code_lines: Set[int] = set()
+        comments: List[tokenize.TokenInfo] = []
+        try:
+            for tok in tokenize.generate_tokens(
+                    io.StringIO(self.text).readline):
+                if tok.type == tokenize.COMMENT:
+                    comments.append(tok)
+                    continue
+                if tok.type in _NON_CODE or not tok.string.strip():
+                    continue
+                pieces.append(tok.string)
+                lines.append(tok.start[0])
+                code_lines.add(tok.start[0])
+        except (tokenize.TokenError, IndentationError, SyntaxError) as e:
+            self.meta_findings.append(Finding(
+                self.rel, 1, "parse-error", f"file does not tokenize: {e}"))
+
+        self._lines = lines
+        self._offsets: List[int] = []
+        off = 0
+        for p in pieces:
+            self._offsets.append(off)
+            off += len(p) + 1
+        self.code = " ".join(pieces)
+
+        for tok in comments:
+            m = _ALLOW_RE.search(tok.string)
+            if not m:
+                continue
+            rule_id, reason = m.group(1), m.group(2).strip()
+            # a marker on a comment-only line covers the next line
+            line = tok.start[0]
+            target = line if line in code_lines else line + 1
+            if not reason:
+                self.meta_findings.append(Finding(
+                    self.rel, line, ALLOW_RULE,
+                    f"allow[{rule_id}] marker has no reason — the escape "
+                    f"hatch must say why (finding NOT suppressed)"))
+                continue
+            if rule_id not in REGISTRY:
+                self.meta_findings.append(Finding(
+                    self.rel, line, ALLOW_RULE,
+                    f"allow[{rule_id}] names an unknown rule "
+                    f"(known: {', '.join(sorted(REGISTRY))})"))
+                continue
+            self.allows.setdefault(target, set()).add(rule_id)
+
+    def line_at(self, offset: int) -> int:
+        """Source line of a character offset into :attr:`code`."""
+        i = bisect.bisect_right(self._offsets, offset) - 1
+        return self._lines[i] if 0 <= i < len(self._lines) else 1
+
+    def finditer(self, pattern: "re.Pattern") -> Iterator[Tuple["re.Match", int]]:
+        for m in pattern.finditer(self.code):
+            yield m, self.line_at(m.start())
+
+    @property
+    def tree(self) -> Optional[ast.AST]:
+        if not self._tree_parsed:
+            self._tree_parsed = True
+            try:
+                self._tree = ast.parse(self.text)
+            except SyntaxError:
+                self._tree = None
+        return self._tree
+
+
+def _regex_rule(rid: str, description: str, patterns, message: str, *,
+                only=(), exclude=()) -> Rule:
+    compiled = [re.compile(p) for p in patterns]
+
+    def check(sf: SourceFile):
+        seen = set()
+        for pat in compiled:
+            for m, line in sf.finditer(pat):
+                key = (line, m.group(0))
+                if key in seen:
+                    continue
+                seen.add(key)
+                yield Finding(sf.rel, line, rid,
+                              f"{message} (matched {m.group(0)!r})")
+
+    return register(Rule(rid, description, check, only=only, exclude=exclude))
+
+
+# ---------------------------------------------------------------------------
+# compat-api — ported from tests/test_compat.py's FORBIDDEN list
+# ---------------------------------------------------------------------------
+
+_regex_rule(
+    "compat-api",
+    "version-sensitive jax APIs must route through repro/compat.py",
+    [
+        r"jax\s*\.\s*shard_map",
+        r"experimental\s*\.\s*shard_map",
+        r"jax\s*\.\s*sharding\s*\.\s*AxisType",
+        # the compat accessor itself (`compat.cost_analysis(...)`) is fine
+        r"(?<!compat )\.\s*cost_analysis\s*\(",
+        r"jax\s*\.\s*lax\s*\.\s*axis_size",
+    ],
+    "version-sensitive JAX API used directly — route through repro/compat.py",
+    exclude=("compat.py",),
+)
+
+
+# ---------------------------------------------------------------------------
+# cache-mode-dispatch — ported from tests/test_cache_backend.py
+# ---------------------------------------------------------------------------
+
+_regex_rule(
+    "cache-mode-dispatch",
+    "cache_mode string dispatch lives only in serving/cache_backend.py",
+    [
+        r"cache_mode\s*==",
+        r"==\s*cache_mode",
+        r"cache_mode\s*!=",
+        r"!=\s*cache_mode",
+        r"cache_mode\s+not\s+in\s",
+        r"cache_mode\s+in\s",
+    ],
+    "cache_mode string dispatch outside serving/cache_backend.py — add a "
+    "CacheBackend hook instead",
+    exclude=("serving/cache_backend.py",),
+)
+
+
+# ---------------------------------------------------------------------------
+# interpret-literal — the resolve_interpret platform-gate invariant
+# ---------------------------------------------------------------------------
+
+_regex_rule(
+    "interpret-literal",
+    "no interpret=True literals outside kernels/ops.py",
+    # also catches annotated defaults (`interpret: bool = True`)
+    [r"interpret\s*(?::\s*[\w\.\[\], ]+?\s*)?=\s*True"],
+    "interpret=True pins the Pallas interpreter unconditionally — pass "
+    "interpret=None and let kernels.ops.resolve_interpret platform-gate it",
+    exclude=("kernels/ops.py",),
+)
+
+
+# ---------------------------------------------------------------------------
+# pallas-call — raw pallas_call sites stay inside kernels/
+# ---------------------------------------------------------------------------
+
+_regex_rule(
+    "pallas-call",
+    "direct pl.pallas_call only inside kernels/",
+    [r"\bpallas_call\s*\("],
+    "raw pallas_call outside kernels/ — wrap it as a kernels entry point "
+    "(invocation counter + ref.py oracle + interpret gate)",
+    exclude=("kernels/*",),
+)
+
+
+# ---------------------------------------------------------------------------
+# host-sync — no blocking device->host transfers in the jitted modules
+# ---------------------------------------------------------------------------
+
+_HOST_SYNC_MODULES = ("serving/steps.py", "serving/cache_backend.py",
+                      "kernels/*")
+
+_HOST_SYNC_PATTERNS = [re.compile(p) for p in (
+    r"\.\s*item\s*\(",
+    r"jax\s*\.\s*device_get\b",
+    r"\bnp\s*\.\s*asarray\s*\(",
+    r"\bnumpy\s*\.\s*asarray\s*\(",
+)]
+
+
+def _check_host_sync(sf: SourceFile):
+    for pat in _HOST_SYNC_PATTERNS:
+        for m, line in sf.finditer(pat):
+            yield Finding(
+                sf.rel, line, "host-sync",
+                f"host-sync hazard in a jitted serving module (matched "
+                f"{m.group(0).strip()!r}) — this blocks on device->host "
+                f"transfer when the value is traced")
+    tree = sf.tree
+    if tree is None:
+        return
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "float" and node.args
+                and not isinstance(node.args[0], ast.Constant)):
+            yield Finding(
+                sf.rel, node.lineno, "host-sync",
+                "float(<non-literal>) in a jitted serving module — on a "
+                "traced value this is a blocking device->host sync (use "
+                "jnp ops, or allowlist with a reason if provably static)")
+
+
+register(Rule(
+    "host-sync",
+    "no host-sync hazards (.item / float(traced) / np.asarray / "
+    "jax.device_get) inside the jitted serving modules",
+    _check_host_sync,
+    only=_HOST_SYNC_MODULES,
+))
+
+
+# ---------------------------------------------------------------------------
+# bare-jit — serving steps compile through CountingJit, not raw jax.jit
+# ---------------------------------------------------------------------------
+
+_regex_rule(
+    "bare-jit",
+    "serving/ compiles through CountingJit (steps.py), not bare jax.jit",
+    # call, decorator and functools.partial forms alike
+    [r"jax\s*\.\s*jit\b"],
+    "bare jax.jit in serving/ bypasses CountingJit's retrace accounting "
+    "and the donation conventions — build the step via serving.steps",
+    only=("serving/*",),
+    exclude=("serving/steps.py",),
+)

@@ -1,0 +1,217 @@
+"""Compiled-artifact audit of the jitted serving steps.
+
+Where ``source.py`` lints what the code *says*, this module lints what
+the compiler actually *built*: for a (cache_mode, use_pallas) matrix it
+constructs a reduced serving engine, lowers the jitted ``decode_chunk``
+and ``prefill_chunk`` through ``CountingJit.lower``, and audits
+
+* the optimized HLO via :mod:`repro.analysis.hlo` — no embed/table-sized
+  all-gather in the decode step (the dryrun invariant, now shared), and
+  ``input_output_alias`` entries present whenever the step was built
+  with donated cache buffers on a platform that aliases;
+* kernel engagement via ``kernels.ops.KERNEL_INVOCATIONS`` deltas — with
+  ``use_pallas=True`` the Pallas wrappers must have traced (a silent
+  jnp fallback passes every parity test while shipping the slow path),
+  and with ``use_pallas=False`` they must NOT have.
+
+Heavier than the source rules (it compiles real steps), so the CLI runs
+it only under ``--trace`` and the pytest wrapper keeps the matrix small.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis import hlo as hlo_lint
+from repro.analysis.rules import Finding
+
+# (cache_mode, use_pallas) combos the CLI audits under --trace
+DEFAULT_MATRIX: Tuple[Tuple[str, bool], ...] = (("fp", False), ("fp", True))
+
+_MODELS: Dict[Tuple[str, bool], tuple] = {}
+
+
+def _small_model(arch: str, astra: bool):
+    """Reduced config + params, cached per (arch, astra) — vq layouts need
+    the astra codebooks in the param tree."""
+    key = (arch, astra)
+    if key not in _MODELS:
+        import dataclasses as dc
+
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import model_factory as mf
+
+        cfg = get_config(arch).reduced()
+        if not astra:
+            cfg = dc.replace(cfg, astra=dc.replace(cfg.astra, enabled=False))
+        params = mf.init_params(jax.random.PRNGKey(0), cfg)
+        _MODELS[key] = (cfg, params)
+    return _MODELS[key]
+
+
+@dataclasses.dataclass
+class StepAudit:
+    """One audited compiled step: label + HLO stats + findings."""
+
+    label: str
+    hlo_lines: int
+    largest_allgather_bytes: int
+    num_collectives: int
+    alias_entries: int
+    donated: bool
+    findings: List[Finding]
+
+    def report(self) -> dict:
+        return {
+            "label": self.label,
+            "largest_allgather_bytes": self.largest_allgather_bytes,
+            "num_collectives": self.num_collectives,
+            "alias_entries": self.alias_entries,
+            "donated": self.donated,
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+
+def _audit_compiled(lowered, *, label: str, embed_bytes: int,
+                    donated: bool) -> StepAudit:
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    findings = hlo_lint.audit_hlo(text, label=label,
+                                  max_allgather_bytes=embed_bytes)
+    aliases = hlo_lint.input_output_aliases(text)
+    if donated and not aliases:
+        findings.append(Finding(
+            label, 1, "hlo-missing-alias",
+            "step was built with donated cache argnums but the compiled "
+            "module has no input_output_alias entries — XLA is copying "
+            "the cache every step"))
+    return StepAudit(
+        label=label,
+        hlo_lines=text.count("\n") + 1,
+        largest_allgather_bytes=hlo_lint.largest_allgather_bytes(text),
+        num_collectives=len(hlo_lint.find_collectives(text)),
+        alias_entries=len(aliases),
+        donated=donated,
+        findings=findings,
+    )
+
+
+def engagement_findings(delta: Dict[str, int], *, use_pallas: bool,
+                        label: str) -> List[Finding]:
+    """KERNEL_INVOCATIONS delta vs the route the engine was asked for."""
+    hits = sum(delta.values())
+    if use_pallas and hits == 0:
+        return [Finding(
+            label, 1, "kernel-engagement",
+            "use_pallas=True but no kernels.ops wrapper traced — the "
+            "serving path silently fell back to the jnp epilogues")]
+    if not use_pallas and hits:
+        names = ", ".join(sorted(k for k, v in delta.items() if v))
+        return [Finding(
+            label, 1, "kernel-engagement",
+            f"use_pallas=False but Pallas wrappers traced ({names}) — "
+            f"the jnp reference route is being bypassed")]
+    return []
+
+
+def audit_serving_step(cache_mode: str = "fp", use_pallas: bool = False, *,
+                       arch: str = "gpt2-small", batch: int = 2,
+                       max_len: int = 64, prompt_len: int = 5,
+                       max_new: int = 4,
+                       donate: Optional[bool] = None
+                       ) -> Tuple[List[Finding], dict]:
+    """Audit the compiled decode_chunk + prefill_chunk for one combo.
+
+    Returns ``(findings, report)``; an empty findings list means the
+    compiled artifacts hold every audited invariant for this combo.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops as kops
+    from repro.models import transformer as tlm
+    from repro.serving import steps as serving_steps
+    from repro.serving.engine import ServingEngine
+
+    # lint: allow[cache-mode-dispatch] audit-matrix input, not layout dispatch
+    astra = cache_mode in ("vq", "paged_vq")
+    cfg, params = _small_model(arch, astra)
+    eng = ServingEngine(cfg, params, max_len=max_len, astra_mode="off",
+                        cache_mode=cache_mode, page_size=8, decode_chunk=2,
+                        use_pallas=use_pallas, donate=donate)
+    tag = f"{cache_mode}{'+pallas' if use_pallas else ''}"
+
+    before = dict(kops.KERNEL_INVOCATIONS)
+    toks = np.tile(np.arange(1, prompt_len + 1, dtype=np.int32), (batch, 1))
+    lens = np.full((batch,), prompt_len, np.int32)
+    last_logits, caches, block_tables = eng._run_prefill(toks, lens, max_new)
+
+    lengths = jnp.asarray(lens)
+    lowered_decode = eng._decode_chunk.lower(
+        eng.params, jnp.zeros((batch,), jnp.int32), caches, lengths,
+        jnp.full((batch,), max_new, jnp.int32),
+        jnp.full((batch,), -1, jnp.int32), jnp.zeros((batch,), bool),
+        jax.random.PRNGKey(0), block_tables, num_steps=2, temperature=0.0,
+        top_k=0)
+    delta = {k: v - before.get(k, 0)
+             for k, v in kops.KERNEL_INVOCATIONS.items()
+             if v - before.get(k, 0)}
+
+    leaf = jax.tree.leaves(params)[0]
+    embed_bytes = cfg.vocab_size * cfg.d_model * leaf.dtype.itemsize
+    audits = [_audit_compiled(
+        lowered_decode, label=f"decode_chunk[{tag}]", embed_bytes=embed_bytes,
+        donated=bool(eng._decode_chunk.donate_argnums))]
+
+    if eng.prefill_mode == "chunked":
+        if eng.backend.paged:
+            kv = eng.backend.make_state(
+                cfg, slots=batch, max_len=max_len, ctx=eng.decode_ctx,
+                page_size=eng.page_size, dtype=eng.cache_dtype)
+            for i in range(batch):
+                kv_ok = eng.backend.advance(kv, i, prompt_len + max_new)
+                assert kv_ok, "audit pool sized for its own slots"
+            caches_p, tables = kv.init_cache(batch, prefill_scratch=True), \
+                kv.tables()
+        else:
+            caches_p, tables = tlm.init_lm_cache(
+                cfg, batch, max_len, eng.prefill_ctx, eng.cache_dtype,
+                prefill_scratch=True), None
+        w = serving_steps.plan_chunks(prompt_len, eng.prefill_buckets)[0][1]
+        lowered_prefill = eng._prefill_chunk.lower(
+            eng.params, jnp.zeros((batch, w), jnp.int32),
+            jnp.asarray(0, jnp.int32), caches_p, lengths,
+            jnp.zeros((batch, cfg.vocab_size), jnp.float32), tables,
+            history_len=serving_steps.view_bucket(w, max_len))
+        audits.append(_audit_compiled(
+            lowered_prefill, label=f"prefill_chunk[{tag}]",
+            embed_bytes=embed_bytes,
+            donated=bool(eng._prefill_chunk.donate_argnums)))
+
+    findings = [f for a in audits for f in a.findings]
+    findings += engagement_findings(delta, use_pallas=use_pallas,
+                                    label=f"serving_steps[{tag}]")
+    report = {
+        "arch": arch,
+        "cache_mode": cache_mode,
+        "use_pallas": use_pallas,
+        "kernel_invocations": delta,
+        "steps": [a.report() for a in audits],
+    }
+    return findings, report
+
+
+def audit_matrix(matrix: Sequence[Tuple[str, bool]] = DEFAULT_MATRIX,
+                 **kw) -> Tuple[List[Finding], List[dict]]:
+    """Run :func:`audit_serving_step` over a (cache_mode, use_pallas)
+    matrix; returns merged findings + one report per combo."""
+    findings: List[Finding] = []
+    reports: List[dict] = []
+    for cache_mode, use_pallas in matrix:
+        f, r = audit_serving_step(cache_mode, use_pallas, **kw)
+        findings.extend(f)
+        reports.append(r)
+    return findings, reports

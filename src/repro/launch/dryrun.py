@@ -22,6 +22,7 @@ import traceback
 
 import jax
 
+from repro.analysis.hlo import largest_allgather_bytes
 from repro.compat import cost_analysis as normalized_cost_analysis
 from repro.configs import ASSIGNED, SHAPE_BY_NAME, SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
@@ -35,39 +36,6 @@ from repro.roofline.hlo_analysis import analyze as hlo_analyze
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
-
-
-_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
-                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-                "f64": 8}
-
-
-def _largest_allgather_bytes(hlo: str) -> int:
-    """Max output size of any all-gather in the optimized HLO — the
-    decode-step guard against involuntary rematerialization of a sharded
-    table (the gather would show up as a table-sized all-gather).
-
-    HLO instructions read ``%all-gather.5 = bf16[...]{...} all-gather(...)``
-    — the op name on the left also contains "all-gather", so the result
-    shapes are what sits between the ``=`` and the *call* (the token
-    followed by ``(``)."""
-    import re
-
-    biggest = 0
-    call = re.compile(r"=\s*(.*?)\s*all-gather(?:-start|-done)?\(", re.S)
-    for line in hlo.splitlines():
-        m = call.search(line)
-        if not m:
-            continue
-        for dt, dims in re.findall(r"(\w+)\[([0-9,]*)\]", m.group(1)):
-            if dt not in _DTYPE_BYTES:
-                continue
-            n = 1
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-            biggest = max(biggest, n * _DTYPE_BYTES[dt])
-    return biggest
 
 
 def _tree_bytes(tree) -> int:
@@ -174,7 +142,7 @@ def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
             # all-gather of it would dwarf every legitimate decode
             # collective, so pin its absence here.
             embed_bytes = cfg.vocab_size * cfg.d_model * 2  # bf16 weights
-            big_ag = _largest_allgather_bytes(hlo)
+            big_ag = largest_allgather_bytes(hlo)
             rec["largest_allgather_bytes"] = big_ag
             assert big_ag < embed_bytes, (
                 f"decode step all-gathers {big_ag} bytes (>= the "

@@ -135,6 +135,13 @@ class CountingJit:
     def __call__(self, *args, **kwargs):
         return self._jit(*args, **kwargs)
 
+    def lower(self, *args, **kwargs):
+        """AOT lowering passthrough — the compiled-artifact auditor
+        (``repro.analysis.trace_audit``) lints the optimized HLO of the
+        real jitted step without executing it.  Lowering traces, so
+        ``trace_count`` still advances."""
+        return self._jit.lower(*args, **kwargs)
+
 
 def make_prefill_chunk(ctx, *, donate: Optional[bool] = None) -> CountingJit:
     """Jitted ``prefill_chunk(params, tokens, chunk_start, caches, lengths,

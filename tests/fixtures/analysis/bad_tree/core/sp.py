@@ -1,0 +1,16 @@
+"""Seeded compat-api violations: raw version-sensitive jax APIs.
+
+The docstring may say jax.shard_map freely — only code tokens count.
+"""
+import jax
+
+
+def run(f, mesh, specs):
+    # direct use: must route through repro.compat
+    mapped = jax.shard_map(f, mesh=mesh, in_specs=specs, out_specs=specs)
+    kind = jax.sharding.AxisType.Explicit
+    return mapped, kind
+
+
+def world(axis):
+    return jax.lax.axis_size(axis)

@@ -1,0 +1,13 @@
+"""Seeded interpret-literal violations: the interpreter pinned on.
+
+pallas_call itself is fine here — this file lives under kernels/.
+"""
+from jax.experimental import pallas as pl
+
+
+def flash(q, k, v, *, interpret: bool = True):
+    return pl.pallas_call(_body, interpret=True)(q, k, v)
+
+
+def _body(q_ref, k_ref, v_ref, o_ref):
+    o_ref[...] = q_ref[...]

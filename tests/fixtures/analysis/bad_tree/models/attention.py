@@ -1,0 +1,9 @@
+"""Seeded cache-mode-dispatch violation: a string branch on cache_mode."""
+
+
+def attend(q, k, v, cache, cache_mode):
+    if cache_mode == "paged":
+        return cache.gather(q)
+    if cache_mode in ("vq", "paged_vq"):
+        return cache.dequantize(q)
+    return q @ k, v

@@ -1,0 +1,10 @@
+"""A reason-less allow marker: reported AND the finding stays live.
+
+(cache_mode dispatch would be legal in this file — the marker hygiene
+check is what's seeded here.)
+"""
+import numpy as np
+
+
+def snapshot(x):
+    return np.asarray(x)  # lint: allow[host-sync]

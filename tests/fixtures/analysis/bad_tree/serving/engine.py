@@ -1,0 +1,15 @@
+"""Seeded bare-jit violations: serving steps built outside CountingJit."""
+import functools
+
+import jax
+
+
+@jax.jit
+def _decorated_step(params, tokens):
+    return params, tokens
+
+
+def build_step(fn):
+    step = jax.jit(fn, donate_argnums=(1,))
+    partial_step = functools.partial(jax.jit, static_argnames=("n",))(fn)
+    return step, partial_step

@@ -1,0 +1,12 @@
+"""Seeded pallas-call violation: a raw kernel call outside kernels/."""
+from jax.experimental import pallas as pl
+
+
+def fast_decode(q, k, v):
+    # bypasses the kernels/ wrappers (no invocation counter, no oracle,
+    # no interpret gate)
+    return pl.pallas_call(_body)(q, k, v)
+
+
+def _body(q_ref, k_ref, v_ref, o_ref):
+    o_ref[...] = q_ref[...]

@@ -1,0 +1,11 @@
+"""Seeded host-sync violations inside a jitted serving module."""
+import jax
+import numpy as np
+
+
+def decode_step(cur, lengths, stats):
+    host_len = lengths[0].item()
+    arr = np.asarray(cur)
+    loss = float(stats.sum())
+    fetched = jax.device_get(stats)
+    return host_len, arr, loss, fetched

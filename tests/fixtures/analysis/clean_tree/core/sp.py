@@ -1,0 +1,19 @@
+"""Clean twin of bad_tree/core/sp.py: everything routes through compat.
+
+Prose mentioning jax.shard_map or jax.sharding.AxisType must not trip
+the rule — only code tokens count.
+"""
+from repro import compat
+
+
+def run(f, mesh, specs):
+    return compat.shard_map(f, mesh=mesh, in_specs=specs, out_specs=specs)
+
+
+def world(axis):
+    return compat.axis_size(axis)
+
+
+def flops_of(compiled):
+    # the sanctioned accessor, not compiled.cost_analysis()
+    return compat.cost_analysis(compiled).get("flops", 0.0)

@@ -1,0 +1,16 @@
+"""Clean twin: interpret=None resolved by the single platform gate; a
+raw pallas_call is at home under kernels/."""
+from typing import Optional
+
+from jax.experimental import pallas as pl
+
+from repro.kernels.ops import resolve_interpret
+
+
+def flash(q, k, v, *, interpret: Optional[bool] = None):
+    return pl.pallas_call(
+        _body, interpret=resolve_interpret(interpret))(q, k, v)
+
+
+def _body(q_ref, k_ref, v_ref, o_ref):
+    o_ref[...] = q_ref[...]

@@ -1,0 +1,7 @@
+"""Clean twin: the layout is resolved once, no string dispatch."""
+from repro.serving.cache_backend import get_backend
+
+
+def attend(q, k, v, cache, cache_mode):
+    backend = get_backend(cache_mode)
+    return backend.decode_attend(q, k, v, cache)

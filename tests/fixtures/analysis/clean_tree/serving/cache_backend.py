@@ -1,0 +1,11 @@
+"""cache_backend.py is the structural exemption for cache-mode dispatch."""
+
+CACHE_MODES = ("fp", "vq", "paged", "paged_vq")
+
+
+def get_backend(cache_mode: str):
+    if cache_mode not in CACHE_MODES:
+        raise ValueError(f"unknown cache_mode {cache_mode!r}")
+    if cache_mode == "fp":
+        return "FPSlabBackend"
+    return "OtherBackend"

@@ -1,0 +1,7 @@
+"""Clean twin: steps compile through CountingJit (prose may say jax.jit)."""
+from repro.serving.steps import CountingJit
+
+
+def build_step(fn):
+    # CountingJit wraps jax.jit with retrace accounting + donation
+    return CountingJit(fn, donate_argnums=(1,))

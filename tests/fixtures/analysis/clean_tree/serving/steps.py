@@ -1,0 +1,15 @@
+"""Clean twin of the jitted module: jnp stays on device, and the two
+genuinely-static host reads use the allowlist escape hatch (inline and
+comment-line forms)."""
+import jax
+import jax.numpy as jnp
+
+_TUNING = {"gpt2-small": 8.0}
+
+
+def decode_step(cur, lengths, stats, arch):
+    cur = jnp.asarray(cur, jnp.int32)
+    width = float(_TUNING[arch])  # lint: allow[host-sync] static tuning table
+    # lint: allow[host-sync] host boundary fetch, runs outside the jit
+    fetched = jax.device_get(stats)
+    return cur, width, fetched

@@ -11,13 +11,10 @@ pools, the seq-sharded shard cache) through BOTH engines and pins:
     donate_argnums),
 plus the windowed page-cap accounting (gemma2 / recurrentgemma pools
 shrink to window-sized rings with unchanged outputs), the decode-chunk
-autotune store, and the tokenize-based grep forbidding ``cache_mode``
-string dispatch outside serving/cache_backend.py.
+autotune store, and the ``repro.analysis`` rule (``cache-mode-dispatch``)
+forbidding ``cache_mode`` string dispatch outside serving/cache_backend.py.
 """
 import dataclasses
-import pathlib
-import re
-import tokenize
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +35,6 @@ from repro.serving.kv_cache import (
     pool_bytes,
 )
 from repro.serving.scheduler import ContinuousBatchingEngine
-
-SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
 
 # name -> (cache_mode, needs astra codebooks, seq-sharded mesh, reference
 # backend whose greedy tokens must match exactly)
@@ -420,38 +415,15 @@ def test_autotune_absent_falls_back_to_defaults(tmp_path, monkeypatch):
 # No cache_mode string dispatch outside serving/cache_backend.py
 # ---------------------------------------------------------------------------
 
-# Matched against tokenized source (comments/docstrings stripped), with
-# whitespace-tolerant patterns since tokens are re-joined with spaces.
-FORBIDDEN = [
-    r"cache_mode\s*==",
-    r"==\s*cache_mode",
-    r"cache_mode\s*!=",
-    r"!=\s*cache_mode",
-    r"cache_mode\s+not\s+in\s",
-    r"cache_mode\s+in\s",
-]
-
-
-def _code_only(path: pathlib.Path) -> str:
-    """Source with comments and string literals (docstrings) removed."""
-    toks = []
-    with open(path, "rb") as f:
-        for tok in tokenize.tokenize(f.readline):
-            if tok.type in (tokenize.COMMENT, tokenize.STRING):
-                continue
-            toks.append(tok.string)
-    return " ".join(toks)
-
 
 def test_no_cache_mode_dispatch_outside_cache_backend():
-    offenders = []
-    for path in sorted(SRC.rglob("*.py")):
-        if path.relative_to(SRC).as_posix() == "serving/cache_backend.py":
-            continue
-        code = _code_only(path)
-        for pat in FORBIDDEN:
-            if re.search(pat, code):
-                offenders.append(f"{path.relative_to(SRC)}: {pat}")
-    assert not offenders, (
+    # the tokenize-based grep lives in repro.analysis now (rule
+    # cache-mode-dispatch, with serving/cache_backend.py as the structural
+    # exemption); this stays the backend-owned assertion over the tree
+    from repro.analysis import run_rules
+
+    findings = run_rules(rules=["cache-mode-dispatch"])
+    assert not findings, (
         "cache_mode string dispatch outside serving/cache_backend.py (add "
-        "a CacheBackend method instead):\n" + "\n".join(offenders))
+        "a CacheBackend method instead):\n"
+        + "\n".join(str(f) for f in findings))

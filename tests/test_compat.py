@@ -1,54 +1,21 @@
 """repro.compat: version-adaptive JAX seams + the no-direct-use invariant."""
-import io
-import pathlib
-import re
-import tokenize
-
 import jax
 import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-
-SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
-
-# Version-sensitive APIs every repro module must reach through compat.py.
-# Matched against tokenized source (comments/docstrings stripped), with
-# whitespace-tolerant patterns since tokens are re-joined with spaces.
-FORBIDDEN = [
-    r"jax\s*\.\s*shard_map",
-    r"experimental\s*\.\s*shard_map",
-    r"jax\s*\.\s*sharding\s*\.\s*AxisType",
-    # the compat accessor itself (`compat.cost_analysis(...)`) is sanctioned
-    r"(?<!compat )\.\s*cost_analysis\s*\(",
-    r"jax\s*\.\s*lax\s*\.\s*axis_size",
-]
-
-
-def _code_only(path: pathlib.Path) -> str:
-    """Source with comments and string literals (docstrings) removed."""
-    toks = []
-    with open(path, "rb") as f:
-        for tok in tokenize.tokenize(f.readline):
-            if tok.type in (tokenize.COMMENT, tokenize.STRING):
-                continue
-            toks.append(tok.string)
-    return " ".join(toks)
+from repro.analysis import run_rules
 
 
 def test_no_direct_version_sensitive_jax_apis():
-    offenders = []
-    for path in sorted(SRC.rglob("*.py")):
-        if path.name == "compat.py":
-            continue
-        code = _code_only(path)
-        for pat in FORBIDDEN:
-            if re.search(pat, code):
-                offenders.append(f"{path.relative_to(SRC)}: {pat}")
-    assert not offenders, (
+    # the tokenize-based grep lives in repro.analysis now (rule compat-api,
+    # with compat.py as the structural exemption); this stays the
+    # compat-owned assertion that the tree holds the invariant
+    findings = run_rules(rules=["compat-api"])
+    assert not findings, (
         "version-sensitive JAX APIs used directly (route through "
-        "repro/compat.py):\n" + "\n".join(offenders))
+        "repro/compat.py):\n" + "\n".join(str(f) for f in findings))
 
 
 def test_shard_map_runs_with_check_vma_kwarg():
