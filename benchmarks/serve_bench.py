@@ -14,6 +14,11 @@ perf PR diffs against.  Sections:
 * **decode**: steady-state decode steps/s through the shared jitted chunk.
 * **continuous**: ContinuousBatchingEngine drain stats (tok/s, TTFT,
   prefill chunk ticks) under chunked admission.
+* **prefix_cache**: TTFT vs prefix-hit-rate rows through the paged
+  engine with ``prefix_cache=True`` — a donor warms the radix prefix
+  index, probes share {0, 50, 100}% of its prefix; a full hit runs only
+  the divergent tail's chunks (asserted on ``prefill_chunk_ticks``) with
+  greedy outputs identical to a prefix-cache-off engine.
 * **pallas** (``--use-pallas``, implied by ``--smoke`` so the CI fast lane
   carries the row): the same small workload through ``use_pallas=True``
   vs the jnp reference.  On a box without a TPU the kernels execute in
@@ -194,6 +199,80 @@ def bench_pallas(cfg, params, *, max_len, prompt_lens, max_new, repeats,
     return out
 
 
+def bench_prefix_cache(cfg, params, *, max_len, prefix_len, tail_len,
+                       max_new, repeats, seed=0):
+    """TTFT vs prefix-hit-rate: a donor request warms the radix prefix
+    index, then probes sharing {0, 50, 100}% of the donor's prefix admit
+    through a fresh-token tail.  A full hit must skip the shared prefix's
+    chunks entirely (only the divergent tail's chunks run), so TTFT and
+    ``prefill_chunk_ticks`` fall with the hit rate; greedy outputs stay
+    token-identical to a prefix-cache-off engine."""
+    import numpy as np
+
+    from repro.serving.scheduler import ContinuousBatchingEngine
+
+    rng = np.random.RandomState(seed)
+    prefix = rng.randint(1, cfg.vocab_size, size=prefix_len).tolist()
+    donor = prefix + rng.randint(1, cfg.vocab_size, size=tail_len).tolist()
+
+    def make_engine(prefix_cache):
+        return ContinuousBatchingEngine(
+            cfg, params, slots=2, max_len=max_len, decode_chunk=2,
+            cache_mode="paged", page_size=8, prefill_chunk=32,
+            prefix_cache=prefix_cache)
+
+    rows = []
+    for hit_rate in (0.0, 0.5, 1.0):
+        shared = int(prefix_len * hit_rate)
+        eng = make_engine(True)
+        eng.submit(donor, max_new_tokens=max_new)
+        eng.run_until_drained()  # warm the index (and the compile cache)
+        best, ticks, parity = float("inf"), None, True
+        for rep in range(repeats):
+            # fresh divergent tail per repeat: a drained probe inserts its
+            # own pages, so re-submitting it verbatim would measure a 100%
+            # hit on every later repeat regardless of hit_rate
+            probe = (prefix[:shared] + rng.randint(
+                1, cfg.vocab_size,
+                size=prefix_len - shared + tail_len).tolist())
+            ticks0 = eng.prefill_chunk_ticks
+            t0 = time.perf_counter()
+            uid = eng.submit(probe, max_new_tokens=max_new)
+            while not any(r is not None and r.uid == uid and r.output
+                          for r in list(eng.active) + eng.finished):
+                eng.step()
+            best = min(best, time.perf_counter() - t0)
+            eng.run_until_drained()
+            if ticks is None:
+                ticks = eng.prefill_chunk_ticks - ticks0
+            if rep == 0:
+                cold = make_engine(False)
+                cold.submit(probe, max_new_tokens=max_new)
+                cold.run_until_drained()
+                probe_out = next(r.output for r in eng.finished
+                                 if r.uid == uid)
+                parity = probe_out == cold.finished[-1].output
+        rows.append({
+            "hit_rate": hit_rate,
+            "shared_tokens": shared,
+            "ttft_s": best,
+            "prefill_chunk_ticks": ticks,
+            "prefix_hit_tokens": eng.prefix_hit_tokens,
+            "token_parity_vs_cold": parity,
+        })
+    out = {
+        "prefix_len": int(prefix_len),
+        "tail_len": int(tail_len),
+        "rows": rows,
+        "full_hit_tick_reduction":
+            rows[0]["prefill_chunk_ticks"] - rows[-1]["prefill_chunk_ticks"],
+    }
+    # a fully cached prefix must not re-prefill: only the tail's chunks run
+    assert rows[-1]["prefill_chunk_ticks"] < rows[0]["prefill_chunk_ticks"], out
+    assert all(r["token_parity_vs_cold"] for r in rows), out
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -223,11 +302,13 @@ def main(argv=None) -> dict:
         adm_kw = dict(prompt_len=24, repeats=1)
         decode_kw = dict(batch=2, max_new=16, repeats=1)
         cont_kw = dict(n_requests=4, prompt_len=24, max_new=6)
+        px_kw = dict(prefix_len=64, tail_len=8, max_new=4, repeats=1)
     else:
         max_len, prompt_lens, repeats = 1024, (16, 64, 128, 256, 512), 3
         adm_kw = dict(prompt_len=64, repeats=3)
         decode_kw = dict(batch=4, max_new=64, repeats=3)
         cont_kw = dict(n_requests=12, prompt_len=96, max_new=24)
+        px_kw = dict(prefix_len=128, tail_len=16, max_new=8, repeats=3)
 
     t0 = time.time()
     prefill = bench_prefill(cfg, params, max_len=max_len,
@@ -244,6 +325,8 @@ def main(argv=None) -> dict:
         "decode": bench_decode(cfg, params, max_len=max_len, **decode_kw),
         "continuous": bench_continuous(cfg, params, max_len=max_len,
                                        **cont_kw),
+        "prefix_cache": bench_prefix_cache(cfg, params, max_len=max_len,
+                                           **px_kw),
     }
     if args.use_pallas or args.smoke:
         # always smoke-sized: off-TPU the kernels run interpreted, so a
@@ -268,6 +351,11 @@ def main(argv=None) -> dict:
     print(f"  decode: {report['decode']['decode_steps_per_s']:.1f} steps/s")
     print(f"  continuous: {report['continuous']['tok_per_s']:.1f} tok/s, "
           f"{report['continuous']['prefill_chunk_ticks']} prefill ticks")
+    for r in report["prefix_cache"]["rows"]:
+        print(f"  prefix-cache hit={r['hit_rate']:.1f}: "
+              f"ttft {r['ttft_s'] * 1e3:8.1f} ms, "
+              f"{r['prefill_chunk_ticks']} prefill ticks, "
+              f"parity={r['token_parity_vs_cold']}")
     if "pallas" in report:
         p = report["pallas"]
         tag = " [interpret]" if p["interpret_mode"] else ""

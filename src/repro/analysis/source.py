@@ -34,6 +34,12 @@ The rules registered here (see each ``register`` call):
     ``jax.jit`` in ``serving/`` outside ``steps.py`` — serving steps go
     through ``CountingJit`` so retraces stay observable and cache
     donation is applied uniformly.
+``allocator-internals``
+    ``._free`` / ``._owned`` / ``._refs`` access outside
+    ``serving/kv_cache.py`` — the page allocator refcounts shared pages
+    (prefix caching), so external mutation of its internals corrupts
+    refcounts silently; everyone else uses the public
+    ``alloc``/``share``/``release`` surface.
 """
 from __future__ import annotations
 
@@ -283,6 +289,22 @@ register(Rule(
 # ---------------------------------------------------------------------------
 # bare-jit — serving steps compile through CountingJit, not raw jax.jit
 # ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# allocator-internals — PageAllocator state is private to kv_cache.py
+# ---------------------------------------------------------------------------
+
+_regex_rule(
+    "allocator-internals",
+    "PageAllocator internals (._free/._owned/._refs) stay inside "
+    "serving/kv_cache.py",
+    [r"\.\s*_free\b", r"\.\s*_owned\b", r"\.\s*_refs\b"],
+    "PageAllocator internal state accessed outside serving/kv_cache.py — "
+    "pages are refcounted (prefix sharing), so external mutation corrupts "
+    "the free list silently; use alloc/share/release/check_invariants",
+    exclude=("serving/kv_cache.py",),
+)
+
 
 _regex_rule(
     "bare-jit",

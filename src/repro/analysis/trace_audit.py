@@ -204,6 +204,74 @@ def audit_serving_step(cache_mode: str = "fp", use_pallas: bool = False, *,
     return findings, report
 
 
+def donation_aliasing_findings(donated, others, *, label: str
+                               ) -> List[Finding]:
+    """Leaf-identity audit of one jitted call's arguments: an array
+    reachable from BOTH the donated argument and a non-donated one makes
+    donation unsound — XLA may reuse the buffer for an output while the
+    other argument still reads it.  This is a *host-side* check (python
+    object identity), so it catches exactly the adopt-pools style aliasing
+    the HLO auditors cannot see (by lowering time both references are one
+    parameter or the damage is already done)."""
+    import jax
+
+    donated_ids: Dict[int, str] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(donated)[0]:
+        if hasattr(leaf, "dtype"):
+            donated_ids[id(leaf)] = jax.tree_util.keystr(path)
+    findings: List[Finding] = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(others)[0]:
+        if id(leaf) in donated_ids:
+            findings.append(Finding(
+                label, 1, "donation-aliasing",
+                f"non-donated argument leaf {jax.tree_util.keystr(path)} "
+                f"is the same buffer as donated leaf "
+                f"{donated_ids[id(leaf)]} — donating it invalidates a "
+                f"live input"))
+    return findings
+
+
+def audit_chunked_admission(cache_mode: str = "paged", *,
+                            arch: str = "gpt2-small", max_len: int = 64,
+                            prompt_len: int = 20, max_new: int = 2
+                            ) -> Tuple[List[Finding], dict]:
+    """Drive one real chunked admission through the continuous scheduler
+    and audit every slot-merge call's donated-vs-rest argument aliasing
+    (the donated live cache must not share buffers with the fresh batch-1
+    tree — see ``scheduler._advance_pending``'s strip_pool_leaves)."""
+    from repro.serving.scheduler import ContinuousBatchingEngine
+
+    # lint: allow[cache-mode-dispatch] audit-matrix input, not layout dispatch
+    astra = cache_mode in ("vq", "paged_vq")
+    cfg, params = _small_model(arch, astra)
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=max_len, astra_mode="off",
+        cache_mode=cache_mode, page_size=8, decode_chunk=2)
+    label = f"merge_slot[{cache_mode}]"
+    findings: List[Finding] = []
+    merges = [0]
+    real_merge = eng._merge
+
+    def audited_merge(live, fresh, slot):
+        merges[0] += 1
+        # audit as-if-donated even where the platform filtered donation
+        # out (CPU): the aliasing bug only bites on TPU/GPU, but the
+        # invariant must hold everywhere the code ships
+        findings.extend(donation_aliasing_findings(
+            live, (fresh, slot), label=label))
+        return real_merge(live, fresh, slot)
+
+    eng._merge = audited_merge
+    eng.submit(list(range(1, prompt_len + 1)), max_new_tokens=max_new)
+    eng.run_until_drained()
+    report = {
+        "cache_mode": cache_mode,
+        "merge_calls": merges[0],
+        "findings": [f.to_dict() for f in findings],
+    }
+    return findings, report
+
+
 def audit_matrix(matrix: Sequence[Tuple[str, bool]] = DEFAULT_MATRIX,
                  **kw) -> Tuple[List[Finding], List[dict]]:
     """Run :func:`audit_serving_step` over a (cache_mode, use_pallas)

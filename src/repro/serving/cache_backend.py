@@ -65,7 +65,7 @@ CACHE_MODES = ("fp", "vq", "paged", "paged_vq")
 # only: chunk attention must read exact fp K/V for earlier chunks (one-shot
 # prefill attends full precision, so dequantized codes would break parity),
 # while the *persistent* cache stays codes-only.  Stripped before decode.
-SCRATCH_KEYS = frozenset({"k_fp", "v_fp"})
+SCRATCH_KEYS = kvc.PREFILL_SCRATCH_KEYS
 
 
 def strip_prefill_scratch(caches):

@@ -30,6 +30,26 @@ Page 0 of each group is a reserved scratch page: block-table rows of retired
 or never-admitted slots point at it, so the fixed-shape decode step can keep
 writing without corrupting live requests, and page-pool reads beyond a row's
 allocation are masked by the attention validity mask.
+
+**Cross-request prefix sharing** (``PrefixIndex`` + refcounted pages):
+``PageAllocator`` counts references per page — ``alloc`` starts a page at
+refcount 1, ``share`` adds a co-owner, and a page returns to the free list
+only when its last owner releases it.  On top of that, ``PrefixIndex`` is a
+radix tree over *page-sized token chunks*: each node is keyed by a rolling
+hash of ``(parent_key, page_tokens)`` and pins one live page (the index is
+an allocator owner like any slot).  Retiring requests insert their prompt's
+full pages instead of freeing them; admission walks the incoming prompt down
+the tree, points the slot's block-table rows at the shared pages
+(``share``), copy-on-write forks a partial last page into a fresh page
+(``copy_page``), and starts the chunked prefill at the first uncached token.
+Under allocator pressure the index evicts least-recently-touched leaves
+first; eviction only actually frees a page when no live request still
+co-owns it.  Because a page id indexes *every* layer's pool in its group,
+sharing is exact only when all attention layers see the same global causal
+history — ``PagedKVCache.prefix_shareable`` gates the feature to all-global
+attention stacks, and ``paged_vq`` nodes additionally carry host-side fp
+snapshots of the prefill-view scratch so reuse stays bitwise identical to a
+cold prefill.
 """
 from __future__ import annotations
 
@@ -43,6 +63,10 @@ from repro.configs.base import ModelConfig
 # leaf names marking a cache sub-dict as a shared page pool (no batch dim)
 PAGED_LEAF_KEYS = frozenset(
     {"k_pages", "v_pages", "k_code_pages", "v_code_pages"})
+
+# fp prefill-view scratch slabs carried by vq-coded layers during chunked
+# prefill only (serving.cache_backend re-exports this as SCRATCH_KEYS)
+PREFILL_SCRATCH_KEYS = frozenset({"k_fp", "v_fp"})
 
 
 # ---------------------------------------------------------------------------
@@ -257,12 +281,29 @@ def adopt_pools(fresh: List[Dict], live: List[Dict]) -> List[Dict]:
     return out
 
 
+def strip_pool_leaves(caches: List[Dict]) -> List[Dict]:
+    """Drop the shared page-pool leaves from a cache tree (host-side,
+    structural).  The chunked scheduler adopts the live pools into the
+    per-request prefill cache, so by merge time the pool arrays inside the
+    fresh tree *are* the live tree's arrays — stripping them before the
+    donated ``merge_slot`` call keeps XLA from seeing the same buffer as
+    both a donated and a non-donated input."""
+    return [{name: ({k: v for k, v in sub.items()
+                     if k not in PAGED_LEAF_KEYS}
+                    if is_paged_sub(sub) else sub)
+             for name, sub in stage.items()} for stage in caches]
+
+
 def merge_slot(live: List[Dict], fresh: List[Dict], slot) -> List[Dict]:
     """Merge a batch-1 prefill cache into row ``slot`` of the live batched
     cache, on device (jit-traced; ``slot`` may be a traced scalar).  Shared
-    page-pool sub-dicts are adopted wholesale — prefill already wrote the
-    slot's pages in place — while batched (R, B, ...) leaves get the
-    (R, 1, ...) slice inserted at ``slot``."""
+    page-pool sub-dicts are adopted wholesale when ``fresh`` still carries
+    them (the padded in-jit prefill path, where the fresh tree's pools hold
+    the writes) and kept from ``live`` when the caller stripped them (the
+    chunked path: prefill already wrote the live pools in place, and the
+    stripped tree is what makes donating ``live`` sound — see
+    ``strip_pool_leaves``).  Batched (R, B, ...) leaves get the (R, 1, ...)
+    slice inserted at ``slot``."""
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -275,12 +316,36 @@ def merge_slot(live: List[Dict], fresh: List[Dict], slot) -> List[Dict]:
     out = []
     for l_stage, f_stage in zip(live, fresh):
         sub = {}
-        for name, f_sub in f_stage.items():
-            if is_paged_sub(f_sub):
-                sub[name] = f_sub
+        for name, l_sub in l_stage.items():
+            f_sub = f_stage.get(name)
+            if is_paged_sub(l_sub):
+                sub[name] = (f_sub if f_sub is not None
+                             and is_paged_sub(f_sub) else l_sub)
             else:
-                sub[name] = jax.tree.map(one, l_stage[name], f_sub)
+                sub[name] = jax.tree.map(one, l_sub, f_sub)
         out.append(sub)
+    return out
+
+
+def copy_page(caches: List[Dict], src, dst) -> List[Dict]:
+    """Device copy of pool page ``src`` into ``dst`` across every paged
+    leaf of every layer — the copy-on-write fork for a partially shared
+    page.  ``src``/``dst`` may be traced scalars, so the scheduler's jitted
+    wrapper compiles once regardless of which pages fork.  Pool leaves are
+    ``(reps, num_pages, page_size, ...)``; everything else rides through
+    untouched."""
+    out = []
+    for stage in caches:
+        sub_out = {}
+        for name, sub in stage.items():
+            if is_paged_sub(sub):
+                sub_out[name] = {
+                    k: (v.at[:, dst].set(v[:, src])
+                        if k in PAGED_LEAF_KEYS else v)
+                    for k, v in sub.items()}
+            else:
+                sub_out[name] = sub
+        out.append(sub_out)
     return out
 
 
@@ -301,11 +366,19 @@ def pool_bytes(caches: Sequence[Dict]) -> int:
 
 
 class PageAllocator:
-    """Free-list allocator over one page group's ids.
+    """Free-list allocator over one page group's ids, with per-page
+    refcounts.
 
     Pages ``[0, reserved)`` are never handed out — page 0 is the scratch
     page absorbing writes from retired/padded rows.  ``alloc`` doubles as
     append: allocating again for a live owner extends its page list.
+
+    A freshly allocated page has refcount 1; ``share`` registers another
+    owner on an already-live page (cross-request prefix reuse), and
+    ``release``/``free`` drops one reference per page the owner held — a
+    page returns to the free list only when its last reference goes.
+    ``pages_in_use`` counts *distinct* live pages, so sharing makes the
+    pool measurably cheaper, not just differently bookkept.
     """
 
     def __init__(self, num_pages: int, reserved: int = 1):
@@ -316,6 +389,7 @@ class PageAllocator:
         self.reserved = int(reserved)
         self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
         self._owned: Dict[Any, List[int]] = {}
+        self._refs: Dict[int, int] = {}
 
     @property
     def capacity(self) -> int:
@@ -327,10 +401,14 @@ class PageAllocator:
 
     @property
     def pages_in_use(self) -> int:
-        return sum(len(v) for v in self._owned.values())
+        """Distinct live pages (a shared page counts once)."""
+        return len(self._refs)
 
     def owned(self, owner) -> List[int]:
         return list(self._owned.get(owner, ()))
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(int(page), 0)
 
     def alloc(self, owner, n_pages: int) -> Optional[List[int]]:
         """Hand ``n_pages`` to ``owner`` (appending to any existing grant).
@@ -340,26 +418,255 @@ class PageAllocator:
         if n_pages > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n_pages)]
+        for p in pages:
+            self._refs[p] = 1
         self._owned.setdefault(owner, []).extend(pages)
         return pages
 
+    def share(self, owner, pages: Sequence[int]) -> None:
+        """Register ``owner`` as a co-owner of live ``pages`` (prefix
+        reuse): each page's refcount rises by one and the page joins the
+        owner's grant list in the given order (block-table rows are written
+        from that order, so callers share *before* any fresh ``alloc``)."""
+        pages = [int(p) for p in pages]
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(
+                    f"page {p} is not live — only allocated pages can be "
+                    f"shared")
+        for p in pages:
+            self._refs[p] += 1
+            self._owned.setdefault(owner, []).append(p)
+
     def free(self, owner) -> List[int]:
-        """Return every page owned by ``owner`` to the free list."""
+        """Drop one reference per page ``owner`` held; pages whose refcount
+        hits zero return to the free list.  Returns the owner's pages."""
         pages = self._owned.pop(owner, [])
-        self._free.extend(pages)
+        for p in pages:
+            self._refs[p] -= 1
+            if not self._refs[p]:
+                del self._refs[p]
+                self._free.append(p)
         return pages
 
+    # the refcount-era verb; ``free`` kept as the historical name
+    release = free
+
     def check_invariants(self) -> None:
-        seen = set()
-        for pages in self._owned.values():
+        counts: Dict[int, int] = {}
+        for owner, pages in self._owned.items():
+            seen_here = set()
             for p in pages:
                 assert self.reserved <= p < self.num_pages, p
-                assert p not in seen, f"page {p} double-assigned"
-                seen.add(p)
+                assert p not in seen_here, \
+                    f"page {p} listed twice for owner {owner!r}"
+                seen_here.add(p)
+                counts[p] = counts.get(p, 0) + 1
+        assert counts == self._refs, (
+            f"refcounts drifted from owner lists: {self._refs} vs {counts}")
         free = set(self._free)
         assert len(free) == len(self._free), "free list holds duplicates"
-        assert not (seen & free), "live page also on the free list"
+        assert not (set(counts) & free), "live page also on the free list"
         assert self.num_free + self.pages_in_use == self.capacity
+
+
+# ---------------------------------------------------------------------------
+# Radix prefix index (cross-request prefix caching)
+# ---------------------------------------------------------------------------
+
+# root key of the radix tree; node keys are rolling hashes and never 0
+_PREFIX_ROOT = 0
+
+
+def _chunk_key(parent_key: int, tokens: tuple) -> int:
+    """Rolling content hash of one page-sized token chunk: the node key is
+    ``hash((parent_key, tokens))``, so a chunk's key commits to the entire
+    token prefix before it.  Int/tuple-of-int hashing is unsalted in
+    CPython, so keys are stable within a process; ``| 1`` keeps keys off
+    the root sentinel.  Lookups still verify ``(parent, tokens)`` on the
+    node, so a collision degrades to a cache miss, never to wrong pages."""
+    return hash((parent_key, tokens)) | 1
+
+
+class _PrefixNode:
+    """One cached page: ``tokens`` (page_size ids) extending ``parent``,
+    pinning live page id ``page``.  ``fp`` optionally carries host-side
+    numpy snapshots of the fp prefill-view scratch for this page (keyed by
+    ``(stage_idx, sub_name)``) — the paged_vq layout decodes from codes but
+    *prefills* against exact fp views, so bitwise reuse parity needs the
+    original values, not a dequantization."""
+
+    __slots__ = ("key", "parent", "tokens", "page", "fp", "tick")
+
+    def __init__(self, key, parent, tokens, page, fp=None):
+        self.key = key
+        self.parent = parent
+        self.tokens = tokens
+        self.page = int(page)
+        self.fp = fp
+        self.tick = 0
+
+
+class PrefixIndex:
+    """Radix tree over page-sized token chunks -> live page ids.
+
+    Host-side only.  Each node holds one reference on its page (allocator
+    owner ``("px", key)`` — see ``PagedKVCache.prefix_insert``), so index
+    residency alone keeps a page alive after its request retires.  LRU is
+    a monotone touch tick; eviction removes least-recently-touched
+    *leaves* first, which keeps every cached chain contiguous from the
+    root."""
+
+    def __init__(self, page_size: int, need_fp: bool = False):
+        self.page_size = int(page_size)
+        self.need_fp = bool(need_fp)
+        self.nodes: Dict[int, _PrefixNode] = {}
+        self._children: Dict[int, set] = {}
+        self._tick = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.insertions = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def _lookup(self, parent: int, tokens: tuple) -> Optional[_PrefixNode]:
+        node = self.nodes.get(_chunk_key(parent, tokens))
+        if node is None or node.parent != parent or node.tokens != tokens:
+            return None
+        if self.need_fp and node.fp is None:
+            return None
+        return node
+
+    def match(self, prompt: Sequence[int]) -> List[_PrefixNode]:
+        """Longest chain of full page-chunk matches from the root."""
+        ps = self.page_size
+        out: List[_PrefixNode] = []
+        parent = _PREFIX_ROOT
+        for i in range(len(prompt) // ps):
+            node = self._lookup(parent, tuple(prompt[i * ps:(i + 1) * ps]))
+            if node is None:
+                break
+            out.append(node)
+            parent = node.key
+        return out
+
+    def best_partial(self, parent: int, rem: Sequence[int]):
+        """Child of ``parent`` sharing the longest nonzero token prefix
+        with ``rem`` — the copy-on-write fork candidate.  Returns
+        ``(node, common_len)`` or None."""
+        rem = tuple(rem)
+        best, best_len = None, 0
+        for key in self._children.get(parent, ()):
+            node = self.nodes[key]
+            if self.need_fp and node.fp is None:
+                continue
+            common = 0
+            for a, b in zip(node.tokens, rem):
+                if a != b:
+                    break
+                common += 1
+            if common > best_len:
+                best, best_len = node, common
+        return (best, best_len) if best is not None else None
+
+    def touch(self, nodes: Sequence[_PrefixNode]) -> None:
+        for node in nodes:
+            self._tick += 1
+            node.tick = self._tick
+
+    def add(self, parent: int, tokens: tuple, page: int,
+            fp=None) -> _PrefixNode:
+        key = _chunk_key(parent, tokens)
+        node = _PrefixNode(key, parent, tokens, page, fp)
+        self.nodes[key] = node
+        self._children.setdefault(parent, set()).add(key)
+        self.insertions += 1
+        self.touch([node])
+        return node
+
+    def lru_leaf(self) -> Optional[_PrefixNode]:
+        leaves = [n for n in self.nodes.values()
+                  if not self._children.get(n.key)]
+        return min(leaves, key=lambda n: n.tick) if leaves else None
+
+    def remove(self, node: _PrefixNode) -> None:
+        del self.nodes[node.key]
+        self._children.pop(node.key, None)
+        siblings = self._children.get(node.parent)
+        if siblings is not None:
+            siblings.discard(node.key)
+            if not siblings:
+                del self._children[node.parent]
+        self.evictions += 1
+
+    def stats(self) -> Dict[str, int]:
+        return {"nodes": len(self.nodes), "hits": self.hits,
+                "hit_tokens": self.hit_tokens,
+                "insertions": self.insertions, "evictions": self.evictions}
+
+
+def snapshot_prefill_scratch(caches: List[Dict], num_tokens: int,
+                             page_size: int) -> Optional[List[Dict]]:
+    """Host numpy copies of the fp prefill-view scratch, one dict per full
+    prompt page (``{(stage_idx, sub_name): (k_page, v_page)}`` with pages
+    shaped ``(reps, 1, page_size, heads, head_dim)``).
+
+    The paged_vq layout persists only VQ codes; the exact fp values exist
+    transiently in the prefill scratch slabs and are stripped before
+    decode.  Prefix nodes keep these snapshots so a later hit can re-seed a
+    fresh request's scratch with the *original* values — dequantizing codes
+    instead would break bitwise parity with a cold prefill.  Returns None
+    when the tree carries no scratch (the plain paged layout)."""
+    n_full = int(num_tokens) // int(page_size)
+    slabs = {}
+    for si, stage in enumerate(caches):
+        for name, sub in stage.items():
+            if PREFILL_SCRATCH_KEYS & set(sub):
+                slabs[(si, name)] = (np.asarray(sub["k_fp"]),
+                                     np.asarray(sub["v_fp"]))
+    if not slabs or not n_full:
+        return None if not slabs else []
+    pages: List[Dict] = []
+    for i in range(n_full):
+        a, b = i * page_size, (i + 1) * page_size
+        pages.append({key: (k[:, :, a:b].copy(), v[:, :, a:b].copy())
+                      for key, (k, v) in slabs.items()})
+    return pages
+
+
+def hydrate_prefill_scratch(caches: List[Dict], fp_pages: Sequence[Dict],
+                            reuse: int, page_size: int) -> List[Dict]:
+    """Write prefix-node fp snapshots into a fresh prefill cache's scratch
+    slabs for positions ``[0, reuse)`` (host-side assembly, one device
+    transfer per slab — no jit, so nothing re-specializes).  Positions at
+    and beyond ``reuse`` stay zero; the tail chunks overwrite them before
+    any attention view reads them (scatter precedes the gathered view in
+    ``chunk_attend``, and the causal mask hides unwritten keys)."""
+    import jax.numpy as jnp
+
+    out: List[Dict] = []
+    for si, stage in enumerate(caches):
+        new_stage = {}
+        for name, sub in stage.items():
+            if PREFILL_SCRATCH_KEYS & set(sub):
+                k = np.asarray(sub["k_fp"]).copy()
+                v = np.asarray(sub["v_fp"]).copy()
+                for i, page in enumerate(fp_pages):
+                    a = i * page_size
+                    m = min(page_size, int(reuse) - a)
+                    if m <= 0 or page is None:
+                        break
+                    pk, pv = page[(si, name)]
+                    k[:, :, a:a + m] = pk[:, :, :m]
+                    v[:, :, a:a + m] = pv[:, :, :m]
+                sub = dict(sub)
+                sub["k_fp"] = jnp.asarray(k, sub["k_fp"].dtype)
+                sub["v_fp"] = jnp.asarray(v, sub["v_fp"].dtype)
+            new_stage[name] = sub
+        out.append(new_stage)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -422,6 +729,8 @@ class PagedKVCache:
             self.groups[name] = _PageGroup(name, self.slots, span, n)
         # engine-facing compat: the dominant group's knobs
         self.num_pages = self.groups[self.dominant].num_pages
+        # cross-request prefix index; None until enable_prefix_cache()
+        self.prefix: Optional[PrefixIndex] = None
 
     # -- host-side bookkeeping ----------------------------------------------
     @property
@@ -485,6 +794,132 @@ class PagedKVCache:
     @property
     def pages_in_use(self) -> int:
         return sum(g.allocator.pages_in_use for g in self.groups.values())
+
+    # -- cross-request prefix caching ---------------------------------------
+    @property
+    def prefix_shareable(self) -> bool:
+        """True when page sharing is content-addressable for this model: a
+        page id indexes *every* layer's pool in its group, so two requests
+        may share a page only if every attention layer's KV at those
+        positions is a pure function of the token prefix — i.e. all-global
+        causal attention, no windowed rings, no recurrent state folded
+        across chunk boundaries."""
+        from repro.models.transformer import ATTN_KINDS, stages
+
+        if set(self.groups) != {"global"}:
+            return False
+        return all(kind in ATTN_KINDS and not _attn_kind_window(kind, self.cfg)
+                   for kinds, _ in stages(self.cfg) for kind in kinds)
+
+    def enable_prefix_cache(self) -> None:
+        if not self.prefix_shareable:
+            raise ValueError(
+                f"{self.cfg.name}: prefix caching needs an all-global-"
+                f"attention stack (groups={sorted(self.groups)}) — windowed "
+                f"rings and recurrent state are not content-addressable")
+        self.prefix = PrefixIndex(self.page_size,
+                                  need_fp=self.ctx.backend.vq_codes)
+
+    def prefix_grant(self, slot, prompt: Sequence[int], tokens_needed: int):
+        """Admission grant through the prefix index: attach the longest
+        cached prefix to ``slot``'s block-table row via shared pages, then
+        allocate the rest.  Returns ``(reuse_tokens, cow, fp_pages)`` —
+        ``cow`` is a ``(src_page, dst_page)`` copy-on-write fork when the
+        reuse boundary splits a cached page, ``fp_pages`` the matched
+        nodes' fp snapshots (vq hydration) — or None on allocator pressure
+        (only LRU evictions may have happened; the slot is untouched).
+
+        Reuse is capped at ``len(prompt) - 1`` tokens: the final prompt
+        token's chunk must run to produce ``last_logits``."""
+        prompt = list(prompt)
+        n = len(prompt)
+        ps = self.page_size
+        g = self.groups["global"]
+        if self.prefix is None:
+            return (0, None, None) if self.advance(slot, tokens_needed) \
+                else None
+        # longest full-page chain, capped so >= 1 prompt token remains
+        nodes = self.prefix.match(prompt)[:max(n - 1, 0) // ps]
+        parent = nodes[-1].key if nodes else _PREFIX_ROOT
+        matched = len(nodes) * ps
+        partial = self.prefix.best_partial(parent, prompt[matched:])
+        extra = 0
+        if partial is not None:
+            extra = min(partial[1], (n - 1) - matched)
+        cow_node = partial[0] if extra > 0 else None
+        self.prefix.touch(nodes + ([cow_node] if cow_node else []))
+        # pressure: fresh pages needed beyond the shared ones
+        need_total = self.group_pages_for("global", tokens_needed)
+        fresh_needed = need_total - len(nodes)
+        while fresh_needed > g.allocator.num_free:
+            if not self._prefix_evict_one():
+                return None
+        for i, node in enumerate(nodes):
+            g.allocator.share(slot, [node.page])
+            g.block_table[slot, i] = node.page
+        cow = None
+        if cow_node is not None:
+            dst = g.allocator.alloc(slot, 1)
+            assert dst is not None  # covered by the pressure loop
+            g.block_table[slot, len(nodes)] = dst[0]
+            cow = (cow_node.page, dst[0])
+        ok = self.advance(slot, tokens_needed)
+        assert ok, "pressure loop guaranteed the fresh pages"
+        reuse = matched + extra
+        if reuse:
+            self.prefix.hits += 1
+            self.prefix.hit_tokens += reuse
+        fp_pages = None
+        if self.prefix.need_fp:
+            fp_pages = [node.fp for node in nodes]
+            if cow_node is not None:
+                fp_pages.append(cow_node.fp)
+        return reuse, cow, fp_pages
+
+    def prefix_insert(self, slot, prompt: Sequence[int],
+                      fp_pages=None) -> int:
+        """Insert ``slot``'s prompt-region *full* pages into the index (at
+        retirement, before ``free(slot)`` drops the slot's references).
+        Each new node takes its own reference on the page, so the page
+        outlives the request.  Returns the number of nodes added."""
+        if self.prefix is None:
+            return 0
+        ps = self.page_size
+        g = self.groups["global"]
+        prompt = list(prompt)
+        inserted = 0
+        parent = _PREFIX_ROOT
+        for i in range(len(prompt) // ps):
+            chunk = tuple(prompt[i * ps:(i + 1) * ps])
+            node = self.prefix._lookup(parent, chunk)
+            if node is not None:  # chain already cached: refresh, descend
+                self.prefix.touch([node])
+                parent = node.key
+                continue
+            if self.prefix.nodes.get(_chunk_key(parent, chunk)) is not None:
+                break  # hash collision or fp-less twin: stop extending
+            page = int(g.block_table[slot, i])
+            if page < g.allocator.reserved:
+                break  # defensive: never index the scratch page
+            fp = fp_pages[i] if fp_pages and i < len(fp_pages) else None
+            if self.prefix.need_fp and fp is None:
+                break
+            key = _chunk_key(parent, chunk)
+            g.allocator.share(("px", key), [page])
+            self.prefix.add(parent, chunk, page, fp)
+            inserted += 1
+            parent = key
+        return inserted
+
+    def _prefix_evict_one(self) -> bool:
+        """Evict the least-recently-touched index leaf; its page returns to
+        the free list only if no live request still co-owns it."""
+        node = self.prefix.lru_leaf() if self.prefix else None
+        if node is None:
+            return False
+        self.groups["global"].allocator.free(("px", node.key))
+        self.prefix.remove(node)
+        return True
 
     def tables(self) -> Dict[str, Any]:
         """Device copies of the block tables (fixed shapes: compile-once)."""

@@ -17,6 +17,15 @@ slab copy), and retirement returns the pages.  "paged_vq" stores uint8/16
 VQ codes per page — the Appendix-G codes-only cache under per-group block
 tables (windowed layers ride the capped "window" table).
 
+With ``prefix_cache=True`` (paged + chunked + all-global attention only)
+admission first consults the radix prefix index
+(``serving.kv_cache.PrefixIndex``): the longest cached prefix's pages are
+shared into the slot's block-table row (refcounted — see ``PageAllocator``),
+a partially matching last page forks copy-on-write, and the chunked prefill
+plan starts at the first uncached token.  Retirement inserts the prompt's
+full pages into the index instead of freeing them; the index LRU-evicts
+leaves under allocator pressure.
+
 Admission runs the *chunked prefill pipeline* by default
 (``prefill_mode="chunked"``): the prompt walks the bucketed chunk grid
 (``serving.steps.plan_chunks`` over ``PREFILL_BUCKETS``) one chunk per
@@ -103,7 +112,8 @@ class ContinuousBatchingEngine:
                  donate: Optional[bool] = None,
                  prefill_mode: str = "chunked",
                  prefill_chunk: Optional[int] = None,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False,
+                 prefix_cache: Optional[bool] = None):
         if cfg.arch_type in ("vit",):
             raise ValueError("classification models are not generative")
         seq_sharded = (mesh_ctx.seq_axis is not None
@@ -179,6 +189,31 @@ class ContinuousBatchingEngine:
         self._pending: Optional[_PendingPrefill] = None
         self.prefill_chunk_ticks = 0  # chunk dispatches (chunked mode)
         self._uid = 0
+        # cross-request prefix caching (paged + chunked + all-global only:
+        # a shared page id indexes every layer's pool, so reuse is exact
+        # only when each layer's KV is a pure function of the token prefix)
+        supported = (self.backend.paged and self.prefill_mode == "chunked"
+                     and getattr(self.kv, "prefix_shareable", False))
+        if prefix_cache and not supported:
+            raise ValueError(
+                f"prefix_cache=True needs a paged backend with chunked "
+                f"prefill and an all-global-attention model "
+                f"(cache_mode={self.backend.name!r}, "
+                f"prefill_mode={self.prefill_mode!r}, cfg={cfg.name!r})")
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        if self.prefix_cache:
+            self.kv.enable_prefix_cache()
+            # copy-on-write page fork: src/dst ride as traced scalars, the
+            # live cache is donated like every other cache round-trip
+            cow_donate = (self.backend.donate_argnums((0,))
+                          if donate is None else ((0,) if donate else ()))
+            self._cow = serving_steps.CountingJit(
+                kvc.copy_page, donate_argnums=cow_donate)
+        # per-slot fp scratch snapshots awaiting retirement-time insertion
+        # into the prefix index (paged_vq only)
+        self._slot_fp: Dict[int, Any] = {}
 
     # -- jitted steps --------------------------------------------------------
     def _prefill_impl(self, params, tokens, length, slot, live_caches,
@@ -209,8 +244,26 @@ class ContinuousBatchingEngine:
     # -- slot management -----------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
                eos_id: Optional[int] = None) -> int:
+        """Queue a request.  Invalid requests are rejected HERE, not during
+        ``step()``: a bad request discovered mid-drain used to either wedge
+        the engine (``can_ever_fit`` raising from the queue head) or
+        silently truncate the prompt to ``max_len - max_new_tokens - 1`` —
+        admitting a garbage all-zeros chunk once ``max_new_tokens`` got
+        within 1 of ``max_len``."""
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} + max_new_tokens "
+                f"{max_new_tokens} exceeds max_len={self.max_len}")
+        tokens_needed = len(prompt) + max_new_tokens
+        if not self.kv.can_ever_fit(tokens_needed):
+            raise ValueError(
+                f"request needs pages for {tokens_needed} tokens but "
+                f"the pool can never hold them")
         self._uid += 1
-        self.queue.append(Request(self._uid, list(prompt), max_new_tokens,
+        self.queue.append(Request(self._uid, prompt, max_new_tokens,
                                   eos_id, submitted_step=self.step_count))
         return self._uid
 
@@ -219,24 +272,42 @@ class ContinuousBatchingEngine:
             return None
         return {name: t[slot:slot + 1] for name, t in self._bt.items()}
 
-    def _grant_slot(self, slot: int) -> Optional[int]:
-        """Page-grant the queue head into ``slot``; returns its true prompt
-        length, or None on allocator pressure (state unchanged)."""
-        n = min(len(self.queue[0].prompt),
-                self.max_len - self.queue[0].max_new_tokens - 1)
+    def _grant_slot(self, slot: int):
+        """Page-grant the queue head into ``slot``; returns
+        ``(prompt_len, reuse_tokens, fp_pages)``, or None on allocator
+        pressure (slot untouched; the prefix index may have LRU-evicted).
+        ``submit`` already validated the request, so the full prompt is
+        admitted — no truncation, no mid-drain raise.  With the prefix
+        cache on, the grant routes through ``kv.prefix_grant``: shared
+        pages attach to the slot's block-table row first, a partial-page
+        match forks copy-on-write, and only the remainder allocates."""
+        req = self.queue[0]
+        n = len(req.prompt)
         # admission blocks on allocator pressure, not slot count: the
         # request needs pages for its prompt + full budget (slab
         # backends always have room — advance is a bound check there).
-        tokens_needed = min(n + self.queue[0].max_new_tokens, self.max_len)
-        if not self.kv.can_ever_fit(tokens_needed):
-            raise ValueError(
-                f"request needs pages for {tokens_needed} tokens but "
-                f"the pool can never hold them")
-        if not self.backend.advance(self.kv, slot, tokens_needed):
-            self.admission_stalls += 1
-            return None  # FIFO: wait for a retirement to free pages
+        tokens_needed = min(n + req.max_new_tokens, self.max_len)
+        if self.prefix_cache:
+            granted = self.kv.prefix_grant(slot, req.prompt, tokens_needed)
+            if granted is None:
+                self.admission_stalls += 1
+                return None  # FIFO: wait for a retirement to free pages
+            reuse, cow, fp_pages = granted
+            if cow is not None:
+                src, dst = cow
+                self.caches = self._cow(self.caches,
+                                        jnp.asarray(src, jnp.int32),
+                                        jnp.asarray(dst, jnp.int32))
+            if reuse:
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += reuse
+        else:
+            if not self.backend.advance(self.kv, slot, tokens_needed):
+                self.admission_stalls += 1
+                return None  # FIFO: wait for a retirement to free pages
+            reuse, fp_pages = 0, None
         self._bt = self.kv.tables()
-        return n
+        return n, reuse, fp_pages
 
     def _finish_admission(self, req: Request, slot: int, n: int,
                           last_logits) -> None:
@@ -268,9 +339,10 @@ class ContinuousBatchingEngine:
         for slot in range(self.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
-            n = self._grant_slot(slot)
-            if n is None:
+            granted = self._grant_slot(slot)
+            if granted is None:
                 break
+            n, _, _ = granted  # padded mode never prefix-caches
             req = self.queue.pop(0)
             toks = np.zeros((1, self.max_len), np.int32)
             toks[0, :n] = req.prompt[:n]
@@ -290,16 +362,24 @@ class ContinuousBatchingEngine:
                      if self.active[s] is None), None)
         if slot is None:
             return
-        n = self._grant_slot(slot)
-        if n is None:
+        granted = self._grant_slot(slot)
+        if granted is None:
             return
+        n, reuse, fp_pages = granted
         req = self.queue.pop(0)
         caches = self.kv.init_cache(1, prefill_scratch=True)
         if self.backend.paged:
             caches = kvc.adopt_pools(caches, self.caches)
+        if reuse and self.backend.vq_codes:
+            # re-seed the fp prefill-view scratch with the prefix nodes'
+            # exact snapshots: the tail chunks attend against the original
+            # values, keeping reuse bitwise identical to a cold prefill
+            caches = kvc.hydrate_prefill_scratch(
+                caches, fp_pages, reuse, self.kv.page_size)
         self._pending = _PendingPrefill(
             req=req, slot=slot, n=n,
-            plan=serving_steps.plan_chunks(n, self.prefill_buckets),
+            plan=serving_steps.plan_chunks(n, self.prefill_buckets,
+                                           start=reuse),
             next_chunk=0, caches=caches,
             last_logits=jnp.zeros((1, self.cfg.vocab_size), jnp.float32))
 
@@ -328,7 +408,20 @@ class ContinuousBatchingEngine:
             self.caches = kvc.adopt_pools(self.caches, pend.caches)
         if pend.next_chunk < len(pend.plan):
             return
+        if self.prefix_cache and self.backend.vq_codes:
+            # capture the exact fp scratch per prompt page before it is
+            # stripped — retirement hands these to the prefix index
+            self._slot_fp[pend.slot] = kvc.snapshot_prefill_scratch(
+                pend.caches, pend.n, self.kv.page_size)
         fresh = cbe.strip_prefill_scratch(pend.caches)
+        if self.backend.paged:
+            # the pool leaves inside ``fresh`` are the very arrays
+            # ``self.caches`` holds (adopted above): donating self.caches
+            # into the merge while fresh still referenced them would hand
+            # XLA the same buffer as both donated and non-donated input.
+            # The live pools already carry every prefill write, so the
+            # merge only needs the dense (batched) leaves.
+            fresh = kvc.strip_pool_leaves(fresh)
         self.caches = self._merge(self.caches, fresh,
                                   jnp.asarray(pend.slot, jnp.int32))
         self._pending = None
@@ -344,10 +437,16 @@ class ContinuousBatchingEngine:
             req.done_step = self.step_count
             self.finished.append(req)
             self.active[slot] = None
-            # all of the request's pages go back to the free lists; the
-            # slot's table rows point at scratch so the fixed-shape decode
-            # step keeps writing harmlessly until re-admission (no-op for
-            # slab backends).
+            if self.prefix_cache:
+                # the prompt's full pages move into the prefix index (each
+                # node takes its own reference) instead of dying with the
+                # slot; release below only drops the slot's references.
+                self.kv.prefix_insert(slot, req.prompt,
+                                      self._slot_fp.pop(slot, None))
+            # the request's remaining page references go back to the free
+            # lists; the slot's table rows point at scratch so the
+            # fixed-shape decode step keeps writing harmlessly until
+            # re-admission (no-op for slab backends).
             self.backend.release(self.kv, slot)
             self._bt = self.kv.tables()
             return True
@@ -424,4 +523,8 @@ class ContinuousBatchingEngine:
             "admission_stalls": self.admission_stalls,
             "prefill_chunk_ticks": self.prefill_chunk_ticks,
             "pages_in_use": self.kv.pages_in_use,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_index": (self.kv.prefix.stats()
+                             if self.prefix_cache else None),
         }

@@ -87,17 +87,23 @@ def view_bucket(chunk_end: int, max_len: int,
     return min(v, max_len)
 
 
-def plan_chunks(total_len: int, buckets) -> List[Tuple[int, int]]:
+def plan_chunks(total_len: int, buckets,
+                start: int = 0) -> List[Tuple[int, int]]:
     """Decompose a prompt of ``total_len`` tokens into ``(start, width)``
     chunks with widths drawn from ``buckets``: greedy largest-fit, and a
     smallest-covering bucket for the tail (its padding is masked/dropped by
-    the chunk step, so a bucket overhanging ``max_len`` is harmless)."""
+    the chunk step, so a bucket overhanging ``max_len`` is harmless).
+
+    A nonzero ``start`` begins the plan at the first *uncached* token — the
+    prefix-cache tail plan: chunks cover ``[start, total_len)`` only, and
+    at least the final token's chunk always runs (``start`` is clamped to
+    ``total_len - 1``) so prefill still produces ``last_logits``."""
     buckets = sorted(set(int(b) for b in buckets))
     if not buckets or buckets[0] <= 0:
         raise ValueError(f"invalid prefill buckets {buckets}")
     plan: List[Tuple[int, int]] = []
-    start = 0
     total = max(int(total_len), 1)
+    start = min(max(int(start), 0), total - 1)
     while start < total:
         rem = total - start
         fit = [b for b in buckets if b <= rem]

@@ -1,0 +1,13 @@
+"""Seeded allocator-internals violations: PageAllocator private state
+poked from outside serving/kv_cache.py."""
+
+
+def steal_page(kv, slot):
+    # bypasses refcounts entirely: the page never leaves _refs
+    page = kv.allocator._free.pop()
+    kv.allocator._owned[slot].append(page)
+    return page
+
+
+def force_refcount(kv, page):
+    kv.allocator._refs[page] = 1

@@ -1,0 +1,15 @@
+"""Clean twin: page lifecycle through the public allocator surface
+(prose may mention _free or _owned without tripping the rule)."""
+
+
+def grant(kv, slot, n_pages):
+    # alloc starts each page at refcount 1; release drops it
+    pages = kv.allocator.alloc(slot, n_pages)
+    if pages is None:
+        return None
+    kv.allocator.check_invariants()
+    return pages
+
+
+def retire(kv, slot):
+    return kv.allocator.release(slot)

@@ -29,7 +29,8 @@ BAD = FIX / "bad_tree"
 CLEAN = FIX / "clean_tree"
 
 EXPECTED_RULES = {"compat-api", "cache-mode-dispatch", "interpret-literal",
-                  "pallas-call", "host-sync", "bare-jit"}
+                  "pallas-call", "host-sync", "bare-jit",
+                  "allocator-internals"}
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +62,7 @@ BAD_EXPECT = {
     "serving/fastpath.py": {"pallas-call"},
     "serving/steps.py": {"host-sync"},
     "serving/engine.py": {"bare-jit"},
+    "serving/sched.py": {"allocator-internals"},
     # reason-less marker: reported AND the suppression does not apply
     "serving/cache_backend.py": {"host-sync", "lint-allow"},
 }

@@ -266,15 +266,17 @@ def test_admission_stalls_then_drains_under_page_pressure():
 
 
 def test_oversized_request_raises_instead_of_deadlocking():
-    """A request whose prompt+budget can never fit the pool must fail fast —
-    a silent admission stall would spin run_until_drained to max_steps."""
+    """A request whose prompt+budget can never fit the pool must fail fast
+    at submit() — raising mid-step() would wedge the drain loop with the
+    bad request still at the queue head, and a silent admission stall
+    would spin run_until_drained to max_steps."""
     cfg, params = small_lm()
     eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=64,
                                    cache_mode="paged", page_size=8,
                                    num_pages=2)  # capacity: 1 page
-    eng.submit(list(range(1, 30)), max_new_tokens=16)
     with pytest.raises(ValueError, match="pages"):
-        eng.step()
+        eng.submit(list(range(1, 30)), max_new_tokens=16)
+    assert not eng.queue  # the engine is not wedged: nothing was queued
 
 
 @settings(max_examples=3, deadline=None)

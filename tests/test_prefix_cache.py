@@ -1,0 +1,367 @@
+"""Cross-request prefix caching: refcounted page sharing, the radix
+prefix index, copy-on-write forks, LRU eviction under pressure, and the
+scheduler admission fixes that cleared the way (no silent prompt
+truncation, no mid-drain ValueError wedging, no donation aliasing
+through adopted page pools)."""
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _fallback_hypothesis import given, settings, st
+
+from repro.analysis import trace_audit
+from repro.configs import get_config
+from repro.models import model_factory as mf
+from repro.models.context import StepCtx
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import PageAllocator, PagedKVCache
+from repro.serving.scheduler import ContinuousBatchingEngine
+
+_MODELS = {}
+
+
+def small_lm(astra=False):
+    if astra not in _MODELS:
+        cfg = get_config("gpt2-small").reduced()
+        if not astra:
+            cfg = dataclasses.replace(
+                cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+        params = mf.init_params(jax.random.PRNGKey(0), cfg)
+        _MODELS[astra] = (cfg, params)
+    return _MODELS[astra]
+
+
+def _engine(cfg, params, cache_mode, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("decode_chunk", 2)
+    kw.setdefault("prefill_chunk", 32)
+    return ContinuousBatchingEngine(cfg, params, cache_mode=cache_mode, **kw)
+
+
+def _drain_one(eng, prompt, max_new=6):
+    """Submit one prompt, drain, return (output, prefill ticks it took)."""
+    t0 = eng.prefill_chunk_ticks
+    uid = eng.submit(list(prompt), max_new_tokens=max_new)
+    eng.run_until_drained()
+    out = next(r.output for r in eng.finished if r.uid == uid)
+    return out, eng.prefill_chunk_ticks - t0
+
+
+def _prompts(seed=0, n=32):
+    rng = random.Random(seed)
+    prefix = [rng.randrange(1, 500) for _ in range(n)]
+    donor = prefix + [rng.randrange(1, 500) for _ in range(4)]   # 36 tokens
+    probe = prefix + [rng.randrange(1, 500) for _ in range(2)]   # 34 tokens
+    return prefix, donor, probe
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix parity vs cold start (paged + paged_vq, both engines)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cache_mode,astra", [("paged", False),
+                                              ("paged_vq", True)])
+def test_prefix_hit_matches_cold_start(cache_mode, astra):
+    """A warm-index probe decodes token-for-token what a cold engine (and
+    the static batch engine) produce, with fewer prefill chunk ticks and a
+    recorded hit — sharing changes the schedule, never the tokens."""
+    cfg, params = small_lm(astra)
+    prefix, donor, probe = _prompts()
+
+    cold = _engine(cfg, params, cache_mode)
+    want_donor, cold_donor_ticks = _drain_one(cold, donor)
+    want_probe, cold_probe_ticks = _drain_one(cold, probe)
+
+    warm = _engine(cfg, params, cache_mode, prefix_cache=True)
+    got_donor, warm_donor_ticks = _drain_one(warm, donor)
+    got_probe, warm_probe_ticks = _drain_one(warm, probe)
+
+    assert got_donor == want_donor  # donor ran cold: index was empty
+    assert got_probe == want_probe  # hit: exact reuse of the shared pages
+    assert warm_donor_ticks == cold_donor_ticks
+    assert warm_probe_ticks < cold_probe_ticks
+    assert warm.prefix_hits == 1 and warm.prefix_hit_tokens == len(prefix)
+    # static batch engine agrees (cross-engine greedy parity)
+    static = ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                           cache_mode=cache_mode, decode_chunk=2, page_size=8)
+    ref = static.generate([donor, probe], max_new_tokens=6,
+                          temperature=0.0).tokens
+    assert [got_donor, got_probe] == ref
+    for g in warm.kv.groups.values():
+        g.allocator.check_invariants()
+    assert warm._decode_chunk.trace_count == 1  # sharing never respecializes
+
+
+@pytest.mark.parametrize("cache_mode,astra", [("paged", False),
+                                              ("paged_vq", True)])
+def test_fully_cached_prompt_runs_only_tail_chunks(cache_mode, astra):
+    """Resubmitting an indexed prompt reuses every full prompt page; only
+    the tail chunk (the final token must still produce last_logits) runs."""
+    cfg, params = small_lm(astra)
+    _, donor, _ = _prompts()
+    eng = _engine(cfg, params, cache_mode, prefix_cache=True)
+    want, cold_ticks = _drain_one(eng, donor)
+    got, hit_ticks = _drain_one(eng, donor)
+    assert got == want
+    assert cold_ticks == 2 and hit_ticks == 1  # 36 tokens: 32+4 vs tail 4
+    # 4 full pages matched; the partial 5th page is never indexed
+    assert eng.prefix_hit_tokens == 32
+    assert eng.kv.prefix.stats()["nodes"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write forks: page-boundary and mid-page divergence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cache_mode,astra", [("paged", False),
+                                              ("paged_vq", True)])
+def test_cow_fork_mid_page(cache_mode, astra):
+    """Probe diverging 4 tokens into donor's 4th page: the partial match
+    COW-forks that page (28 reused tokens) and decodes cold-identical."""
+    cfg, params = small_lm(astra)
+    rng = random.Random(7)
+    _, donor, _ = _prompts()
+    probe = donor[:28] + [rng.randrange(1, 500) for _ in range(4)]
+    cold = _engine(cfg, params, cache_mode)
+    want, _ = _drain_one(cold, probe)
+    eng = _engine(cfg, params, cache_mode, prefix_cache=True)
+    _drain_one(eng, donor)
+    got, _ = _drain_one(eng, probe)
+    assert got == want
+    assert eng.prefix_hit_tokens == 28  # 3 full pages + 4-token COW fork
+    assert eng._cow.trace_count == 1
+    for g in eng.kv.groups.values():
+        g.allocator.check_invariants()
+
+
+def test_cow_fork_page_boundary_needs_no_copy():
+    """Divergence exactly at a page boundary is a pure full-page chain hit:
+    24 tokens reused, the copy-on-write kernel never traces."""
+    cfg, params = small_lm()
+    rng = random.Random(8)
+    _, donor, _ = _prompts()
+    probe = donor[:24] + [rng.randrange(1, 500) for _ in range(8)]
+    cold = _engine(cfg, params, "paged")
+    want, _ = _drain_one(cold, probe)
+    eng = _engine(cfg, params, "paged", prefix_cache=True)
+    _drain_one(eng, donor)
+    got, _ = _drain_one(eng, probe)
+    assert got == want
+    assert eng.prefix_hit_tokens == 24
+    assert eng._cow.trace_count == 0  # boundary split: nothing to fork
+
+
+def test_cow_compiles_once_across_forks():
+    """Two different mid-page forks reuse one compiled copy_page (src/dst
+    page ids ride as traced scalars)."""
+    cfg, params = small_lm()
+    rng = random.Random(9)
+    _, donor, _ = _prompts()
+    eng = _engine(cfg, params, "paged", prefix_cache=True)
+    _drain_one(eng, donor)
+    for salt in range(2):
+        probe = donor[:26 + salt] + [rng.randrange(1, 500) for _ in range(4)]
+        _drain_one(eng, probe)
+    assert eng._cow.trace_count == 1
+    assert eng._decode_chunk.trace_count == 1
+
+
+# ---------------------------------------------------------------------------
+# Refcount properties (hypothesis) + eviction stress
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), num_pages=st.integers(4, 64))
+def test_allocator_share_refcount_properties(seed, num_pages):
+    """Random alloc/share/free sequences: a page's refcount always equals
+    the number of owner lists holding it, shared pages survive their first
+    owner's free, and the pool balances to empty."""
+    rng = random.Random(seed)
+    a = PageAllocator(num_pages)
+    owners = list(range(5))
+    grants = {o: [] for o in owners}
+    for _ in range(150):
+        o = rng.choice(owners)
+        r = rng.random()
+        if r < 0.45:
+            got = a.alloc(o, rng.randint(0, 3))
+            if got is not None:
+                grants[o].extend(got)
+        elif r < 0.75:
+            live = sorted({p for pg in grants.values() for p in pg})
+            cand = [p for p in live if p not in grants[o]]
+            if cand:
+                p = rng.choice(cand)
+                a.share(o, [p])
+                grants[o].append(p)
+        else:
+            assert sorted(a.free(o)) == sorted(grants[o])
+            grants[o] = []
+        a.check_invariants()
+        counts = {}
+        for pg in grants.values():
+            for p in pg:
+                counts[p] = counts.get(p, 0) + 1
+        for p, c in counts.items():
+            assert a.refcount(p) == c
+        assert a.pages_in_use == len(counts)  # distinct live pages
+        assert a.num_free + a.pages_in_use == a.capacity
+    for o in owners:
+        a.free(o)
+    assert a.pages_in_use == 0 and a.num_free == a.capacity
+
+
+def test_share_rejects_dead_page():
+    a = PageAllocator(8)
+    (page,) = a.alloc("x", 1)
+    with pytest.raises(ValueError, match="not live"):
+        a.share("y", [page + 1])
+    a.share("y", [page])
+    assert a.refcount(page) == 2
+    a.free("x")
+    assert a.refcount(page) == 1  # survives the first owner
+    a.free("y")
+    assert a.pages_in_use == 0
+
+
+def test_eviction_under_pressure_keeps_invariants():
+    """A pool too small to index every retired prompt: admission evicts
+    LRU leaves to make room, every request still drains with correct
+    greedy output lengths, and the allocator balances after every step."""
+    cfg, params = small_lm()
+    rng = random.Random(3)
+    # 7 usable pages; each request needs 3 (16 prompt + 2 new tokens) and
+    # parks 2 full prompt pages in the index at retirement
+    eng = _engine(cfg, params, "paged", num_pages=8, prefix_cache=True,
+                  prefill_chunk=16)
+    prompts = [[rng.randrange(1, 500) for _ in range(16)] for _ in range(8)]
+    prompts += prompts[:2]  # two repeats: hits if they survived LRU
+    for p in prompts:
+        eng.submit(p, max_new_tokens=2)
+    fuel = 600
+    while (eng.queue or eng._pending is not None
+           or any(r is not None for r in eng.active)) and fuel:
+        eng.step()
+        fuel -= 1
+        for g in eng.kv.groups.values():
+            g.allocator.check_invariants()
+    assert fuel, "drain wedged under page pressure"
+    assert len(eng.finished) == len(prompts)
+    assert all(len(r.output) == 2 for r in eng.finished)
+    stats = eng.kv.prefix.stats()
+    assert stats["evictions"] > 0
+    # only index references remain: distinct live pages == surviving nodes
+    assert eng.kv.pages_in_use == len({n.page
+                                       for n in eng.kv.prefix.nodes.values()})
+
+
+# ---------------------------------------------------------------------------
+# Admission bug regressions: truncation, mid-drain raise, gating
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejects_empty_prompt():
+    cfg, params = small_lm()
+    eng = _engine(cfg, params, "paged")
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit([], max_new_tokens=2)
+    assert not eng.queue
+
+
+def test_submit_rejects_prompt_budget_overflow():
+    """len(prompt) + max_new_tokens > max_len used to silently truncate the
+    prompt at admission; it must reject at submit() instead — and leave the
+    engine fully usable."""
+    cfg, params = small_lm()
+    eng = _engine(cfg, params, "paged")
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(list(range(1, 62)), max_new_tokens=4)
+    assert not eng.queue
+    out, _ = _drain_one(eng, [5, 9, 3], max_new=4)
+    assert len(out) == 4  # rejection left no wedged state behind
+
+
+def test_long_prompt_is_not_silently_truncated():
+    """8 prompt tokens + 56 new = exactly max_len: the old admission path
+    would have truncated the prompt to 7 tokens and decoded from the wrong
+    context; the full prompt must match the static engine bit-for-bit."""
+    cfg, params = small_lm()
+    prompt = [7, 2, 8, 4, 1, 9, 3, 5]
+    static = ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                           cache_mode="paged", decode_chunk=2, page_size=8)
+    want = static.generate([prompt], max_new_tokens=56,
+                           temperature=0.0).tokens[0]
+    eng = _engine(cfg, params, "paged")
+    got, _ = _drain_one(eng, prompt, max_new=56)
+    assert got == want
+
+
+def test_submit_rejects_request_that_can_never_fit():
+    """A request larger than the whole pool used to raise mid-step() and
+    wedge the engine; submit() must reject it up front."""
+    cfg, params = small_lm()
+    eng = _engine(cfg, params, "paged", num_pages=4)  # 3 usable pages
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(list(range(1, 30)), max_new_tokens=8)
+    assert not eng.queue
+    out, _ = _drain_one(eng, [5, 9, 3], max_new=3)
+    assert len(out) == 3
+
+
+def test_prefix_cache_gating_raises_on_unsupported_configs():
+    cfg, params = small_lm()
+    with pytest.raises(ValueError, match="prefix_cache"):
+        _engine(cfg, params, "fp", prefix_cache=True)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        _engine(cfg, params, "paged", prefill_mode="padded",
+                prefix_cache=True)
+
+
+def test_enable_prefix_cache_rejects_windowed_model():
+    """Sliding-window rings are not content-addressable: a page's contents
+    depend on absolute position, so sharing is refused at the source."""
+    cfg = get_config("gemma2-27b").reduced()
+    cfg = dataclasses.replace(
+        cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+    ctx = StepCtx(cfg=cfg, mode="decode", astra_mode="off",
+                  cache_mode="paged")
+    kv = PagedKVCache(cfg, slots=2, max_len=64, ctx=ctx, page_size=8)
+    assert not kv.prefix_shareable
+    with pytest.raises(ValueError, match="content-addressable"):
+        kv.enable_prefix_cache()
+
+
+# ---------------------------------------------------------------------------
+# Donation aliasing through adopted page pools
+# ---------------------------------------------------------------------------
+
+
+def test_donation_aliasing_audit_detects_shared_leaf():
+    x = jnp.zeros((2, 2))
+    hits = trace_audit.donation_aliasing_findings(
+        {"a": x}, ({"b": x}, jnp.zeros((1,))), label="t")
+    assert [f.rule for f in hits] == ["donation-aliasing"]
+    clean = trace_audit.donation_aliasing_findings(
+        {"a": jnp.zeros((2, 2))}, ({"b": jnp.ones((2, 2))},), label="t")
+    assert not clean
+
+
+@pytest.mark.parametrize("cache_mode", ["paged", "paged_vq"])
+def test_chunked_admission_merge_never_aliases_donated_cache(cache_mode):
+    """The adopt-pools prefill hands pool arrays back inside the fresh
+    batch-1 tree; _advance_pending must strip them before the donated
+    merge.  Audited as-if-donated on every platform."""
+    findings, report = trace_audit.audit_chunked_admission(cache_mode)
+    assert report["merge_calls"] > 0
+    assert not findings, [str(f) for f in findings]
