@@ -26,10 +26,16 @@ perf PR diffs against.  Sections:
   is marked ``interpret_mode: true`` — the assertable signal is greedy
   parity, identical compile counts and identical host syncs, which hold on
   every backend.
+* **speculative** (``--speculate``; ``--smoke`` carries one row):
+  draft/verify decoding through the static engine — accept-rate,
+  tokens-per-round and tok/s vs draft length k (the ``SPEC_K_LADDER``
+  rungs) and drafter mode (n-gram self-draft vs a paired draft model),
+  with greedy output asserted token-identical to the sequential baseline
+  and one verify compile per rung.
 * compile counts (CountingJit traces) and host syncs for every engine run.
 
 Usage:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
-            [--use-pallas] [--out F]
+            [--use-pallas] [--speculate] [--out F]
 """
 from __future__ import annotations
 
@@ -273,6 +279,66 @@ def bench_prefix_cache(cfg, params, *, max_len, prefix_len, tail_len,
     return out
 
 
+def bench_speculative(cfg, params, *, max_len, batch, max_new, repeats,
+                      ks=(2, 4, 8), modes=("ngram", "model"), seed=0):
+    """The ``--speculate`` section: accept-rate, tokens/round and tok/s vs
+    draft length k and drafter mode, against the sequential-decode
+    baseline.  Greedy spec output is asserted token-identical to the
+    baseline first — losslessness is the contract, the knobs only move
+    throughput.  "ngram" self-drafts from each row's history (cyclic
+    prompts here so the lookup has something to find); "model" pairs the
+    target with itself — every greedy proposal is the target's own argmax,
+    an acceptance upper bound that must clear 1 token/round."""
+
+    prompts = [([5, 9, 3, 7, 11, 2] * max_len)[:8 + 2 * i]
+               for i in range(batch)]
+
+    def timed(eng):
+        got = eng.generate(prompts, max_new_tokens=max_new,
+                           temperature=0.0).tokens  # compile warmup
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            eng.generate(prompts, max_new_tokens=max_new, temperature=0.0,
+                         seed=seed)
+        return got, (time.perf_counter() - t0) / repeats
+
+    base = _engine(cfg, params, "chunked", max_len, decode_chunk=4)
+    want, base_dt = timed(base)
+    new_tokens = sum(len(t) for t in want)
+    rows = []
+    for mode_name in modes:
+        draft = None if mode_name == "ngram" else (cfg, params)
+        for k in ks:
+            eng = _engine(cfg, params, "chunked", max_len,
+                          speculative=k, draft=draft)
+            got, dt = timed(eng)
+            assert got == want, (mode_name, k)  # lossless by construction
+            per_round = eng.spec_tokens / max(eng.spec_active_rows, 1)
+            rows.append({
+                "drafter": mode_name,
+                "k": eng.spec_k,
+                "wall_s": dt,
+                "tok_per_s": new_tokens / dt,
+                "speedup_vs_sequential": base_dt / dt,
+                "tokens_per_round": per_round,
+                # drafted positions accepted per active row-round
+                "accept_rate": (per_round - 1) / eng.spec_k,
+                "rounds": eng.spec_rounds,
+                "verify_compiles": eng._verify_chunk.trace_count,
+                "host_syncs": eng.host_syncs,
+            })
+            # one verify trace per rung, ever — the k-ladder contract
+            assert eng._verify_chunk.trace_count == 1, rows[-1]
+    out = {
+        "batch": batch, "max_new_tokens": int(max_new),
+        "baseline": {"wall_s": base_dt, "tok_per_s": new_tokens / base_dt},
+        "rows": rows,
+    }
+    # speculation must actually speculate: some row clears 1 token/round
+    assert any(r["tokens_per_round"] > 1.0 for r in rows), out
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -281,6 +347,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--use-pallas", action="store_true",
                     help="add the Pallas-kernel attention column "
                          "(interpret-mode numbers marked as such off-TPU)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="add the speculative-decoding section: accept "
+                         "rate / tokens-per-round / tok/s vs draft length "
+                         "k and drafter mode (n-gram self-draft + paired "
+                         "draft model); --smoke carries one row")
     ap.add_argument("--arch", default="gpt2-small")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serving.json"))
@@ -334,6 +405,13 @@ def main(argv=None) -> dict:
         report["pallas"] = bench_pallas(cfg, params, max_len=min(max_len, 256),
                                         prompt_lens=(16, 48), max_new=8,
                                         repeats=1)
+    if args.speculate or args.smoke:
+        spec_kw = (dict(batch=2, max_new=8, repeats=1, ks=(2,),
+                        modes=("model",))  # one row rides the CI lane
+                   if args.smoke else
+                   dict(batch=4, max_new=24, repeats=3))
+        report["speculative"] = bench_speculative(
+            cfg, params, max_len=min(max_len, 256), **spec_kw)
     report["bench_wall_s"] = time.time() - t0
     out_path = os.path.abspath(args.out)
     with open(out_path, "w") as f:
@@ -356,6 +434,12 @@ def main(argv=None) -> dict:
               f"ttft {r['ttft_s'] * 1e3:8.1f} ms, "
               f"{r['prefill_chunk_ticks']} prefill ticks, "
               f"parity={r['token_parity_vs_cold']}")
+    if "speculative" in report:
+        for r in report["speculative"]["rows"]:
+            print(f"  speculative[{r['drafter']}] k={r['k']}: "
+                  f"{r['tokens_per_round']:.2f} tok/round "
+                  f"(accept {r['accept_rate']:.2f}), "
+                  f"{r['speedup_vs_sequential']:.2f}x vs sequential")
     if "pallas" in report:
         p = report["pallas"]
         tag = " [interpret]" if p["interpret_mode"] else ""

@@ -40,6 +40,13 @@ The rules registered here (see each ``register`` call):
     (prefix caching), so external mutation of its internals corrupts
     refcounts silently; everyone else uses the public
     ``alloc``/``share``/``release`` surface.
+``cache-length-mutation``
+    ``.block_table`` / ``._granted`` access outside the cache layer
+    (``serving/kv_cache.py`` + ``serving/cache_backend.py``) — rollback
+    (speculative decoding, preemption) must retreat the per-slot grant
+    high-water, the block-table rows and the page refcounts *together*;
+    a direct poke desyncs them.  Engines use
+    ``advance``/``rollback``/``release``/``tables``.
 """
 from __future__ import annotations
 
@@ -303,6 +310,23 @@ _regex_rule(
     "pages are refcounted (prefix sharing), so external mutation corrupts "
     "the free list silently; use alloc/share/release/check_invariants",
     exclude=("serving/kv_cache.py",),
+)
+
+
+# ---------------------------------------------------------------------------
+# cache-length-mutation — KV grant/table bookkeeping stays in kv_cache.py
+# ---------------------------------------------------------------------------
+
+_regex_rule(
+    "cache-length-mutation",
+    "KV cache length/table bookkeeping (.block_table/._granted) stays "
+    "inside serving/kv_cache.py + serving/cache_backend.py",
+    [r"\.\s*block_table\b", r"\.\s*_granted\b"],
+    "cache grant state poked outside the cache layer — rollback "
+    "(speculative decoding, preemption) retreats the per-slot token "
+    "high-water and block-table rows together; a direct poke desyncs them "
+    "from the page refcounts.  Use advance/rollback/release/tables",
+    exclude=("serving/kv_cache.py", "serving/cache_backend.py"),
 )
 
 

@@ -34,6 +34,23 @@ _MODULES = {
 ASSIGNED: List[str] = list(_MODULES)[:10]
 PAPER_MODELS: List[str] = list(_MODULES)[10:]
 
+# target -> draft pairings for speculative decoding: a small same-tokenizer
+# model drafts tokens the target verifies in one multi-position step.  Both
+# gpt2 sizes share the 50257 BPE vocabulary, so draft proposals are valid
+# target inputs verbatim.
+DRAFT_PAIRS: Dict[str, str] = {
+    "gpt2-medium": "gpt2-small",
+}
+
+
+def draft_for(name: str) -> str:
+    """Registry-paired draft model for ``name`` (KeyError when unpaired)."""
+    if name not in DRAFT_PAIRS:
+        raise KeyError(
+            f"no draft model paired with {name!r}; known pairs: "
+            f"{sorted(DRAFT_PAIRS)}")
+    return DRAFT_PAIRS[name]
+
 
 def get_config(name: str) -> ModelConfig:
     if name not in _MODULES:

@@ -44,6 +44,19 @@ def main() -> None:
                          "prefill, every cache mode) through the Pallas "
                          "kernels: compiled on TPU, interpret-mode (slow, "
                          "correctness-equivalent) elsewhere")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per round "
+                         "and verify all K+1 positions in one jitted step "
+                         "(K snaps onto serving.steps.SPEC_K_LADDER); "
+                         "greedy outputs are identical to plain decode")
+    ap.add_argument("--draft", default="ngram",
+                    help="drafter for --speculative: 'ngram' (self-draft "
+                         "from each row's history), 'auto' (the paired "
+                         "model from repro.configs.DRAFT_PAIRS, randomly "
+                         "initialized unless --draft-checkpoint), or a "
+                         "config name")
+    ap.add_argument("--draft-checkpoint", default="",
+                    help="checkpoint for the paired draft model")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -59,12 +72,26 @@ def main() -> None:
     if args.checkpoint:
         params = checkpoint.restore(args.checkpoint, params)
 
+    draft = None
+    if args.speculative and args.draft != "ngram":
+        from repro.configs import draft_for
+
+        dname = draft_for(args.arch) if args.draft == "auto" else args.draft
+        dcfg = get_config(dname)
+        if args.reduced:
+            dcfg = dcfg.reduced()
+        dparams = mf.init_params(jax.random.PRNGKey(args.seed + 1), dcfg)
+        if args.draft_checkpoint:
+            dparams = checkpoint.restore(args.draft_checkpoint, dparams)
+        draft = (dcfg, dparams)
+
     engine = ServingEngine(
         cfg, params, max_len=args.max_len,
         astra_mode="sim" if cfg.astra.enabled else "off",
         cache_mode=args.cache_mode, page_size=args.page_size,
         decode_chunk=args.decode_chunk or None,
-        use_pallas=args.use_pallas)
+        use_pallas=args.use_pallas,
+        speculative=args.speculative, draft=draft)
 
     rng = np.random.RandomState(args.seed)
     prompts = [
@@ -80,6 +107,10 @@ def main() -> None:
     print(f"arch={cfg.name} requests={args.requests} "
           f"new_tokens={total_new} wall={dt:.2f}s "
           f"({total_new/dt:.1f} tok/s)")
+    if args.speculative:
+        rounds = max(engine.spec_rounds, 1)
+        print(f"speculative: k={engine.spec_k} rounds={engine.spec_rounds} "
+              f"tokens/round={engine.spec_tokens / rounds:.2f}")
     for i, toks in enumerate(result.tokens[:4]):
         print(f"  req{i} len={len(prompts[i])} -> {toks[:12]}...")
     comm = engine.prefill_comm_bits_per_device(

@@ -226,6 +226,36 @@ def attention_decode(
         vq_params=vq_params, block_tables=block_tables)
 
 
+def attention_verify(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (B, W, D) current token + k drafted continuations
+    cache: Dict[str, jax.Array],
+    starts: jax.Array,  # (B,) per-row position of the first verify token
+    *,
+    ctx: StepCtx,
+    kind: str,
+    vq_params: Optional[Dict] = None,
+    block_tables=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Speculative verify step: score W = k+1 positions in one forward.
+
+    Token j of row b sits at global position ``starts[b] + j`` — unlike the
+    chunked-prefill path the offset is per-row, so RoPE and the causal mask
+    ride (B, W) position grids.  The backend writes all W keys/values and
+    attends each query over history + the drafted prefix before it, exactly
+    as W sequential decode steps would.  Returns (y (B, W, D), new_cache);
+    rejected positions leave stale K/V behind — callers roll the cache back
+    (in-jit for rings via ``backend.verify_rollback``, host-side lengths for
+    the rest)."""
+    cfg = ctx.cfg
+    w = x.shape[1]
+    positions = starts[:, None] + jnp.arange(w)[None, :]
+    q, k_new, v_new = qkv(params, x, cfg, positions, kind_theta(kind, cfg))
+    return ctx.backend.verify_attend(
+        params, q, k_new, v_new, cache, starts, ctx=ctx, kind=kind,
+        vq_params=vq_params, block_tables=block_tables)
+
+
 def _masked_decode_attn(params, q, k_all, v_all, valid, cap) -> jax.Array:
     """Shared single-token decode epilogue: masked partial-softmax stats,
     normalize, project through wo.  Every cache layout funnels through this
@@ -317,17 +347,20 @@ def _masked_chunk_attn(params, q, k_all, v_all, q_pos, k_pos, window,
                        cap) -> jax.Array:
     """Multi-query analogue of ``_masked_decode_attn`` for a prefill chunk.
 
-    q: (B, W, H, hd); k_all/v_all: (B, S, Hkv, hd); q_pos (W,) global query
-    positions; k_pos (S,) or per-row (B, S) global key positions, negative
-    = invalid slot.  Masking is causal (+ sliding window); rows/positions
-    with no valid key (padding queries) normalize against an epsilon
-    instead of NaN-ing, exactly like the decode epilogue."""
+    q: (B, W, H, hd); k_all/v_all: (B, S, Hkv, hd); q_pos (W,) or per-row
+    (B, W) global query positions; k_pos (S,) or per-row (B, S) global key
+    positions, negative = invalid slot.  Masking is causal (+ sliding
+    window); rows/positions with no valid key (padding queries) normalize
+    against an epsilon instead of NaN-ing, exactly like the decode
+    epilogue."""
     b, wq = q.shape[:2]
     kp = k_pos if k_pos.ndim == 2 else jnp.broadcast_to(
         k_pos[None], (b, k_pos.shape[-1]))
-    valid = (kp[:, None, :] >= 0) & (kp[:, None, :] <= q_pos[None, :, None])
+    qp = q_pos if q_pos.ndim == 2 else jnp.broadcast_to(
+        q_pos[None], (b, q_pos.shape[-1]))
+    valid = (kp[:, None, :] >= 0) & (kp[:, None, :] <= qp[:, :, None])
     if window:
-        valid &= kp[:, None, :] > q_pos[None, :, None] - window
+        valid &= kp[:, None, :] > qp[:, :, None] - window
     scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
     s = _softcap(_gqa_scores(q, k_all, scale), cap)  # (B, H, W, S)
     s = jnp.where(valid[:, None], s, NEG_INF)

@@ -135,14 +135,26 @@ def block_forward(
     block_tables=None,
     chunk_start: Optional[jax.Array] = None,
     history_len: int = 0,
+    verify_starts: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array], Dict, Optional[Dict]]:
     """``chunk_start`` (traced scalar) switches prefill into chunked mode:
     ``x`` is one fixed-width chunk at global offset ``chunk_start``,
     attention goes through ``ctx.backend.chunk_attend`` (causal over the
     cache written so far, viewing only the first ``history_len`` positions
     when set — a static bound from ``serving.steps.view_bucket``), and
-    recurrent layers carry their boundary state across chunks explicitly."""
+    recurrent layers carry their boundary state across chunks explicitly.
+
+    ``verify_starts`` ((B,) per-row offsets) switches a decode-mode step
+    into speculative *verify*: ``x`` is W = k+1 positions per row scored in
+    one pass through ``ctx.backend.verify_attend``.  It takes precedence
+    over the plain decode dispatch and is attention-only — recurrent and
+    SSM layers advance irreversible state per token and cannot re-score a
+    drafted block, so they raise."""
     cfg = ctx.cfg
+    if verify_starts is not None and kind not in ATTN_KINDS:
+        raise ValueError(
+            f"speculative verify needs attention-only stacks; layer kind "
+            f"{kind!r} carries irreversible recurrent state")
     aux = {"commit": jnp.zeros((), jnp.float32),
            "moe_aux": jnp.zeros((), jnp.float32)}
     new_navq: Dict = {}
@@ -154,7 +166,11 @@ def block_forward(
         x = constrain_seq_sharded(x, ctx.mesh)
     h = apply_norm(p["norm1"], x, cfg.norm)
     if kind in ATTN_KINDS:
-        if ctx.mode == "decode":
+        if verify_starts is not None:
+            y, new_cache = attn.attention_verify(
+                p["attn"], h, cache, verify_starts, ctx=ctx, kind=kind,
+                vq_params=p.get("vq"), block_tables=block_tables)
+        elif ctx.mode == "decode":
             y, new_cache = attn.attention_decode(
                 p["attn"], h, cache, lengths, ctx=ctx, kind=kind,
                 vq_params=p.get("vq"), block_tables=block_tables)
@@ -327,6 +343,7 @@ def run_stages(
     block_tables=None,
     chunk_start: Optional[jax.Array] = None,
     history_len: int = 0,
+    verify_starts: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array], List[Dict], Optional[List[Dict]]]:
     commit = jnp.zeros((), jnp.float32)
     moe_aux = jnp.zeros((), jnp.float32)
@@ -350,7 +367,8 @@ def run_stages(
                     p_l[f"sub{j}"], xx, ctx=ctx, kind=kind, causal=causal,
                     rng=jax.random.fold_in(rng_l, j), navq_stats=nst,
                     cache=cst, lengths=lengths, block_tables=block_tables,
-                    chunk_start=chunk_start, history_len=history_len)
+                    chunk_start=chunk_start, history_len=history_len,
+                    verify_starts=verify_starts)
                 cm = cm + aux["commit"]
                 ma = ma + aux["moe_aux"]
                 if n_new:
@@ -547,6 +565,105 @@ def lm_decode_step(
     logits = _head_matmul(x, head, cfg, ctx)
     logits = softcap(logits, cfg.final_logit_softcap)
     return logits, new_caches
+
+
+def _verify_embed(params: Dict, tokens: jax.Array, starts: jax.Array,
+                  ctx: StepCtx) -> jax.Array:
+    """Verify-step input embeddings (B, W, D) at per-row positions
+    ``starts[b] + j`` — the (B, W) generalization of ``_decode_embed``,
+    with the same one-hot contraction under a mesh so the FSDP-sharded
+    tables stay local."""
+    cfg = ctx.cfg
+    w = tokens.shape[1]
+    pos = jnp.clip(starts[:, None] + jnp.arange(w)[None, :], 0,
+                   cfg.max_seq_len - 1)
+    if ctx.mesh.mesh is None:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if "pos_embed" in params:
+            x = x + jnp.take(params["pos_embed"], pos, axis=0)
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh.mesh
+    emb = params["embed"]
+    oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=emb.dtype)
+    x = oh @ emb
+    if "pos_embed" in params:
+        pe = params["pos_embed"]
+        oh_p = jax.nn.one_hot(pos, pe.shape[0], dtype=pe.dtype)
+        x = x + oh_p @ pe
+    bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+    hop = _dim_axes(mesh, cfg.d_model, ("model",))
+    x = _constrain(x, mesh, P(bspec, None, hop or None))
+    return _constrain(x, mesh, P(bspec, None, None))
+
+
+def lm_verify_chunk(
+    params: Dict,
+    tokens: jax.Array,  # (B, W) current token + k drafted continuations
+    caches: List[Dict],
+    lengths: jax.Array,  # (B,) per-row position of tokens[:, 0]
+    *,
+    ctx: StepCtx,
+    block_tables=None,
+) -> Tuple[jax.Array, List[Dict]]:
+    """Speculative verify forward: score W = k+1 positions per row in one
+    decode-shaped step.  Returns (logits (B, W, V), new_caches) — logits[b, j]
+    is the target's next-token distribution after consuming tokens[b, :j+1],
+    so comparing argmax/samples of position j against the drafted token j+1
+    decides acceptance.  All W keys/values land in the caches; the caller
+    rolls back rejected tails via :func:`lm_rollback_caches`.  Attention-only
+    stacks — recurrent/SSM layers raise (see ``block_forward``)."""
+    cfg = ctx.cfg
+    x = _verify_embed(params, tokens, lengths, ctx).astype(_adtype(cfg, ctx))
+    x, _, _, new_caches = run_stages(
+        params["stages"], x, ctx=ctx, cfg=cfg, causal=True, rng=None,
+        navq_state=None, caches=caches, lengths=lengths,
+        block_tables=block_tables, verify_starts=lengths)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = _head_matmul(x, head, cfg, ctx)
+    return softcap(logits, cfg.final_logit_softcap), new_caches
+
+
+def lm_rollback_caches(
+    new_caches: List[Dict],
+    old_caches: List[Dict],
+    starts: jax.Array,  # (B,) verify-step start positions
+    accepted: jax.Array,  # (B,) how many of the W written tokens were kept
+    num_tokens: int,  # static: verify width W
+    *,
+    ctx: StepCtx,
+    block_tables=None,
+) -> List[Dict]:
+    """Restore windowed-ring cache slots clobbered by rejected verify writes
+    (traced — runs inside the verify jit once acceptance is known).
+
+    Global layers self-heal — stale keys past the retreated length are
+    masked invalid until overwritten in order — so their trees pass through
+    untouched.  SWA rings lose history on wrap and are restored from the
+    pre-verify snapshot via ``ctx.backend.verify_rollback``, vmapped over
+    the stacked layer-repeat dim the engines carry (``starts``/``accepted``
+    and the block tables are shared across repeats)."""
+    cfg = ctx.cfg
+    out = []
+    for si, (kinds, reps) in enumerate(stages(cfg)):
+        sub_out = {}
+        for j, kind in enumerate(kinds):
+            key = f"sub{j}"
+            new_l = new_caches[si][key]
+            if not attn.kind_window(kind, cfg):
+                sub_out[key] = new_l
+                continue
+
+            def roll(c, o, kind=kind):
+                return ctx.backend.verify_rollback(
+                    c, o, starts, accepted, num_tokens, ctx=ctx, kind=kind,
+                    block_tables=block_tables)
+
+            sub_out[key] = jax.vmap(roll)(new_l, old_caches[si][key])
+        out.append(sub_out)
+    return out
 
 
 def _adtype(cfg, ctx: StepCtx):

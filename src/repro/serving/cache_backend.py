@@ -154,6 +154,26 @@ def _chunk_slab_write(buf: jax.Array, vals: jax.Array,
     return buf.at[:, pos].set(vals.astype(buf.dtype), mode="drop")
 
 
+def _verify_positions(starts: jax.Array, w: int) -> jax.Array:
+    """(B, W) global positions of one verify step's tokens."""
+    return starts[:, None] + jnp.arange(w)[None, :]
+
+
+def _slab_verify_write(bk: jax.Array, bv: jax.Array, k_new: jax.Array,
+                       v_new: jax.Array, starts: jax.Array):
+    """Per-row scatter of W verify tokens into (B, S) slabs at positions
+    ``starts[b] + j``.  Rows near their budget end may overhang the slab
+    (those positions can never be accepted), so out-of-range writes are
+    dropped — a clamping ``dynamic_update_slice`` would shift the window
+    back over live history.  Returns (k_slab, v_slab, positions (B, W))."""
+    b, w = k_new.shape[:2]
+    pos = _verify_positions(starts, w)
+    rows = jnp.arange(b)[:, None]
+    return (bk.at[rows, pos].set(k_new.astype(bk.dtype), mode="drop"),
+            bv.at[rows, pos].set(v_new.astype(bv.dtype), mode="drop"),
+            pos)
+
+
 def _fp_scratch(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
     """The fp prefill-view slabs a vq-coded layer carries across chunks."""
     hkv, hd = cfg.num_kv_heads, cfg.head_dim
@@ -247,6 +267,18 @@ def _ring_chunk_attend(params, q, k_new, v_new, cache, chunk_start, lengths,
                                     chunk_start + jnp.arange(w), k_pos,
                                     window, cap)
     return y, _ring_chunk_write(cache, k_new, v_new, chunk_start, lengths)
+
+
+def _unrolled_pallas_verify(params, q, k_all, v_all, starts, window, cap):
+    """Pallas fork of the vectorized verify paths: the chunk kernel
+    prefetches a *scalar* chunk start (per-row verify offsets are not
+    expressible), so after the W-token write the W queries flash one at a
+    time through the decode kernel — its length-derived validity mask hides
+    the already-written future positions exactly like the dense mask."""
+    ys = [attn._pallas_decode_attn(params, q[:, j:j + 1], k_all, v_all,
+                                   starts + j, window, cap)
+          for j in range(q.shape[1])]
+    return jnp.concatenate(ys, axis=1)
 
 
 def _coded_kernel_ok(cfg) -> bool:
@@ -367,6 +399,57 @@ class CacheBackend:
         raise NotImplementedError(
             f"backend {self.name!r} does not support chunked prefill")
 
+    def verify_attend(self, params, q, k_new, v_new, cache, starts, *, ctx,
+                      kind: str, vq_params=None,
+                      block_tables=None) -> Tuple[jax.Array, Dict]:
+        """Speculative verify: W = k+1 tokens per row at per-row positions
+        ``starts[b] .. starts[b] + W - 1`` in one call.  Returns
+        (y (B, W, ...), new_cache) with all W keys/values written — exactly
+        the cache W sequential ``decode_attend`` steps would leave behind.
+
+        The base implementation *is* those W sequential steps, unrolled
+        inside the caller's jit (W is static): bitwise parity with plain
+        decode by construction, valid for every layout, Pallas fork and the
+        sharded path alike.  Layouts where a single multi-query attention
+        is expressible override this with a vectorized path (one chunk-
+        shaped attention instead of W score rounds)."""
+        w = q.shape[1]
+        ys = []
+        for j in range(w):
+            y, cache = self.decode_attend(
+                params, q[:, j:j + 1], k_new[:, j:j + 1], v_new[:, j:j + 1],
+                cache, starts + j, ctx=ctx, kind=kind, vq_params=vq_params,
+                block_tables=block_tables)
+            ys.append(y)
+        return jnp.concatenate(ys, axis=1), cache
+
+    def verify_rollback(self, cache, old_cache, starts, accepted,
+                        num_tokens, *, ctx, kind: str,
+                        block_tables=None) -> Dict:
+        """Undo a verify step's rejected writes in one layer's cache
+        (traced — runs inside the verify jit, after acceptance is known).
+
+        ``num_tokens`` (static) is the verify width W; ``accepted`` (B,)
+        is how many of the W written positions the row actually kept.
+        Global layers self-heal — a stale key at position >= the new length
+        is masked invalid until a later step overwrites it in order — so
+        they return ``cache`` untouched.  SWA rings cannot: writing position
+        ``p`` clobbers slot ``p % S`` whose *old* position ``p - S`` is
+        still inside the window once the length retreats, so every slot
+        whose post-write position lands at/after ``starts + accepted`` is
+        restored from the pre-verify cache.  Requires W <= S (the engines
+        gate speculative width to the smallest ring)."""
+        window = attn.kind_window(kind, ctx.cfg)
+        if not window:
+            return cache
+        s = cache["k"].shape[1]
+        # post-write slot -> position map; slots at/after the accept point
+        # were written by rejected (or not-yet-reached) positions
+        p = attn.ring_positions(s, starts + num_tokens - 1)  # (B, S)
+        m = (p >= (starts + accepted)[:, None])[..., None, None]
+        return {"k": jnp.where(m, old_cache["k"], cache["k"]),
+                "v": jnp.where(m, old_cache["v"], cache["v"])}
+
     @property
     def chunkable(self) -> bool:
         """Whether the engines may drive this backend through the chunked
@@ -389,6 +472,15 @@ class CacheBackend:
     def release(self, state, slot) -> int:
         """Retire a request's cache grant; returns the pages freed."""
         return state.free(slot)
+
+    def rollback(self, state, slot, n: int) -> int:
+        """Retreat ``slot``'s granted length by ``n`` tokens (host-side
+        bookkeeping twin of ``verify_rollback``): slabs are a no-op, paged
+        layouts drop the tail page references the retreat implies — never
+        freeing a page the prefix index (or another slot) still co-owns.
+        Returns the pages freed.  The same primitive request preemption
+        needs (ROADMAP)."""
+        return state.rollback(slot, n)
 
     def donate_argnums(self, argnums: Tuple[int, ...],
                        platform: Optional[str] = None) -> Tuple[int, ...]:
@@ -462,6 +554,31 @@ class FPSlabBackend(CacheBackend):
         y = _view_chunk_attn(params, q, new["k"][:, :hv], new["v"][:, :hv],
                              chunk_start, hv, cap, ctx)
         return y, new
+
+    def verify_attend(self, params, q, k_new, v_new, cache, starts, *, ctx,
+                      kind, vq_params=None, block_tables=None):
+        """Global layers: write all W verify tokens per-row (out-of-range
+        positions dropped — a budget-exhausted row's tail can overhang the
+        slab, and the unrolled path's clamping ``_write_at`` would shift
+        those writes back over live history), then one chunk-shaped
+        attention with per-row query positions.  Windowed rings keep the
+        unrolled decode path (ring wrap is the correct overflow behaviour
+        there, and ``verify_rollback`` restores the clobbered slots)."""
+        cfg = ctx.cfg
+        cap = cfg.attn_logit_softcap
+        window = attn.kind_window(kind, cfg)
+        if window:
+            return CacheBackend.verify_attend(
+                self, params, q, k_new, v_new, cache, starts, ctx=ctx,
+                kind=kind, vq_params=vq_params, block_tables=block_tables)
+        ck, cv, pos = _slab_verify_write(cache["k"], cache["v"], k_new,
+                                         v_new, starts)
+        if ctx.use_pallas:
+            y = _unrolled_pallas_verify(params, q, ck, cv, starts, 0, cap)
+        else:
+            y = attn._masked_chunk_attn(params, q, ck, cv, pos,
+                                        jnp.arange(ck.shape[1]), 0, cap)
+        return y, {"k": ck, "v": cv}
 
 
 class VQSlabBackend(CacheBackend):
@@ -552,6 +669,39 @@ class VQSlabBackend(CacheBackend):
         y = _view_chunk_attn(params, q, new["k_fp"][:, :hv],
                              new["v_fp"][:, :hv], chunk_start, hv, cap, ctx)
         return y, new
+
+    def verify_attend(self, params, q, k_new, v_new, cache, starts, *, ctx,
+                      kind, vq_params=None, block_tables=None):
+        """Global coded layers: encode all W tokens at once (per-position
+        encoding is order-independent), scatter the codes per-row with
+        out-of-range drops, then attend over the dequantized slab — the
+        coded Pallas kernel (or the fp kernel after a jnp dequant) runs
+        once per query position, the dense path runs one chunk-shaped
+        attention.  Windowed fp rings keep the unrolled decode path."""
+        cfg = ctx.cfg
+        cap = cfg.attn_logit_softcap
+        if attn.kind_window(kind, cfg):
+            return CacheBackend.verify_attend(
+                self, params, q, k_new, v_new, cache, starts, ctx=ctx,
+                kind=kind, vq_params=vq_params, block_tables=block_tables)
+        kc, vc, _ = _encode_pair(k_new, v_new, cfg, vq_params)
+        ck, cv, pos = _slab_verify_write(cache["k_codes"], cache["v_codes"],
+                                         kc, vc, starts)
+        new_cache = {"k_codes": ck, "v_codes": cv}
+        if ctx.use_pallas and _coded_kernel_ok(cfg):
+            ys = [attn._pallas_coded_decode_attn(
+                      params, q[:, j:j + 1], ck, cv, vq_params, starts + j,
+                      cap) for j in range(q.shape[1])]
+            return jnp.concatenate(ys, axis=1), new_cache
+        k_all = _decode_codes(ck, cfg, vq_params, "k")
+        v_all = _decode_codes(cv, cfg, vq_params, "v")
+        if ctx.use_pallas:
+            y = _unrolled_pallas_verify(params, q, k_all, v_all, starts, 0,
+                                        cap)
+        else:
+            y = attn._masked_chunk_attn(params, q, k_all, v_all, pos,
+                                        jnp.arange(k_all.shape[1]), 0, cap)
+        return y, new_cache
 
 
 class PagedBackend(CacheBackend):
@@ -737,6 +887,90 @@ class PagedBackend(CacheBackend):
         y = _view_chunk_attn(params, q, k_all, v_all, chunk_start, sv, cap,
                              ctx)
         return y, {"k_pages": kp, "v_pages": vp}
+
+    def verify_attend(self, params, q, k_new, v_new, cache, starts, *, ctx,
+                      kind, vq_params=None, block_tables=None):
+        """Global tables: token-granular per-row scatter of all W verify
+        positions through the block table (out-of-span positions — a
+        budget-exhausted row's overhang — route to the scratch page instead
+        of mod-wrapping over the row's own early pages), then attention
+        over the table-gathered contiguous view.  Windowed page rings keep
+        the unrolled decode path (wrap + ``verify_rollback``)."""
+        cfg = ctx.cfg
+        cap = cfg.attn_logit_softcap
+        if attn.kind_window(kind, cfg):
+            return CacheBackend.verify_attend(
+                self, params, q, k_new, v_new, cache, starts, ctx=ctx,
+                kind=kind, vq_params=vq_params, block_tables=block_tables)
+        table = _table_for(block_tables, kind, cfg)
+        vq_pool = "k_code_pages" in cache
+        kp = cache["k_code_pages" if vq_pool else "k_pages"]
+        vp = cache["v_code_pages" if vq_pool else "v_pages"]
+        ps = kp.shape[1]
+        b, w = k_new.shape[:2]
+        s = table.shape[1] * ps  # == max_len for global tables
+        pos = _verify_positions(starts, w)
+        page_idx = jnp.clip(pos // ps, 0, table.shape[1] - 1)
+        dest = jnp.where(pos < s,
+                         jnp.take_along_axis(table, page_idx, axis=1), 0)
+        offs = jnp.mod(pos, ps)
+        if vq_pool:
+            kc, vc, spec = _encode_pair(k_new, v_new, cfg, vq_params)
+            kp = kp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                kc.reshape((b * w,) + kc.shape[2:]).astype(kp.dtype))
+            vp = vp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                vc.reshape((b * w,) + vc.shape[2:]).astype(vp.dtype))
+            new_cache = {"k_code_pages": kp, "v_code_pages": vp}
+            codes_k = kp[table].reshape(b, s, spec.groups)
+            codes_v = vp[table].reshape(b, s, spec.groups)
+            if ctx.use_pallas and _coded_kernel_ok(cfg):
+                ys = [attn._pallas_coded_decode_attn(
+                          params, q[:, j:j + 1], codes_k, codes_v,
+                          vq_params, starts + j, cap) for j in range(w)]
+                return jnp.concatenate(ys, axis=1), new_cache
+            k_all = _decode_codes(codes_k, cfg, vq_params, "k")
+            v_all = _decode_codes(codes_v, cfg, vq_params, "v")
+        else:
+            kp = kp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                k_new.reshape((b * w,) + k_new.shape[2:]).astype(kp.dtype))
+            vp = vp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                v_new.reshape((b * w,) + v_new.shape[2:]).astype(vp.dtype))
+            new_cache = {"k_pages": kp, "v_pages": vp}
+            k_all = kp[table].reshape((b, s) + kp.shape[2:])
+            v_all = vp[table].reshape((b, s) + vp.shape[2:])
+        if ctx.use_pallas:
+            y = _unrolled_pallas_verify(params, q, k_all, v_all, starts, 0,
+                                        cap)
+        else:
+            y = attn._masked_chunk_attn(params, q, k_all, v_all, pos,
+                                        jnp.arange(s), 0, cap)
+        return y, new_cache
+
+    def verify_rollback(self, cache, old_cache, starts, accepted,
+                        num_tokens, *, ctx, kind, block_tables=None):
+        """Windowed page rings: gather the pre-verify ring contents through
+        the block table and scatter them back over every slot whose
+        post-write position lands at/after the accept point (non-restored
+        slots route to the scratch page).  Global tables self-heal like the
+        slabs and pass through untouched."""
+        if not attn.kind_window(kind, ctx.cfg):
+            return cache
+        table = _table_for(block_tables, kind, ctx.cfg)
+        kp, vp = cache["k_pages"], cache["v_pages"]
+        ps = kp.shape[1]
+        b = starts.shape[0]
+        s = table.shape[1] * ps
+        p = attn.ring_positions(s, starts + num_tokens - 1)  # (B, s)
+        mask = p >= (starts + accepted)[:, None]
+        old_k = old_cache["k_pages"][table].reshape((b, s) + kp.shape[2:])
+        old_v = old_cache["v_pages"][table].reshape((b, s) + vp.shape[2:])
+        dest = jnp.where(mask, table[:, np.arange(s) // ps], 0)
+        offs = jnp.broadcast_to(np.arange(s) % ps, (b, s))
+        kp = kp.at[dest.reshape(-1), offs.reshape(-1)].set(
+            old_k.reshape((b * s,) + old_k.shape[2:]).astype(kp.dtype))
+        vp = vp.at[dest.reshape(-1), offs.reshape(-1)].set(
+            old_v.reshape((b * s,) + old_v.shape[2:]).astype(vp.dtype))
+        return {"k_pages": kp, "v_pages": vp}
 
     def make_state(self, cfg, *, slots, max_len, ctx, dtype=None,
                    page_size=16, num_pages=None):

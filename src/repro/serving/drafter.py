@@ -1,0 +1,70 @@
+"""Host-side drafters for speculative decoding.
+
+The verify step (``serving.steps.verify_chunk``) is lossless for *any*
+proposals — a bad draft costs wasted compute, never wrong tokens — so
+drafters are free to be cheap heuristics.  Two modes ship:
+
+* **n-gram self-drafting** (this module): propose the continuation that
+  followed the most recent earlier occurrence of the sequence's current
+  tail.  Free (no second model, no extra device work) and effective on
+  repetitive text — retrieval prompts, code, structured output — the
+  "prompt lookup decoding" trick.
+* **paired draft model** (``ServingEngine(draft=...)``): a small
+  same-tokenizer model from ``repro.configs.DRAFT_PAIRS`` runs k greedy
+  decode steps per round on its own fp-slab cache; the engines own that
+  wiring since it reuses their prefill/decode machinery.
+
+Drafters run on the host between device steps: histories are plain python
+lists the engines already keep per request, and proposals return as small
+numpy arrays fed to the next jitted verify call.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+class NGramDrafter:
+    """Propose ``k`` tokens by n-gram lookup over the row's own history.
+
+    Tries the longest tail first (``max_ngram`` down to 1): if the last n
+    tokens occurred earlier in ``prompt + output``, propose the tokens that
+    followed that latest earlier occurrence; pad a short continuation (and
+    the no-match fallback) by repeating the last known token.  O(len *
+    max_ngram) numpy per row per round — noise next to a forward pass.
+    """
+
+    def __init__(self, k: int, *, max_ngram: int = 3):
+        if k <= 0:
+            raise ValueError(f"draft length must be positive, got {k}")
+        if max_ngram <= 0:
+            raise ValueError(f"max_ngram must be positive, got {max_ngram}")
+        self.k = int(k)
+        self.max_ngram = int(max_ngram)
+
+    def propose(self, history: Sequence[int]) -> np.ndarray:
+        """(k,) int32 proposals for one row; ``history`` is the full token
+        sequence so far (prompt + emitted), ending with the token the next
+        step will consume."""
+        h = np.asarray(list(history), dtype=np.int32)
+        k = self.k
+        if h.size == 0:
+            return np.zeros((k,), np.int32)
+        for n in range(min(self.max_ngram, h.size - 1), 0, -1):
+            tail = h[-n:]
+            # windows over h[:-1]: every match leaves >= 1 continuation token
+            win = np.lib.stride_tricks.sliding_window_view(h[:-1], n)
+            hits = np.nonzero((win == tail[None, :]).all(axis=1))[0]
+            if hits.size:
+                end = int(hits[-1]) + n  # first token after the match
+                cont = h[end:end + k]
+                out = np.empty((k,), np.int32)
+                out[:cont.size] = cont
+                out[cont.size:] = int(cont[-1])
+                return out
+        return np.full((k,), int(h[-1]), np.int32)
+
+    def propose_batch(self, histories: List[Sequence[int]]) -> np.ndarray:
+        """(B, k) int32 proposals, one row per history."""
+        return np.stack([self.propose(h) for h in histories], axis=0)

@@ -65,7 +65,22 @@ class ServingEngine:
         prefill_mode: str = "chunked",
         prefill_chunk: Optional[int] = None,
         use_pallas: bool = False,
+        speculative: int = 0,
+        draft=None,
     ):
+        """``speculative=k`` (> 0) turns on draft/verify decoding: each round
+        drafts k tokens and scores all k+1 positions in one jitted verify
+        step (``serving.steps.verify_chunk``), committing the longest
+        matching prefix plus the bonus token — greedy emissions stay bitwise
+        identical to the sequential decode loop.  k snaps onto
+        ``steps.SPEC_K_LADDER`` so the verify step compiles O(ladder).
+
+        ``draft`` picks the proposer: ``None``/``"ngram"`` self-drafts from
+        each row's own history (``serving.drafter.NGramDrafter``), or a
+        ``(cfg, params)`` pair runs a small same-vocabulary model (see
+        ``repro.configs.DRAFT_PAIRS``) for k greedy steps per round on its
+        own fp-slab cache — all-global attention only, so rejected drafts
+        self-heal without rollback."""
         seq_sharded = (mesh_ctx.seq_axis is not None
                        and mesh_ctx.mesh is not None)
         # resolves the layout (and rejects unknown modes / paged+sharded)
@@ -116,6 +131,49 @@ class ServingEngine:
             self.prefill_ctx, donate=donate)
         self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx,
                                                              donate=donate)
+        self.spec_k = 0
+        self.drafter = None
+        self._draft_engine = None
+        self._verify_chunk = None
+        if speculative:
+            self.spec_k = serving_steps.spec_bucket(int(speculative))
+            bound = serving_steps.max_spec_width(cfg, max_len)
+            if bound is not None and self.spec_k + 1 > bound:
+                raise ValueError(
+                    f"speculative width {self.spec_k + 1} exceeds the "
+                    f"smallest SWA ring ({bound} slots) — rollback would "
+                    f"lap the ring")
+            self._verify_chunk = serving_steps.make_verify_chunk(
+                self.decode_ctx, donate=donate)
+            if draft is None or draft == "ngram":
+                from repro.serving.drafter import NGramDrafter
+
+                self.drafter = NGramDrafter(self.spec_k)
+            else:
+                dcfg, dparams = draft
+                if dcfg.vocab_size != cfg.vocab_size:
+                    raise ValueError(
+                        f"draft vocab {dcfg.vocab_size} != target vocab "
+                        f"{cfg.vocab_size}; pair models via "
+                        f"repro.configs.DRAFT_PAIRS")
+                if serving_steps.max_spec_width(dcfg, max_len) is not None:
+                    raise ValueError(
+                        "draft model must be all-global attention (its "
+                        "rejected drafts heal by overwrite; SWA rings "
+                        "would need their own rollback)")
+                # oversized by k so drafting past the target's last
+                # position never clamp-writes over the draft's own history
+                self._draft_engine = ServingEngine(
+                    dcfg, dparams, max_len=max_len + self.spec_k,
+                    mesh_ctx=mesh_ctx, astra_mode="off", cache_mode="fp",
+                    cache_dtype=cache_dtype, decode_chunk=self.spec_k + 1,
+                    donate=donate, prefill_mode=prefill_mode,
+                    use_pallas=use_pallas)
+        # speculative telemetry (benchmarks read these): per-generate round
+        # count, rows active per round, tokens committed
+        self.spec_rounds = 0
+        self.spec_active_rows = 0
+        self.spec_tokens = 0
         # device->host transfer counter (one increment per blocking fetch)
         self.host_syncs = 0
 
@@ -230,6 +288,59 @@ class ServingEngine:
         chunk = self.decode_chunk
         remaining = jnp.full((b,), budget, jnp.int32)
         emitted = 0
+        if self.spec_k:
+            k = self.spec_k
+            d_caches = d_bt = d_lengths = None
+            if self._draft_engine is not None:
+                _, d_caches, d_bt = self._draft_engine._run_prefill(
+                    toks, lens, max_new_tokens + k)
+                d_lengths = jnp.asarray(lens)
+            # k+1 draft steps, not k: a full accept advances the target to
+            # start + k + 1, and the draft must have written KV for every
+            # position below its next start — the k-th draft step covers
+            # the bonus-token position (its proposal is discarded).
+            d_rem = jnp.full((b,), k + 1, jnp.int32)
+            d_eos = jnp.full((b,), -1, jnp.int32)
+            d_done = jnp.zeros((b,), bool)
+            # rows advance unevenly (1..k+1 per round), so an emitted-count
+            # bound would cut slow rows off early; every active row commits
+            # at least one token per round, so `done` alone terminates.
+            while not done_h.all():
+                rng, sub = jax.random.split(rng)
+                if self._draft_engine is not None:
+                    rng, dsub = jax.random.split(rng)
+                    de = self._draft_engine
+                    d_toks, _, _, d_caches, _, _, _ = de._decode_chunk(
+                        de.params, cur, d_caches, d_lengths, d_rem, d_eos,
+                        d_done, dsub, d_bt, num_steps=k + 1,
+                        temperature=0.0, top_k=0)
+                    draft_toks = d_toks[:, :k]
+                else:
+                    draft_toks = jnp.asarray(self.drafter.propose_batch(
+                        [list(prompts[i]) + out[i] for i in range(b)]))
+                toks_d, valid_d, cur, caches, lengths, remaining, done = \
+                    self._verify_chunk(self.params, cur, draft_toks, caches,
+                                       lengths, remaining, eos_arr, done,
+                                       sub, block_tables, num_drafted=k,
+                                       temperature=temperature, top_k=top_k)
+                if self._draft_engine is not None:
+                    # drafted past the accept point is garbage in the draft
+                    # cache too — all-global, so resetting its lengths to
+                    # the target's retreats and later writes heal in order
+                    d_lengths = lengths
+                toks_h, valid_h, done_h = jax.device_get(
+                    (toks_d, valid_d, done))
+                self.host_syncs += 1
+                for i in range(b):
+                    for j in range(k + 1):
+                        if valid_h[i, j]:
+                            out[i].append(int(toks_h[i, j]))
+                self.spec_rounds += 1
+                self.spec_active_rows += int(valid_h[:, 0].sum())
+                self.spec_tokens += int(valid_h.sum())
+            self.host_syncs += 1  # prefill_logits fetch above
+            return GenerationResult(tokens=out,
+                                    prefill_logits=np.asarray(prefill_logits))
         while emitted < budget and not done_h.all():
             rng, sub = jax.random.split(rng)
             toks_d, valid_d, cur, caches, lengths, remaining, done = \

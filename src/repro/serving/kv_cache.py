@@ -452,6 +452,31 @@ class PageAllocator:
     # the refcount-era verb; ``free`` kept as the historical name
     release = free
 
+    def release_pages(self, owner, pages: Sequence[int]) -> List[int]:
+        """Partial release (rollback): drop one reference for each of
+        ``pages`` from ``owner``'s grant.  A page co-owned by someone else
+        (a prefix-index node, another slot) only loses this owner's
+        reference; a page whose *last* reference goes returns to the free
+        list.  Returns the pages actually freed.  Raises if ``owner`` does
+        not hold one of the pages — rolling back pages you never owned is
+        a caller bug, not pressure."""
+        held = self._owned.get(owner)
+        freed: List[int] = []
+        for p in pages:
+            p = int(p)
+            if held is None or p not in held:
+                raise ValueError(
+                    f"owner {owner!r} does not hold page {p}")
+            held.remove(p)
+            self._refs[p] -= 1
+            if not self._refs[p]:
+                del self._refs[p]
+                self._free.append(p)
+                freed.append(p)
+        if held is not None and not held:
+            self._owned.pop(owner, None)
+        return freed
+
     def check_invariants(self) -> None:
         counts: Dict[int, int] = {}
         for owner, pages in self._owned.items():
@@ -731,6 +756,9 @@ class PagedKVCache:
         self.num_pages = self.groups[self.dominant].num_pages
         # cross-request prefix index; None until enable_prefix_cache()
         self.prefix: Optional[PrefixIndex] = None
+        # per-slot granted token high-water (what ``advance`` covered);
+        # ``rollback`` retreats it and frees the tail pages it implies
+        self._granted: Dict[Any, int] = {}
 
     # -- host-side bookkeeping ----------------------------------------------
     @property
@@ -777,10 +805,49 @@ class PagedKVCache:
             pages = g.allocator.alloc(slot, need - have)
             assert pages is not None  # pre-checked above
             g.block_table[slot, have:need] = pages
+        self._granted[slot] = max(self._granted.get(slot, 0),
+                                  int(num_tokens))
         return True
 
     # historical name (PR 2 API); ``advance`` is the CacheBackend verb
     allocate = advance
+
+    def granted(self, slot) -> int:
+        """Token high-water ``advance`` has covered for ``slot``."""
+        return self._granted.get(slot, 0)
+
+    def rollback(self, slot, n: int) -> int:
+        """Retreat ``slot``'s token grant by ``n`` tokens and return the
+        tail pages that implies (speculative-decode rejection, preemption).
+
+        Full-span groups (no ring wrap: span == max_len/page_size) free the
+        pages past the new grant and point their table entries back at
+        scratch; true window rings keep every page — each ring page still
+        holds live in-window positions regardless of where the length
+        retreats to.  A tail page shared from the prefix index only drops
+        this slot's reference (``PageAllocator.release_pages``) — a
+        co-owned page never returns to the free list here.  Returns the
+        number of pages actually freed."""
+        n = int(n)
+        if n < 0:
+            raise ValueError("rollback n must be >= 0")
+        if n == 0:
+            return 0
+        new_tokens = max(self._granted.get(slot, 0) - n, 0)
+        self._granted[slot] = new_tokens
+        freed = 0
+        for name, g in self.groups.items():
+            if g.span < self.max_pages:
+                continue  # ring: every page may hold live window positions
+            keep = self.group_pages_for(name, new_tokens) if new_tokens \
+                else 0
+            held = g.allocator.owned(slot)
+            if keep >= len(held):
+                continue
+            tail = held[keep:]
+            freed += len(g.allocator.release_pages(slot, tail))
+            g.block_table[slot, keep:len(held)] = 0
+        return freed
 
     def free(self, slot) -> int:
         """Retire a request: return all its pages, point the rows at
@@ -789,11 +856,18 @@ class PagedKVCache:
         for g in self.groups.values():
             n += len(g.allocator.free(slot))
             g.block_table[slot, :] = 0
+        self._granted.pop(slot, None)
         return n
 
     @property
     def pages_in_use(self) -> int:
         return sum(g.allocator.pages_in_use for g in self.groups.values())
+
+    def check_invariants(self) -> None:
+        """Allocator bookkeeping balances in every page group (refcounts
+        match owner lists, free list disjoint from live pages)."""
+        for g in self.groups.values():
+            g.allocator.check_invariants()
 
     # -- cross-request prefix caching ---------------------------------------
     @property
@@ -981,6 +1055,14 @@ class SlabCache:
         return int(num_tokens) <= self.max_len
 
     def free(self, slot) -> int:
+        return 0
+
+    def rollback(self, slot, n: int) -> int:
+        """Slab rows always span ``max_len``: a length retreat frees
+        nothing (device-side ring restoration is ``verify_rollback``'s
+        job).  Kept for the ``CacheBackend.rollback`` contract."""
+        if int(n) < 0:
+            raise ValueError("rollback n must be >= 0")
         return 0
 
     def tables(self) -> None:

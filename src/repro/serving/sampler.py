@@ -15,3 +15,27 @@ def sample_tokens(rng: jax.Array, logits: jax.Array, *, temperature: float = 0.0
         kth = jnp.sort(l, axis=-1)[:, -top_k][:, None]
         l = jnp.where(l < kth, -1e30, l)
     return jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)
+
+
+def sample_with_scores(rng: jax.Array, logits: jax.Array, *,
+                       temperature: float = 0.0, top_k: int = 0):
+    """Like :func:`sample_tokens` but also returns the row scores.
+
+    ``logits: (B, V) -> (tokens (B,) int32, logprobs (B, V) float32)``.
+    ``logprobs`` is the log-softmax of the *adjusted* distribution the token
+    was drawn from (temperature-scaled, top-k-masked), so the verify step of
+    speculative decoding can score every drafted position against the exact
+    distribution the target would have sampled.  The token itself is bitwise
+    identical to ``sample_tokens`` for the same ``rng``/knobs — the greedy
+    path shares the same argmax, the sampled path the same categorical draw.
+    """
+    l = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        toks = jnp.argmax(l, axis=-1).astype(jnp.int32)
+        return toks, jax.nn.log_softmax(l, axis=-1)
+    l = l / temperature
+    if top_k:
+        kth = jnp.sort(l, axis=-1)[:, -top_k][:, None]
+        l = jnp.where(l < kth, -1e30, l)
+    toks = jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)
+    return toks, jax.nn.log_softmax(l, axis=-1)

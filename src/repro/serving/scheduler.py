@@ -113,7 +113,9 @@ class ContinuousBatchingEngine:
                  prefill_mode: str = "chunked",
                  prefill_chunk: Optional[int] = None,
                  use_pallas: bool = False,
-                 prefix_cache: Optional[bool] = None):
+                 prefix_cache: Optional[bool] = None,
+                 speculative: int = 0,
+                 draft=None):
         if cfg.arch_type in ("vit",):
             raise ValueError("classification models are not generative")
         seq_sharded = (mesh_ctx.seq_axis is not None
@@ -186,6 +188,35 @@ class ContinuousBatchingEngine:
             kvc.merge_slot, donate_argnums=merge_donate)
         self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx,
                                                              donate=donate)
+        # speculative decoding: each tick drafts k tokens per slot by n-gram
+        # lookup over the slot's own prompt + output and verifies all k+1
+        # positions in one jitted step — variable tokens per slot per tick,
+        # committed through the same valid-mask loop as the decode chunk.
+        # Paired draft *models* stay with ServingEngine: a second model
+        # would need its own slot admission/prefill pipeline here.
+        self.spec_k = 0
+        self.drafter = None
+        self._verify_chunk = None
+        if speculative:
+            self.spec_k = serving_steps.spec_bucket(int(speculative))
+            bound = serving_steps.max_spec_width(cfg, max_len)
+            if bound is not None and self.spec_k + 1 > bound:
+                raise ValueError(
+                    f"speculative width {self.spec_k + 1} exceeds the "
+                    f"smallest SWA ring ({bound} slots) — rollback would "
+                    f"lap the ring")
+            if draft not in (None, "ngram"):
+                raise ValueError(
+                    "the continuous scheduler drafts by n-gram lookup only; "
+                    "paired draft models ride ServingEngine")
+            from repro.serving.drafter import NGramDrafter
+
+            self.drafter = NGramDrafter(self.spec_k)
+            self._verify_chunk = serving_steps.make_verify_chunk(
+                self.decode_ctx, donate=donate)
+        self.spec_rounds = 0
+        self.spec_active_rows = 0
+        self.spec_tokens = 0
         self._pending: Optional[_PendingPrefill] = None
         self.prefill_chunk_ticks = 0  # chunk dispatches (chunked mode)
         self._uid = 0
@@ -478,21 +509,41 @@ class ContinuousBatchingEngine:
             # the admission completes.
             bt = {name: t.at[self._pending.slot].set(0)
                   for name, t in bt.items()}
-        toks_d, valid_d, cur, self.caches, self.lengths, _, _ = \
-            self._decode_chunk(self.params, self.cur_token, self.caches,
-                               self.lengths, remaining, eos_ids, done, sub,
-                               bt, num_steps=self.decode_chunk,
-                               temperature=self.temperature,
-                               top_k=self.top_k)
+        if self.spec_k:
+            # inactive slots get a dummy history (their verify row accepts
+            # nothing anyway — done masks every position)
+            draft_toks = jnp.asarray(self.drafter.propose_batch(
+                [(r.prompt + r.output) if r is not None else [0]
+                 for r in self.active]))
+            width = self.spec_k + 1
+            toks_d, valid_d, cur, self.caches, self.lengths, _, _ = \
+                self._verify_chunk(self.params, self.cur_token, draft_toks,
+                                   self.caches, self.lengths, remaining,
+                                   eos_ids, done, sub, bt,
+                                   num_drafted=self.spec_k,
+                                   temperature=self.temperature,
+                                   top_k=self.top_k)
+        else:
+            width = self.decode_chunk
+            toks_d, valid_d, cur, self.caches, self.lengths, _, _ = \
+                self._decode_chunk(self.params, self.cur_token, self.caches,
+                                   self.lengths, remaining, eos_ids, done,
+                                   sub, bt, num_steps=self.decode_chunk,
+                                   temperature=self.temperature,
+                                   top_k=self.top_k)
         self.cur_token = cur
         toks_h, valid_h = jax.device_get((toks_d, valid_d))
         self.host_syncs += 1
         self.step_count += 1
+        if self.spec_k:
+            self.spec_rounds += 1
+            self.spec_active_rows += int(valid_h[:, 0].sum())
+            self.spec_tokens += int(valid_h.sum())
         emitted = 0
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            for j in range(self.decode_chunk):
+            for j in range(width):
                 if valid_h[slot, j]:
                     req.output.append(int(toks_h[slot, j]))
                     emitted += 1
@@ -522,6 +573,11 @@ class ContinuousBatchingEngine:
                  for r in self.finished])) if self.finished else 0.0,
             "admission_stalls": self.admission_stalls,
             "prefill_chunk_ticks": self.prefill_chunk_ticks,
+            "spec_rounds": self.spec_rounds,
+            "spec_tokens": self.spec_tokens,
+            "spec_tokens_per_round": (self.spec_tokens
+                                      / max(self.spec_active_rows, 1)
+                                      if self.spec_k else None),
             "pages_in_use": self.kv.pages_in_use,
             "prefix_hits": self.prefix_hits,
             "prefix_hit_tokens": self.prefix_hit_tokens,

@@ -51,6 +51,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models import attention as attn
 from repro.models import transformer as tlm
 from repro.serving.sampler import sample_tokens
 
@@ -246,6 +247,136 @@ def decode_chunk(
         one, carry, jax.random.split(rng, num_steps))
     return (toks.T, valid.T, cur, caches, lengths, remaining,
             done | (remaining <= 0))
+
+
+# draft-length ladder for speculative decoding: engines snap a requested k
+# up to the nearest rung, so the jitted verify step compiles at most once
+# per rung (CountingJit-asserted) instead of once per distinct k
+SPEC_K_LADDER = (2, 4, 8)
+
+
+def spec_bucket(k: int, ladder=SPEC_K_LADDER) -> int:
+    """Snap a requested draft length ``k`` onto the compile ladder: the
+    smallest rung >= k, or the largest rung when k overshoots.  The verify
+    width (k+1) is a static jit argument, so an un-laddered k would compile
+    a fresh program per value."""
+    if k <= 0:
+        raise ValueError(f"speculative draft length must be positive, got {k}")
+    for b in sorted(ladder):
+        if b >= k:
+            return b
+    return max(ladder)
+
+
+def max_spec_width(cfg, max_len: int) -> Optional[int]:
+    """Largest verify width W = k+1 the cache layouts support, or None when
+    unbounded (no windowed layers).  SWA ring rollback restores clobbered
+    slots from the pre-verify ring, which only works while one verify step
+    cannot lap the ring: W <= ring slots = min(window, max_len).  Raises for
+    recurrent/SSM stacks — their per-token state folds are irreversible, so
+    no rollback (and no speculative decoding) is possible."""
+    bound: Optional[int] = None
+    for kinds, _ in tlm.stages(cfg):
+        for kind in kinds:
+            if kind not in tlm.ATTN_KINDS:
+                raise ValueError(
+                    f"speculative decoding needs attention-only stacks; "
+                    f"{cfg.name!r} has irreversible {kind!r} layers")
+            w = attn.kind_window(kind, cfg)
+            if w:
+                s = min(w, max_len)
+                bound = s if bound is None else min(bound, s)
+    return bound
+
+
+def make_verify_chunk(ctx, *, donate: Optional[bool] = None) -> CountingJit:
+    """Jitted ``verify_chunk`` specialized to one StepCtx — the speculative
+    counterpart of ``make_decode_chunk``.
+
+    ``num_drafted`` (and the sampling knobs) are static: engines draw k from
+    ``SPEC_K_LADDER`` via ``spec_bucket`` so the compile count stays
+    O(ladder).  The caches are donated where the platform aliases; the
+    pre-verify ring snapshot the rollback needs is read inside the same jit,
+    which XLA resolves with copy-insertion, so donation stays safe."""
+    if donate is None:
+        argnums = ctx.backend.donate_argnums((3,))
+    else:
+        argnums = (3,) if donate else ()
+    return CountingJit(functools.partial(verify_chunk, ctx=ctx),
+                       static_argnames=("num_drafted", "temperature",
+                                        "top_k"),
+                       donate_argnums=argnums)
+
+
+def verify_chunk(
+    params,
+    cur: jax.Array,        # (B,) int32 — last sampled token per row
+    draft: jax.Array,      # (B, k) int32 — drafted continuations
+    caches: List[Dict],
+    lengths: jax.Array,    # (B,) int32 — tokens already in the cache
+    remaining: jax.Array,  # (B,) int32 — emission budget left per row
+    eos_ids: jax.Array,    # (B,) int32 — per-row EOS id, -1 = none
+    done: jax.Array,       # (B,) bool — row finished (EOS seen / inactive)
+    rng: jax.Array,
+    block_tables=None,
+    *,
+    ctx,                   # StepCtx (decode mode) — closed over via partial
+    num_drafted: int,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array, List[Dict], jax.Array,
+           jax.Array, jax.Array]:
+    """One speculative draft/verify step: advance every row by 1..k+1 tokens
+    for the price of a single target forward.
+
+    The target scores all W = k+1 positions ``[cur, draft]`` in one
+    chunk-shaped pass (``tlm.lm_verify_chunk``), then an unrolled W-step
+    acceptance loop replays exactly the masks of ``decode_chunk``'s scan
+    body: position j's target token is emitted only while the row is still
+    *reachable* — every earlier target token matched its drafted proposal —
+    and still active (not done, budget left).  The first mismatching
+    position still emits the target's token (the standard bonus token), so
+    a row always advances by at least one token while active, and a full
+    match advances by k+1.  Greedy emissions are bitwise identical to the
+    sequential decode loop for *any* proposals — wrong drafts cost only
+    wasted compute, never wrong tokens.
+
+    Cache writes for rejected positions are healed before returning:
+    global layers mask stale keys past the retreated length by validity,
+    SWA rings are restored from the pre-verify snapshot
+    (``tlm.lm_rollback_caches``).  Returns the same
+    ``(tokens, valid, cur, caches, lengths, remaining, done)`` tuple as
+    ``decode_chunk`` with W-wide token/valid planes, so engine commit loops
+    are shared between the two paths.
+    """
+    w = num_drafted + 1
+    tokens_in = jnp.concatenate([cur[:, None], draft.astype(cur.dtype)],
+                                axis=1)
+    starts = lengths
+    old_caches = caches
+    logits, caches = tlm.lm_verify_chunk(params, tokens_in, caches, lengths,
+                                         ctx=ctx, block_tables=block_tables)
+    step_rngs = jax.random.split(rng, w)
+    toks, valids = [], []
+    reach = jnp.ones_like(done)
+    for j in range(w):
+        t_j = sample_tokens(step_rngs[j], logits[:, j],
+                            temperature=temperature, top_k=top_k)
+        active = reach & ~done & (remaining > 0)
+        nxt = jnp.where(active, t_j, cur)
+        lengths = lengths + active.astype(lengths.dtype)
+        remaining = remaining - active.astype(remaining.dtype)
+        done = done | (active & (eos_ids >= 0) & (nxt == eos_ids))
+        toks.append(nxt)
+        valids.append(active)
+        cur = nxt
+        if j < num_drafted:
+            reach = reach & active & (t_j == draft[:, j])
+    accepted = lengths - starts
+    caches = tlm.lm_rollback_caches(caches, old_caches, starts, accepted, w,
+                                    ctx=ctx, block_tables=block_tables)
+    return (jnp.stack(toks, axis=1), jnp.stack(valids, axis=1), cur, caches,
+            lengths, remaining, done | (remaining <= 0))
 
 
 def first_token(rng: jax.Array, last_logits: jax.Array, eos_ids: jax.Array,

@@ -1,0 +1,12 @@
+"""Seeded cache-length-mutation violations: KV grant bookkeeping poked
+from outside the cache layer."""
+
+
+def shrink(kv, slot, n):
+    # retreats the table without releasing page refs -> leaked pages
+    kv.groups["full"].block_table[slot, n:] = 0
+    kv._granted[slot] = n
+
+
+def peek(kv, slot):
+    return kv._granted.get(slot, 0)

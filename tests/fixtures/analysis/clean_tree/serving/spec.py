@@ -1,0 +1,18 @@
+"""Clean twin: grant state moves through the public cache surface
+(prose may mention block_table or _granted without tripping the rule)."""
+
+
+def shrink(kv, backend, state, slot, n):
+    # rollback retreats the grant high-water, the table rows and the
+    # page refcounts together
+    freed = backend.rollback(state, slot, n)
+    kv.check_invariants()
+    return freed
+
+
+def tables(kv):
+    return kv.tables()
+
+
+def grant(backend, state, slot, tokens):
+    return backend.advance(state, slot, tokens)

@@ -232,6 +232,77 @@ def test_forced_donation_matches_undonated(name):
 
 
 # ---------------------------------------------------------------------------
+# Host rollback: grant high-water + page accounting (speculative decoding)
+# ---------------------------------------------------------------------------
+
+
+def _backend_state(mode, *, slots=2, max_len=64, ps=8, cfg=None):
+    if cfg is None:
+        cfg, _ = small_lm(mode.endswith("vq"))
+    backend = cbe.get_backend(mode)
+    ctx = StepCtx(cfg=cfg, mode="decode", astra_mode="off", cache_mode=mode)
+    return backend, backend.make_state(cfg, slots=slots, max_len=max_len,
+                                       ctx=ctx, page_size=ps,
+                                       dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("mode", ["paged", "paged_vq"])
+def test_paged_rollback_page_accounting(mode):
+    """The grant retreats token-granular; pages free only when the retreat
+    crosses their boundary, and the allocator balances at every step."""
+    backend, kv = _backend_state(mode)
+    assert backend.advance(kv, 0, 20)   # 3 pages at page_size=8
+    base = kv.pages_in_use
+    assert kv.granted(0) == 20
+    assert backend.rollback(kv, 0, 0) == 0          # n=0: no-op
+    assert kv.granted(0) == 20 and kv.pages_in_use == base
+    assert backend.rollback(kv, 0, 1) == 0          # 20 -> 19: mid-page
+    assert kv.granted(0) == 19 and kv.pages_in_use == base
+    assert backend.rollback(kv, 0, 3) == 1          # 19 -> 16: boundary
+    assert kv.granted(0) == 16 and kv.pages_in_use == base - 1
+    kv.check_invariants()
+    assert backend.rollback(kv, 0, 100) == 2        # past everything
+    assert kv.granted(0) == 0 and kv.pages_in_use == 0
+    kv.check_invariants()
+    assert backend.advance(kv, 0, 10)               # grant grows again
+    assert kv.granted(0) == 10 and kv.pages_in_use == 2
+    with pytest.raises(ValueError, match=">= 0"):
+        backend.rollback(kv, 0, -1)
+    assert backend.release(kv, 0) >= 0
+    assert kv.pages_in_use == 0
+
+
+def test_paged_rollback_keeps_window_ring_pages():
+    """A true SWA ring page always holds live in-window positions, so a
+    length retreat frees only the full-span (global) tail."""
+    cfg = _no_astra(get_config("gemma2-27b").reduced())
+    backend, kv = _backend_state("paged", slots=1, max_len=256, ps=16,
+                                 cfg=cfg)
+    assert backend.advance(kv, 0, 200)
+    ring = kv.groups["window"].allocator
+    glob = kv.groups["global"].allocator
+    ring_held, glob_held = len(ring.owned(0)), len(glob.owned(0))
+    freed = backend.rollback(kv, 0, 40)             # 200 -> 160 tokens
+    assert kv.granted(0) == 160
+    assert len(ring.owned(0)) == ring_held          # ring: nothing freed
+    assert len(glob.owned(0)) == -(-160 // 16)      # global: tail returned
+    assert freed == glob_held - len(glob.owned(0))
+    kv.check_invariants()
+
+
+@pytest.mark.parametrize("mode", ["fp", "vq"])
+def test_slab_rollback_is_noop(mode):
+    """Slab rows span max_len: the host op frees nothing (device rings are
+    verify_rollback's job) but still validates its argument."""
+    backend, state = _backend_state(mode)
+    assert backend.advance(state, 0, 30)
+    assert backend.rollback(state, 0, 5) == 0
+    assert backend.rollback(state, 0, 0) == 0
+    with pytest.raises(ValueError, match=">= 0"):
+        backend.rollback(state, 0, -1)
+
+
+# ---------------------------------------------------------------------------
 # Windowed page caps: pools shrink, outputs unchanged
 # ---------------------------------------------------------------------------
 

@@ -267,6 +267,49 @@ def test_eviction_under_pressure_keeps_invariants():
 
 
 # ---------------------------------------------------------------------------
+# Speculative rollback over shared prefix pages
+# ---------------------------------------------------------------------------
+
+
+def test_rollback_on_shared_prefix_keeps_coowned_pages():
+    """A speculative-decode rollback that retreats a slot's grant into the
+    COW-shared prefix region drops only this slot's page references: pages
+    co-owned by the radix index never return to the free list, the private
+    tail does, and the allocator balances throughout."""
+    cfg, params = small_lm()
+    _, donor, probe = _prompts()  # probe = 32-token prefix + 2 private
+    eng = _engine(cfg, params, "paged", prefix_cache=True)
+    _drain_one(eng, donor)  # park the 4 full prompt pages in the index
+    eng.submit(list(probe), max_new_tokens=6)
+    fuel = 50
+    while not any(r is not None for r in eng.active) and fuel:
+        eng.step()
+        fuel -= 1
+    assert fuel, "probe never admitted"
+    slot = next(i for i, r in enumerate(eng.active) if r is not None)
+    kv = eng.kv
+    alloc = kv.groups["global"].allocator
+    held = alloc.owned(slot)
+    shared = [p for p in held if alloc.refcount(p) > 1]
+    assert len(shared) == 4  # the whole indexed prefix rode in shared
+    assert kv.granted(slot) == len(probe) + 6  # 40 tokens -> 5 pages
+    in_use = kv.pages_in_use
+    # retreat to 8 tokens: keep 1 shared page, drop 3 shared + 1 private
+    freed = kv.rollback(slot, kv.granted(slot) - 8)
+    kv.check_invariants()
+    assert kv.granted(slot) == 8
+    assert freed == 1  # only the private tail page actually freed
+    assert kv.pages_in_use == in_use - 1
+    assert alloc.owned(slot) == shared[:1]
+    for p in shared:  # index references keep every prefix page live
+        assert alloc.refcount(p) >= 1
+    assert alloc.refcount(shared[0]) == 2  # slot + index
+    kv.free(slot)  # retire: the index alone owns the prefix again
+    kv.check_invariants()
+    assert kv.pages_in_use == len({n.page for n in kv.prefix.nodes.values()})
+
+
+# ---------------------------------------------------------------------------
 # Admission bug regressions: truncation, mid-drain raise, gating
 # ---------------------------------------------------------------------------
 

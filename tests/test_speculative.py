@@ -1,0 +1,390 @@
+"""Speculative decoding: draft/verify multi-token steps with rollback.
+
+The contract under test is *losslessness*: a speculative engine emits
+bitwise the greedy tokens of its plain sequential twin for ANY proposals —
+good drafts buy tokens/step, bad drafts cost only wasted compute.  The
+suite pins:
+
+  * greedy spec-vs-nonspec parity across every cache layout x both
+    engines (and through the Pallas route), including adversarial
+    all-garbage drafts that force a maximal rollback every round, and a
+    tight SWA ring that wraps mid-verify;
+  * the compile policy: one verify trace per engine, requested k snapped
+    onto ``SPEC_K_LADDER`` so distinct k's share rungs;
+  * the drafter surfaces — ``sample_with_scores`` bitwise-consistency
+    with ``sample_tokens``, ``NGramDrafter`` lookup semantics, and the
+    paired-draft-model mode (target drafting for itself accepts ~all
+    proposals, so tokens/round must clear 1);
+  * the gates: recurrent/SSM stacks raise (irreversible state), verify
+    width is capped by the smallest window ring, the continuous scheduler
+    rejects paired draft models.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.configs import DRAFT_PAIRS, draft_for, get_config
+from repro.core.sequence_parallel import LOCAL, MeshContext
+from repro.models import model_factory as mf
+from repro.serving import steps as serving_steps
+from repro.serving.drafter import NGramDrafter
+from repro.serving.engine import ServingEngine
+from repro.serving.sampler import sample_tokens, sample_with_scores
+from repro.serving.scheduler import ContinuousBatchingEngine
+
+SPECS = {
+    "fp": ("fp", False, False),
+    "vq": ("vq", True, False),
+    "paged": ("paged", False, False),
+    "paged_vq": ("paged_vq", True, False),
+    "sharded_fp": ("fp", False, True),
+    "sharded_vq": ("vq", True, True),
+}
+
+_MODELS = {}
+
+PROMPTS = [[5, 9, 3], [7, 2, 8, 4, 1], [11, 12]]
+
+
+def small_lm(arch="gpt2-small", astra=False, **over):
+    key = (arch, astra, tuple(sorted(over.items())))
+    if key not in _MODELS:
+        cfg = get_config(arch).reduced()
+        if not astra:
+            cfg = dataclasses.replace(
+                cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+        if over:
+            cfg = dataclasses.replace(cfg, **over)
+        params = mf.init_params(jax.random.PRNGKey(0), cfg)
+        _MODELS[key] = (cfg, params)
+    return _MODELS[key]
+
+
+def mesh_ctx_for(sharded):
+    if not sharded:
+        return LOCAL
+    return MeshContext(mesh=make_mesh((1,), ("model",)), batch_axes=(),
+                       seq_axis="model")
+
+
+def static_gen(name, prompts, max_new, *, spec=0, draft=None, eos=None,
+               use_pallas=False, arch="gpt2-small", **over):
+    mode, astra, sharded = SPECS[name]
+    cfg, params = small_lm(arch, astra, **over)
+    eng = ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                        cache_mode=mode, decode_chunk=3, page_size=8,
+                        mesh_ctx=mesh_ctx_for(sharded), use_pallas=use_pallas,
+                        speculative=spec, draft=draft)
+    out = eng.generate(prompts, max_new_tokens=max_new, temperature=0.0,
+                       eos_id=eos)
+    return out.tokens, eng
+
+
+def drain(name, jobs, *, spec=0, arch="gpt2-small", **over):
+    mode, astra, sharded = SPECS[name]
+    cfg, params = small_lm(arch, astra, **over)
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=64,
+                                   decode_chunk=2, cache_mode=mode,
+                                   page_size=8,
+                                   mesh_ctx=mesh_ctx_for(sharded),
+                                   speculative=spec)
+    for prompt, max_new, eos in jobs:
+        eng.submit(prompt, max_new_tokens=max_new, eos_id=eos)
+    eng.run_until_drained()
+    return {tuple(r.prompt): r.output for r in eng.finished}, eng
+
+
+# ---------------------------------------------------------------------------
+# sample_with_scores: same tokens as sample_tokens, plus the scores
+# ---------------------------------------------------------------------------
+
+
+def test_sample_with_scores_greedy_matches_sample_tokens():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (4, 13))
+    rng = jax.random.PRNGKey(2)
+    toks, logprobs = sample_with_scores(rng, logits, temperature=0.0)
+    assert (toks == sample_tokens(rng, logits, temperature=0.0)).all()
+    assert (toks == jnp.argmax(logits, axis=-1)).all()
+    want = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    np.testing.assert_allclose(np.asarray(logprobs), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_sample_with_scores_sampled_bitwise_and_adjusted_dist():
+    """Same rng/knobs => the identical categorical draw, and the returned
+    scores are the log-softmax of the *adjusted* (temperature-scaled,
+    top-k-masked) distribution the token was actually drawn from."""
+    logits = jax.random.normal(jax.random.PRNGKey(3), (5, 17))
+    for temperature, top_k in ((1.3, 0), (0.7, 4)):
+        for seed in range(4):
+            rng = jax.random.PRNGKey(seed)
+            toks, logprobs = sample_with_scores(
+                rng, logits, temperature=temperature, top_k=top_k)
+            ref = sample_tokens(rng, logits, temperature=temperature,
+                                top_k=top_k)
+            assert (toks == ref).all()
+            l = logits.astype(jnp.float32) / temperature
+            if top_k:
+                kth = jnp.sort(l, axis=-1)[:, -top_k][:, None]
+                l = jnp.where(l < kth, -1e30, l)
+            want = jax.nn.log_softmax(l, axis=-1)
+            np.testing.assert_allclose(np.asarray(logprobs),
+                                       np.asarray(want), rtol=1e-6)
+            if top_k:  # masked tail carries ~zero probability
+                ranks = jnp.argsort(logits, axis=-1)[:, :-top_k]
+                masked = np.take_along_axis(np.asarray(logprobs),
+                                            np.asarray(ranks), axis=-1)
+                assert (masked < -1e20).all()
+
+
+# ---------------------------------------------------------------------------
+# NGramDrafter lookup semantics
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_longest_tail_wins():
+    d = NGramDrafter(3)
+    # tail [2, 3] recurs at position 1; propose what followed it: [4, 2, 3]
+    assert d.propose([1, 2, 3, 4, 2, 3]).tolist() == [4, 2, 3]
+
+
+def test_ngram_drafter_pad_fallback_and_empty():
+    d = NGramDrafter(3)
+    # no tail recurs: repeat the last token
+    assert d.propose([1, 2, 3]).tolist() == [3, 3, 3]
+    # short continuation pads with its own last token
+    assert d.propose([5, 6, 5]).tolist() == [6, 5, 5]
+    assert d.propose([]).tolist() == [0, 0, 0]
+    batch = d.propose_batch([[1, 2, 3], [5, 6, 5]])
+    assert batch.shape == (2, 3) and batch.dtype == np.int32
+    with pytest.raises(ValueError, match="positive"):
+        NGramDrafter(0)
+
+
+# ---------------------------------------------------------------------------
+# spec_bucket / max_spec_width gates
+# ---------------------------------------------------------------------------
+
+
+def test_spec_bucket_snaps_onto_ladder():
+    assert serving_steps.SPEC_K_LADDER == (2, 4, 8)
+    assert [serving_steps.spec_bucket(k) for k in (1, 2, 3, 4, 5, 8, 9, 100)] \
+        == [2, 2, 4, 4, 8, 8, 8, 8]
+    with pytest.raises(ValueError, match="positive"):
+        serving_steps.spec_bucket(0)
+
+
+def test_max_spec_width_bounds_and_rejections():
+    cfg, _ = small_lm()  # all-global gpt2: unbounded
+    assert serving_steps.max_spec_width(cfg, 64) is None
+    g2 = get_config("gemma2-27b").reduced()
+    assert serving_steps.max_spec_width(g2, 256) == g2.window_size
+    assert serving_steps.max_spec_width(g2, 4) == 4  # max_len caps the ring
+    rg = get_config("recurrentgemma-9b").reduced()
+    with pytest.raises(ValueError, match="irreversible"):
+        serving_steps.max_spec_width(rg, 64)
+
+
+def test_recurrent_stack_rejected_by_both_engines():
+    cfg = get_config("recurrentgemma-9b").reduced()
+    cfg = dataclasses.replace(
+        cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+    params = mf.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="irreversible"):
+        ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                      speculative=2)
+    with pytest.raises(ValueError, match="irreversible"):
+        ContinuousBatchingEngine(cfg, params, slots=2, max_len=64,
+                                 speculative=2)
+
+
+def test_spec_width_capped_by_window_ring():
+    """One verify step must not lap an SWA ring: k+1 <= min(window,
+    max_len).  window_size=8 admits k=4 (width 5) and rejects k=8."""
+    cfg, params = small_lm("gemma2-27b", window_size=8)
+    eng = ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                        speculative=4)
+    assert eng.spec_k == 4
+    with pytest.raises(ValueError, match="exceeds"):
+        ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                      speculative=8)
+
+
+def test_scheduler_rejects_paired_draft_model():
+    cfg, params = small_lm()
+    with pytest.raises(ValueError, match="n-gram"):
+        ContinuousBatchingEngine(cfg, params, slots=2, max_len=64,
+                                 speculative=2, draft=(cfg, params))
+
+
+# ---------------------------------------------------------------------------
+# Greedy parity: speculative == sequential, every layout, both engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SPECS))
+def test_static_engine_spec_parity(name):
+    want, _ = static_gen(name, PROMPTS, 12)
+    got, eng = static_gen(name, PROMPTS, 12, spec=3)
+    assert got == want, (name, got, want)
+    assert eng.spec_k == 4  # snapped onto the ladder
+    assert eng._verify_chunk.trace_count == 1
+    # verify rounds own every token after each row's prefill-sampled first
+    assert eng.spec_tokens == sum(len(t) - 1 for t in got)
+    # an active row always advances: rounds < tokens of the longest row
+    assert eng.spec_rounds <= max(len(t) for t in got)
+
+
+@pytest.mark.parametrize("name", sorted(SPECS))
+def test_continuous_engine_spec_parity(name):
+    jobs = [(PROMPTS[0], 6, None), (PROMPTS[1], 4, None),
+            (PROMPTS[2], 6, None), ([4, 4, 4], 3, None), ([9], 5, None)]
+    want, _ = drain(name, jobs)
+    got, eng = drain(name, jobs, spec=3)
+    assert got == want, (name, got, want)
+    assert eng.kv.pages_in_use == 0
+    assert eng._verify_chunk.trace_count == 1
+    assert eng._decode_chunk.trace_count == 0  # spec path owns decoding
+    assert eng.spec_tokens == sum(len(o) - 1 for o in got.values())
+
+
+def test_spec_parity_with_mid_stream_eos():
+    want, _ = static_gen("fp", PROMPTS, 12)
+    eos = want[0][3]  # truncate row 0 mid-stream
+    a, _ = static_gen("fp", PROMPTS, 12, eos=eos)
+    b, _ = static_gen("fp", PROMPTS, 12, eos=eos, spec=3)
+    assert b == a
+
+
+@pytest.mark.parametrize("name", ["fp", "paged"])
+def test_garbage_drafts_cost_only_compute(name, monkeypatch):
+    """All-zero proposals reject at every position: each round commits the
+    single bonus token and rolls the other k writes back.  Tokens must
+    still match, i.e. rollback heals the cache exactly."""
+    monkeypatch.setattr(
+        NGramDrafter, "propose_batch",
+        lambda self, hs: np.zeros((len(hs), self.k), np.int32))
+    want, _ = static_gen(name, PROMPTS, 10)
+    got, eng = static_gen(name, PROMPTS, 10, spec=3)
+    assert got == want, (name, got, want)
+    # one bonus token per round after the prefill-sampled first (no greedy
+    # target token here is 0, so no accidental draft match)
+    assert all(0 not in row for row in got)
+    assert eng.spec_rounds == 9
+    jobs = [(PROMPTS[0], 5, None), (PROMPTS[2], 4, None)]
+    want_c, _ = drain(name, jobs)
+    got_c, _ = drain(name, jobs, spec=3)
+    assert got_c == want_c
+
+
+@pytest.mark.parametrize("name", ["fp", "paged"])
+def test_spec_parity_across_wrapped_window_rings(name):
+    """gemma2 with window_size=8: decoding to 20 new tokens wraps the SWA
+    rings repeatedly while verify keeps writing (and rolling back) width-5
+    spans across page and ring boundaries."""
+    kw = dict(arch="gemma2-27b", window_size=8)
+    want, _ = static_gen(name, PROMPTS, 20, **kw)
+    got, _ = static_gen(name, PROMPTS, 20, spec=3, **kw)
+    assert got == want, (name, got, want)
+    jobs = [(PROMPTS[0], 8, None), (PROMPTS[2], 6, None)]
+    want_c, _ = drain(name, jobs, **kw)
+    got_c, _ = drain(name, jobs, spec=3, **kw)
+    assert got_c == want_c
+
+
+def test_spec_parity_through_pallas_route():
+    for name in ("fp", "paged"):
+        want, _ = static_gen(name, PROMPTS[:2], 8, use_pallas=True)
+        got, _ = static_gen(name, PROMPTS[:2], 8, spec=3, use_pallas=True)
+        assert got == want, (name, got, want)
+
+
+def test_sampled_spec_run_respects_budget_and_eos():
+    """temperature > 0 consumes rng differently from the sequential loop
+    (one split per verified position), so parity is not the contract —
+    budget and EOS handling are."""
+    cfg, params = small_lm()
+    eng = ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                        speculative=3)
+    out = eng.generate(PROMPTS, max_new_tokens=9, temperature=0.9,
+                       seed=7).tokens
+    assert all(0 < len(t) <= 9 for t in out)
+    assert all(0 <= t < cfg.vocab_size for row in out for t in row)
+
+
+# ---------------------------------------------------------------------------
+# Paired draft model: registry pairs + self-draft acceptance
+# ---------------------------------------------------------------------------
+
+
+def test_draft_pairs_registry():
+    assert draft_for("gpt2-medium") == "gpt2-small"
+    assert "gpt2-medium" in DRAFT_PAIRS
+    with pytest.raises(KeyError, match="no draft model paired"):
+        draft_for("gpt2-small")
+
+
+def test_draft_model_spec_parity_and_acceptance():
+    """The target drafting for itself (greedy) proposes its own argmax, so
+    nearly every position verifies: parity holds AND tokens/round must
+    clearly beat sequential decode's 1."""
+    cfg, params = small_lm()
+    want, _ = static_gen("fp", PROMPTS, 12)
+    eng = ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                        speculative=4, draft=(cfg, params))
+    got = eng.generate(PROMPTS, max_new_tokens=12, temperature=0.0).tokens
+    assert got == want
+    rate = eng.spec_tokens / max(eng.spec_active_rows, 1)
+    assert rate > 2.0, rate  # self-draft: near-full acceptance
+    assert eng._draft_engine._decode_chunk.trace_count == 1
+
+
+def test_draft_model_vocab_mismatch_rejected():
+    cfg, params = small_lm()
+    bad = dataclasses.replace(cfg, vocab_size=cfg.vocab_size + 1)
+    bad_params = mf.init_params(jax.random.PRNGKey(1), bad)
+    with pytest.raises(ValueError, match="vocab"):
+        ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                      speculative=2, draft=(bad, bad_params))
+
+
+def test_windowed_draft_model_rejected():
+    """Draft caches are never rolled back (the target's accepted length
+    simply heals them), which only works for all-global stacks."""
+    cfg, params = small_lm()
+    dcfg, dparams = small_lm("gemma2-27b")
+    with pytest.raises(ValueError, match="global"):
+        ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                      speculative=2, draft=(dcfg, dparams))
+
+
+# ---------------------------------------------------------------------------
+# Compile policy: the k-ladder bounds verify traces
+# ---------------------------------------------------------------------------
+
+
+def test_verify_compiles_once_across_generates():
+    cfg, params = small_lm()
+    eng = ServingEngine(cfg, params, max_len=64, astra_mode="off",
+                        speculative=3)
+    a = eng.generate(PROMPTS, max_new_tokens=6, temperature=0.0).tokens
+    b = eng.generate(PROMPTS, max_new_tokens=9, temperature=0.0).tokens
+    assert eng._verify_chunk.trace_count == 1
+    assert a == [row[:6] for row in b]  # greedy prefix-stability
+
+
+def test_k_ladder_shares_rungs():
+    """Every k in 1..8 lands on one of three rungs, so a server cycling
+    through requested draft lengths compiles at most len(ladder) verify
+    programs — engines on the same rung share the static signature."""
+    rungs = {serving_steps.spec_bucket(k) for k in range(1, 9)}
+    assert rungs == set(serving_steps.SPEC_K_LADDER)
+    a = ServingEngine(*small_lm(), max_len=64, astra_mode="off",
+                      speculative=3)
+    b = ServingEngine(*small_lm(), max_len=64, astra_mode="off",
+                      speculative=4)
+    assert a.spec_k == b.spec_k == 4  # identical static args => shared rung
