@@ -32,10 +32,18 @@ perf PR diffs against.  Sections:
   rungs) and drafter mode (n-gram self-draft vs a paired draft model),
   with greedy output asserted token-identical to the sequential baseline
   and one verify compile per rung.
+* **mesh** (``--mesh``; ``--smoke`` carries one row): the multi-device
+  serving columns — a seq-sharded engine over every host device (greedy
+  parity vs the single-host engine, decode tok/s, and the collective
+  payload each compiled decode step moves, read off the optimized HLO),
+  plus the disaggregated prefill/decode hand-off: per-migration bytes
+  fp-vs-vq costed through ``core.comm_model`` at 10/100/500 Mbps.  On a
+  single-device host the mesh collapses to one shard and the disagg
+  groups overlap, so the rows land in CI regardless of topology.
 * compile counts (CountingJit traces) and host syncs for every engine run.
 
 Usage:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
-            [--use-pallas] [--speculate] [--out F]
+            [--use-pallas] [--speculate] [--mesh] [--out F]
 """
 from __future__ import annotations
 
@@ -339,6 +347,129 @@ def bench_speculative(cfg, params, *, max_len, batch, max_new, repeats,
     return out
 
 
+def bench_mesh(cfg, params, *, arch, max_len, prompt_lens, max_new,
+               repeats, migrate_modes=("fp", "vq"),
+               bandwidths_mbps=(10.0, 100.0, 500.0), seed=0):
+    """The ``--mesh`` section: seq-sharded serving + disaggregated hand-off.
+
+    *serving*: one engine on a mesh over every host device (1 shard when
+    ``max_len`` does not divide) vs the single-host reference — greedy
+    parity, decode tok/s, and ``collective_bytes_per_decode_step``: the
+    summed result payload of every collective in the compiled decode
+    chunk.  The per-step body lowers once inside the scan, so this is the
+    wire traffic each decode step moves — the number the partial-stats
+    merge keeps at (B, H)-sized stats instead of embed-sized gathers.
+
+    *migration*: a ``DisaggregatedEngine`` per cache mode (``vq`` builds
+    its own astra-enabled model for the codebooks); ``migration_report``
+    costs the measured hand-off bytes against the fp-equivalent bytes of
+    the same tree at the paper's bandwidth grid.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis import hlo as hlo_lint
+    from repro.compat import make_mesh
+    from repro.configs import get_config
+    from repro.core.sequence_parallel import MeshContext
+    from repro.models import model_factory as mf
+    from repro.serving.disagg import DisaggregatedEngine
+
+    n = jax.device_count()
+    num_shards = n if max_len % n == 0 else 1
+    mesh_kw = {}
+    if num_shards > 1:
+        mesh_kw["mesh_ctx"] = MeshContext(
+            mesh=make_mesh((num_shards,), ("model",)), batch_axes=(),
+            seq_axis="model")
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(1, cfg.vocab_size, size=pl).tolist()
+               for pl in prompt_lens]
+    b = len(prompts)
+
+    ref = _engine(cfg, params, "chunked", max_len, decode_chunk=4)
+    want = ref.generate(prompts, max_new_tokens=max_new,
+                        temperature=0.0).tokens
+    eng = _engine(cfg, params, "chunked", max_len, decode_chunk=4, **mesh_kw)
+    got = eng.generate(prompts, max_new_tokens=max_new,
+                       temperature=0.0).tokens  # compile warmup + parity
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        eng.generate(prompts, max_new_tokens=max_new, temperature=0.0,
+                     seed=seed)
+    dt = (time.perf_counter() - t0) / repeats
+
+    # lower the jitted decode chunk exactly as the engine calls it and
+    # read the collective payload off the optimized HLO
+    toks = np.zeros((b, max(len(p) for p in prompts)), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    lens = np.array([len(p) for p in prompts], np.int32)
+    _, caches, tables = eng._run_prefill(toks, lens, max_new)
+    lowered = eng._decode_chunk.lower(
+        eng.params, jnp.zeros((b,), jnp.int32), caches, jnp.asarray(lens),
+        jnp.full((b,), max_new, jnp.int32), jnp.full((b,), -1, jnp.int32),
+        jnp.zeros((b,), bool), jax.random.PRNGKey(0), tables,
+        num_steps=eng.decode_chunk, temperature=0.0, top_k=0)
+    hlo = lowered.compile().as_text()
+    colls = hlo_lint.find_collectives(hlo)
+    leaf = jax.tree.leaves(params)[0]
+    embed_bytes = cfg.vocab_size * cfg.d_model * leaf.dtype.itemsize
+    serving = {
+        "num_shards": num_shards,
+        "greedy_parity": got == want,
+        "wall_s": dt,
+        "decode_tok_per_s": b * max_new / dt,
+        "collective_bytes_per_decode_step": sum(c.bytes for c in colls),
+        "num_collectives": len(colls),
+        "largest_allgather_bytes":
+            hlo_lint.largest_allgather_bytes(hlo),
+        "prefill_compiles": eng._prefill_chunk.trace_count,
+        "decode_compiles": eng._decode_chunk.trace_count,
+    }
+    assert serving["greedy_parity"], (got, want)
+    # the dryrun/trace_audit invariant, re-asserted on the bench artifact:
+    # no embed-sized all-gather in the sharded decode step
+    assert serving["largest_allgather_bytes"] < embed_bytes, serving
+
+    half = max(num_shards // 2, 1)
+    migration = {}
+    for mode in migrate_modes:
+        if mode == "vq":  # vq layouts need the astra codebooks in params
+            mcfg = get_config(arch).reduced()
+            mparams = mf.init_params(jax.random.PRNGKey(0), mcfg)
+        else:
+            mcfg, mparams = cfg, params
+        mref = _engine(mcfg, mparams, "chunked", max_len, decode_chunk=4,
+                       cache_mode=mode)
+        mwant = mref.generate(prompts, max_new_tokens=max_new,
+                              temperature=0.0).tokens
+        deng = DisaggregatedEngine(
+            mcfg, mparams, max_len=max_len, split=f"{half}:{half}",
+            cache_mode=mode, decode_chunk=4,
+            bandwidths_mbps=bandwidths_mbps)
+        dtoks = deng.generate(prompts, max_new_tokens=max_new,
+                              temperature=0.0).tokens
+        rep = deng.migration_report()
+        rep["greedy_parity"] = dtoks == mwant
+        migration[mode] = rep
+        if mode == "vq":
+            # the hand-off acceptance bar: codes <= 1/8 of the fp bytes
+            assert rep["coded_bytes"] * 8 <= rep["fp_bytes"], rep
+        else:
+            assert rep["coded_bytes"] == rep["fp_bytes"], rep
+        assert rep["greedy_parity"], (mode, dtoks)
+    return {
+        "num_shards": num_shards,
+        "max_len": int(max_len),
+        "prompt_lens": [int(p) for p in prompt_lens],
+        "max_new_tokens": int(max_new),
+        "serving": serving,
+        "migration": migration,
+    }
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -352,6 +483,12 @@ def main(argv=None) -> dict:
                          "rate / tokens-per-round / tok/s vs draft length "
                          "k and drafter mode (n-gram self-draft + paired "
                          "draft model); --smoke carries one row")
+    ap.add_argument("--mesh", action="store_true",
+                    help="add the multi-device section: seq-sharded "
+                         "serving over every host device (parity, tok/s, "
+                         "collective bytes per compiled decode step) and "
+                         "the disaggregated fp-vs-vq hand-off costed at "
+                         "10/100/500 Mbps; --smoke carries one row")
     ap.add_argument("--arch", default="gpt2-small")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serving.json"))
@@ -412,6 +549,13 @@ def main(argv=None) -> dict:
                    dict(batch=4, max_new=24, repeats=3))
         report["speculative"] = bench_speculative(
             cfg, params, max_len=min(max_len, 256), **spec_kw)
+    if args.mesh or args.smoke:
+        mesh_kw = (dict(prompt_lens=(9, 16), max_new=8, repeats=1,
+                        migrate_modes=("vq",))  # one row rides the CI lane
+                   if args.smoke else
+                   dict(prompt_lens=(16, 64), max_new=16, repeats=3))
+        report["mesh"] = bench_mesh(cfg, params, arch=args.arch,
+                                    max_len=min(max_len, 256), **mesh_kw)
     report["bench_wall_s"] = time.time() - t0
     out_path = os.path.abspath(args.out)
     with open(out_path, "w") as f:
@@ -440,6 +584,22 @@ def main(argv=None) -> dict:
                   f"{r['tokens_per_round']:.2f} tok/round "
                   f"(accept {r['accept_rate']:.2f}), "
                   f"{r['speedup_vs_sequential']:.2f}x vs sequential")
+    if "mesh" in report:
+        m = report["mesh"]
+        s = m["serving"]
+        print(f"  mesh[{m['num_shards']} shard(s)]: "
+              f"{s['decode_tok_per_s']:.1f} tok/s, "
+              f"{s['collective_bytes_per_decode_step']:,} B collective "
+              f"per decode step ({s['num_collectives']} collectives), "
+              f"parity={s['greedy_parity']}")
+        for mode, r in m["migration"].items():
+            print(f"  disagg[{mode}] {r['split']}: "
+                  f"{r['bytes_per_migration']:,.0f} B/migration "
+                  f"({r['compression']:.1f}x vs fp), "
+                  f"parity={r['greedy_parity']}")
+            for bw, t in r["transfer_s"].items():
+                print(f"    {bw} Mbps: fp {t['fp'] * 1e3:8.2f} ms -> "
+                      f"coded {t['coded'] * 1e3:8.2f} ms")
     if "pallas" in report:
         p = report["pallas"]
         tag = " [interpret]" if p["interpret_mode"] else ""

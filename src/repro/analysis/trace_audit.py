@@ -25,8 +25,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.analysis import hlo as hlo_lint
 from repro.analysis.rules import Finding
 
-# (cache_mode, use_pallas) combos the CLI audits under --trace
-DEFAULT_MATRIX: Tuple[Tuple[str, bool], ...] = (("fp", False), ("fp", True))
+# (cache_mode, use_pallas[, seq_sharded]) combos the CLI audits under
+# --trace; the seq-sharded rows lower the mesh decode + chunked-prefill
+# steps (shard_map over every host device) through the same auditors
+DEFAULT_MATRIX: Tuple[Tuple, ...] = (
+    ("fp", False),
+    ("fp", True),
+    ("fp", False, True),
+    ("fp", True, True),
+    ("vq", True, True),
+)
 
 _MODELS: Dict[Tuple[str, bool], tuple] = {}
 
@@ -116,13 +124,20 @@ def engagement_findings(delta: Dict[str, int], *, use_pallas: bool,
     return []
 
 
-def audit_serving_step(cache_mode: str = "fp", use_pallas: bool = False, *,
+def audit_serving_step(cache_mode: str = "fp", use_pallas: bool = False,
+                       seq_sharded: bool = False, *,
                        arch: str = "gpt2-small", batch: int = 2,
                        max_len: int = 64, prompt_len: int = 5,
                        max_new: int = 4,
                        donate: Optional[bool] = None
                        ) -> Tuple[List[Finding], dict]:
     """Audit the compiled decode_chunk + prefill_chunk for one combo.
+
+    ``seq_sharded=True`` builds the engine on a mesh over every host
+    device (1 when ``max_len`` does not divide) so the shard_map decode
+    and chunked-prefill lowerings run through the same HLO auditors — in
+    particular no embed/table-sized all-gather may appear on the mesh
+    paths (the partial-stats merge moves (B, H)-sized stats only).
 
     Returns ``(findings, report)``; an empty findings list means the
     compiled artifacts hold every audited invariant for this combo.
@@ -139,10 +154,22 @@ def audit_serving_step(cache_mode: str = "fp", use_pallas: bool = False, *,
     # lint: allow[cache-mode-dispatch] audit-matrix input, not layout dispatch
     astra = cache_mode in ("vq", "paged_vq")
     cfg, params = _small_model(arch, astra)
+    mesh_kw = {}
+    num_shards = 1
+    if seq_sharded:
+        from repro.compat import make_mesh
+        from repro.core.sequence_parallel import MeshContext
+
+        n = jax.device_count()
+        num_shards = n if max_len % n == 0 else 1
+        mesh_kw["mesh_ctx"] = MeshContext(
+            mesh=make_mesh((num_shards,), ("model",)), batch_axes=(),
+            seq_axis="model")
     eng = ServingEngine(cfg, params, max_len=max_len, astra_mode="off",
                         cache_mode=cache_mode, page_size=8, decode_chunk=2,
-                        use_pallas=use_pallas, donate=donate)
-    tag = f"{cache_mode}{'+pallas' if use_pallas else ''}"
+                        use_pallas=use_pallas, donate=donate, **mesh_kw)
+    tag = (f"{cache_mode}{'+pallas' if use_pallas else ''}"
+           f"{f'+mesh{num_shards}' if seq_sharded else ''}")
 
     before = dict(kops.KERNEL_INVOCATIONS)
     toks = np.tile(np.arange(1, prompt_len + 1, dtype=np.int32), (batch, 1))
@@ -198,6 +225,8 @@ def audit_serving_step(cache_mode: str = "fp", use_pallas: bool = False, *,
         "arch": arch,
         "cache_mode": cache_mode,
         "use_pallas": use_pallas,
+        "seq_sharded": seq_sharded,
+        "num_shards": num_shards,
         "kernel_invocations": delta,
         "steps": [a.report() for a in audits],
     }
@@ -272,14 +301,15 @@ def audit_chunked_admission(cache_mode: str = "paged", *,
     return findings, report
 
 
-def audit_matrix(matrix: Sequence[Tuple[str, bool]] = DEFAULT_MATRIX,
+def audit_matrix(matrix: Sequence[Tuple] = DEFAULT_MATRIX,
                  **kw) -> Tuple[List[Finding], List[dict]]:
-    """Run :func:`audit_serving_step` over a (cache_mode, use_pallas)
-    matrix; returns merged findings + one report per combo."""
+    """Run :func:`audit_serving_step` over a (cache_mode, use_pallas[,
+    seq_sharded]) matrix; returns merged findings + one report per combo."""
     findings: List[Finding] = []
     reports: List[dict] = []
-    for cache_mode, use_pallas in matrix:
-        f, r = audit_serving_step(cache_mode, use_pallas, **kw)
+    for cache_mode, use_pallas, *rest in matrix:
+        seq_sharded = bool(rest[0]) if rest else False
+        f, r = audit_serving_step(cache_mode, use_pallas, seq_sharded, **kw)
         findings.extend(f)
         reports.append(r)
     return findings, reports

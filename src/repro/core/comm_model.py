@@ -97,6 +97,35 @@ def compression_ratio(num_layers: int, d_model: int, groups: int,
     )
 
 
+# -- disaggregated prefill/decode: KV-cache migration -------------------------
+
+
+def migration_time_s(num_bytes: float, bandwidth_mbps: float, *,
+                     link_latency_s: float = 0.002) -> float:
+    """One prefill -> decode cache hand-off over a ``bandwidth_mbps`` link:
+    a single point-to-point transfer, one round of link latency."""
+    return (num_bytes * 8.0) / (bandwidth_mbps * 1e6) + link_latency_s
+
+
+def migration_report(fp_bytes: float, coded_bytes: float,
+                     bandwidths_mbps=(10.0, 100.0, 500.0)) -> Dict:
+    """Hand-off cost table for the disaggregated engines: the measured
+    coded (VQ) migration against the full-precision cache the same
+    requests would have shipped, at the paper's bandwidth grid."""
+    fp_bytes = float(fp_bytes)
+    coded_bytes = float(coded_bytes)
+    return {
+        "fp_bytes": fp_bytes,
+        "coded_bytes": coded_bytes,
+        "compression": fp_bytes / max(coded_bytes, 1.0),
+        "transfer_s": {
+            f"{bw:g}": {"fp": migration_time_s(fp_bytes, bw),
+                        "coded": migration_time_s(coded_bytes, bw)}
+            for bw in bandwidths_mbps
+        },
+    }
+
+
 # -- end-to-end latency model ------------------------------------------------
 
 

@@ -305,6 +305,33 @@ def partial_attention_stats(
     return m, l, o
 
 
+def chunk_partial_stats(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    valid: jax.Array,
+    softcap: float = 0.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard flash statistics for a W-wide chunk of queries.
+
+    q: (B, W, H, hd); k/v: (B, T_loc, Hkv, hd); valid: (B, W, T_loc) bool —
+    per-query causal/window/slot validity.  Returns (m, l, o) shaped
+    (B, H, W), (B, H, W), (B, W, H, hd): the W-wide generalization of
+    ``partial_attention_stats``, mergeable by ``merge_partial_stats``
+    unchanged (its ``moveaxis(·, 1, 2)`` reshuffles are width-agnostic).
+    """
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s = _softcap(_gqa_scores(q, k, scale), softcap)  # (B, H, W, T)
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # (B, H, W)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)  # (B, H, W)
+    o = _gqa_combine(p, v)  # (B, W, H, hd) un-normalised
+    return m, l, o
+
+
 def merge_partial_stats(
     m: jax.Array, l: jax.Array, o: jax.Array, axis_name: str
 ) -> jax.Array:

@@ -297,3 +297,128 @@ def chunk_flash_attention(
     )(jnp.reshape(jnp.asarray(chunk_start, jnp.int32), (1,)), qt, kt, vt,
       k_pos.astype(jnp.int32).reshape(1, sk))
     return jnp.moveaxis(out, 1, 2)[:, :w]
+
+
+def _chunk_partials_kernel(cs_ref, q_ref, k_ref, v_ref, kp_ref, m_ref, l_ref,
+                           acc_ref, m_s, l_s, acc_s, *, bq, bkv, nkb, hd,
+                           causal, window, softcap):
+    """``_chunk_kernel`` body, but the emit keeps the flash statistics
+    un-normalised: (m, l, acc) per query row, for cross-shard merging."""
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        flash.init_state(m_s, l_s, acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)      # (bq, hd)
+    k_t = k_ref[0, 0].astype(jnp.float32)    # (bkv, hd)
+    v_t = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k_t, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = cs_ref[0] + qi * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 0)
+    k_pos = jnp.broadcast_to(kp_ref[0][None, :], (bq, bkv))
+    valid = k_pos >= 0
+    if causal:
+        valid = jnp.logical_and(valid, k_pos <= q_pos)
+    if window:
+        valid = jnp.logical_and(valid, k_pos > q_pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+    flash.update(m_s, l_s, acc_s, s, valid, v_t)
+
+    @pl.when(ki == nkb - 1)
+    def _emit():
+        m_ref[0, 0] = m_s[...]
+        l_ref[0, 0] = l_s[...]
+        acc_ref[0, 0] = acc_s[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_kv",
+                     "interpret"))
+def chunk_flash_partials(
+    q: jax.Array,      # (B, W, H, hd) — one prefill chunk's queries
+    k: jax.Array,      # (B, S_loc, Hkv, hd) — one shard's attention view
+    v: jax.Array,
+    k_pos: jax.Array,  # (S_loc,) int32 global key positions, negative = invalid
+    chunk_start: jax.Array,  # () int32 — global offset of the chunk (traced)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """Partials twin of ``chunk_flash_attention`` for the seq-sharded
+    chunked prefill: same masking and online-softmax recurrence, but the
+    per-row statistics leave the kernel un-normalised so the caller merges
+    them across shards with ``merge_partial_stats``.  Returns
+    (m (B, H, W), l (B, H, W), acc (B, W, H, hd)), fp32; padded query rows
+    are sliced off (their m stays at the flash init floor)."""
+    from repro.kernels.ops import resolve_interpret
+
+    b, w, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    bq = min(block_q, w)
+    bkv = min(block_kv, s)
+    pad_q = (-w) % bq
+    pad_kv = (-s) % bkv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_kv), constant_values=-1)
+    wq, sk = w + pad_q, s + pad_kv
+    nkb = sk // bkv
+
+    qt = jnp.moveaxis(q, 2, 1)   # (B, H, Wq, hd)
+    kt = jnp.moveaxis(k, 2, 1)   # (B, Hkv, Sk, hd)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    grid = (b, h, wq // bq, nkb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki, cs: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda bi, hi, qi, ki, cs: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda bi, hi, qi, ki, cs: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, bkv), lambda bi, hi, qi, ki, cs: (0, ki)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, ki, cs: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, ki, cs: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, bq, hd),
+                         lambda bi, hi, qi, ki, cs: (bi, hi, qi, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_chunk_partials_kernel, bq=bq, bkv=bkv, nkb=nkb,
+                             hd=hd, causal=causal, window=window,
+                             softcap=softcap)
+    m, l, acc = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, wq), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, wq), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, wq, hd), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(jnp.reshape(jnp.asarray(chunk_start, jnp.int32), (1,)), qt, kt, vt,
+      k_pos.astype(jnp.int32).reshape(1, sk))
+    return m[:, :, :w], l[:, :, :w], jnp.moveaxis(acc, 1, 2)[:, :w]

@@ -34,7 +34,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.mixed_attn import chunk_flash_attention, mixed_flash_attention
+from repro.kernels.mixed_attn import (
+    chunk_flash_attention,
+    chunk_flash_partials,
+    mixed_flash_attention,
+)
 from repro.kernels.vq_assign import vq_assign
 from repro.kernels.vq_decode_attn import fp_decode_attention, vq_decode_attention
 
@@ -134,6 +138,28 @@ def chunk_attention(q, k, v, k_pos, chunk_start, *, causal=True, window=0,
                                  window=window, softcap=softcap,
                                  block_q=block_q, block_kv=block_kv,
                                  interpret=interpret)
+
+
+def chunk_attention_partials(q, k, v, k_pos, chunk_start, *, causal=True,
+                             window=0, softcap=0.0, use_pallas: bool = False,
+                             block_q=128, block_kv=128):
+    """Flash partials (m, l, acc) for one chunked-prefill step over one
+    sequence shard's attention view — the chunk-wide sibling of
+    ``fp_decode_partials`` (seq-sharded chunked prefill merges across
+    shards with ``merge_partial_stats`` semantics).
+
+    q: (B, W, H, hd); k/v: (B, S_loc, Hkv, hd); k_pos: (S_loc,) int32
+    global key positions (negative = invalid slot); chunk_start: () traced
+    int32.  Returns (m (B, H, W), l (B, H, W), acc (B, W, H, hd))."""
+    if use_pallas:
+        KERNEL_INVOCATIONS["chunk_attention_partials"] += 1
+        return chunk_flash_partials(q, k, v, k_pos, chunk_start,
+                                    causal=causal, window=window,
+                                    softcap=softcap, block_q=block_q,
+                                    block_kv=block_kv)
+    return ref.chunk_flash_partials_ref(q, k, v, k_pos, chunk_start,
+                                        causal=causal, window=window,
+                                        softcap=softcap)
 
 
 # ---------------------------------------------------------------------------

@@ -136,6 +136,51 @@ def chunk_flash_ref(
     return out
 
 
+def chunk_flash_partials_ref(
+    q: jax.Array,      # (B, W, H, hd)
+    k: jax.Array,      # (B, S, Hkv, hd)
+    v: jax.Array,
+    k_pos: jax.Array,  # (S,) int32 global key positions, negative = invalid
+    chunk_start,       # () int32 global offset of the chunk
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+):
+    """Oracle for ``chunk_flash_partials``: same masking as
+    ``chunk_flash_ref`` but returns the un-normalised flash statistics
+    (m (B, H, W), l (B, H, W), acc (B, W, H, hd)) for cross-shard merging
+    via ``core.mixed_attention.merge_partial_stats``."""
+    b, w, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    q_pos = chunk_start + jnp.arange(w)
+    valid = k_pos[None, :] >= 0  # (W, S)
+    if causal:
+        valid = valid & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+
+    m_o = jnp.zeros((b, h, w), jnp.float32)
+    l_o = jnp.zeros((b, h, w), jnp.float32)
+    a_o = jnp.zeros((b, w, h, hd), jnp.float32)
+    for bi in range(b):
+        for hi in range(h):
+            g = hi // rep
+            sc = (q[bi, :, hi].astype(jnp.float32)
+                  @ k[bi, :, g].astype(jnp.float32).T) / jnp.sqrt(
+                jnp.asarray(hd, jnp.float32))
+            if softcap:
+                sc = softcap * jnp.tanh(sc / softcap)
+            sc = jnp.where(valid, sc, NEG_INF)
+            m = jnp.max(sc, axis=-1)  # (W,)
+            p = jnp.where(valid, jnp.exp(sc - m[:, None]), 0.0)
+            m_o = m_o.at[bi, hi].set(m)
+            l_o = l_o.at[bi, hi].set(jnp.sum(p, axis=-1))
+            a_o = a_o.at[bi, :, hi].set(p @ v[bi, :, g].astype(jnp.float32))
+    return m_o, l_o, a_o
+
+
 def _ring_valid(length, s, window):
     """Ring-semantics slot validity for one row: slot j holds the greatest
     position ≡ j (mod s) at or below ``length`` (== j when length < s)."""

@@ -57,6 +57,13 @@ def main() -> None:
                          "config name")
     ap.add_argument("--draft-checkpoint", default="",
                     help="checkpoint for the paired draft model")
+    ap.add_argument("--disagg", default="", metavar="P:D",
+                    help="disaggregated serving: prefill on P devices, "
+                         "decode on D (seq-sharded within each group when "
+                         ">1); the finished prefill cache migrates between "
+                         "the groups — as VQ codes under --cache-mode vq — "
+                         "and the hand-off bytes are reported against the "
+                         "fp baseline at 10/100/500 Mbps")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -85,13 +92,24 @@ def main() -> None:
             dparams = checkpoint.restore(args.draft_checkpoint, dparams)
         draft = (dcfg, dparams)
 
-    engine = ServingEngine(
-        cfg, params, max_len=args.max_len,
-        astra_mode="sim" if cfg.astra.enabled else "off",
-        cache_mode=args.cache_mode, page_size=args.page_size,
-        decode_chunk=args.decode_chunk or None,
-        use_pallas=args.use_pallas,
-        speculative=args.speculative, draft=draft)
+    if args.disagg:
+        from repro.serving.disagg import DisaggregatedEngine
+
+        if args.speculative:
+            raise SystemExit("--disagg does not compose with --speculative")
+        engine = DisaggregatedEngine(
+            cfg, params, max_len=args.max_len, split=args.disagg,
+            astra_mode="off", cache_mode=args.cache_mode,
+            decode_chunk=args.decode_chunk or None,
+            use_pallas=args.use_pallas)
+    else:
+        engine = ServingEngine(
+            cfg, params, max_len=args.max_len,
+            astra_mode="sim" if cfg.astra.enabled else "off",
+            cache_mode=args.cache_mode, page_size=args.page_size,
+            decode_chunk=args.decode_chunk or None,
+            use_pallas=args.use_pallas,
+            speculative=args.speculative, draft=draft)
 
     rng = np.random.RandomState(args.seed)
     prompts = [
@@ -113,9 +131,18 @@ def main() -> None:
               f"tokens/round={engine.spec_tokens / rounds:.2f}")
     for i, toks in enumerate(result.tokens[:4]):
         print(f"  req{i} len={len(prompts[i])} -> {toks[:12]}...")
-    comm = engine.prefill_comm_bits_per_device(
-        max(len(p) for p in prompts), 4)
-    print(f"ASTRA prefill wire bits/device (4 dev): {comm:,.0f}")
+    if args.disagg:
+        rep = engine.migration_report()
+        print(f"disagg {rep['split']} cache_mode={rep['cache_mode']}: "
+              f"{rep['bytes_per_migration']:,.0f} B/migration, "
+              f"{rep['compression']:.1f}x vs fp")
+        for bw, t in rep["transfer_s"].items():
+            print(f"  {bw} Mbps: fp {t['fp']*1e3:.2f} ms -> "
+                  f"coded {t['coded']*1e3:.2f} ms")
+    else:
+        comm = engine.prefill_comm_bits_per_device(
+            max(len(p) for p in prompts), 4)
+        print(f"ASTRA prefill wire bits/device (4 dev): {comm:,.0f}")
 
 
 if __name__ == "__main__":

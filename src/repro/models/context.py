@@ -26,8 +26,9 @@ class StepCtx:
     #   vq       — codes-only slab (Appendix G analogue)
     #   paged    — block-table page pools, fp value pages
     #   paged_vq — block-table page pools, uint8/16 VQ code pages
-    # Paged modes need block tables (serving.kv_cache.PagedKVCache) and are
-    # single-host (seq-sharded decode keeps the fp/vq shard cache).
+    # Paged modes need block tables (serving.kv_cache.PagedKVCache); under
+    # a seq-sharded mesh every mode wraps in the shard cache (paged pools
+    # split into per-shard allocators with shard-local page ids).
     cache_mode: str = "fp"
     # rematerialise layer activations in the backward pass (big-model train)
     remat: bool = False

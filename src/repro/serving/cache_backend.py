@@ -53,6 +53,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import vq
 from repro.core.mixed_attention import (
+    chunk_partial_stats,
     merge_partial_stats,
     partial_attention_stats,
 )
@@ -453,9 +454,12 @@ class CacheBackend:
     @property
     def chunkable(self) -> bool:
         """Whether the engines may drive this backend through the chunked
-        prefill pipeline (the seq-sharded shard cache keeps the one-shot
-        ASTRA sequence-parallel prefill)."""
-        return not self.sharded
+        prefill pipeline.  Every layout is chunkable — including the
+        seq-sharded shard cache, whose chunk step scatters shard-locally and
+        merges per-shard partial stats (``_chunk_sharded``); only astra-sim
+        prefill (engine-level, not a layout property) still needs the
+        one-shot padded path."""
+        return True
 
     # -- engine level (host) ------------------------------------------------
     def make_state(self, cfg, *, slots: int, max_len: int, ctx, dtype=None,
@@ -1000,11 +1004,12 @@ class PagedVQBackend(PagedBackend):
 
 
 class ShardedBackend(CacheBackend):
-    """Sequence-sharded shard cache: the slab layouts with the global-layer
-    decode running under shard_map over ``mesh.seq_axis`` — each device owns
-    a disjoint sequence shard and partial-softmax stats are merged
-    flash-decoding style (windowed layers keep the replicated ring; prefill
-    and init are the inner slab's)."""
+    """Sequence-sharded shard cache: the inner layout (slab or paged) with
+    the global-layer decode *and* chunked prefill running under shard_map
+    over ``mesh.seq_axis`` — each device owns a disjoint sequence shard
+    (for paged pools, a disjoint page-id range) and partial-softmax stats
+    are merged flash-decoding style (windowed layers keep the replicated
+    ring; one-shot prefill and init are the inner layout's)."""
 
     sharded = True
 
@@ -1012,12 +1017,13 @@ class ShardedBackend(CacheBackend):
         self.inner = inner
         self.name = f"sharded_{inner.name}"
         self.vq_codes = inner.vq_codes
+        self.paged = inner.paged
 
     def init_cache(self, cfg, kind, batch, max_len, dtype, *, page_size=0,
                    num_pages=0, prefill_scratch=False):
-        # never chunked (chunkable is False), so no prefill scratch either
         return self.inner.init_cache(cfg, kind, batch, max_len, dtype,
-                                     page_size=page_size, num_pages=num_pages)
+                                     page_size=page_size, num_pages=num_pages,
+                                     prefill_scratch=prefill_scratch)
 
     def prefill_write(self, cache, k, v, *, ctx, kind, vq_params=None,
                       block_tables=None, lengths=None):
@@ -1030,11 +1036,52 @@ class ShardedBackend(CacheBackend):
                       kind, vq_params=None, block_tables=None):
         cfg = ctx.cfg
         window = attn.kind_window(kind, cfg)
-        if window:  # ring cache, replicated over the seq axis (small)
-            return _ring_decode(params, q, k_new, v_new, cache, lengths,
-                                window, cfg.attn_logit_softcap, ctx)
+        if window:  # ring cache / page ring, replicated over the seq axis
+            return self.inner.decode_attend(
+                params, q, k_new, v_new, cache, lengths, ctx=ctx, kind=kind,
+                vq_params=vq_params, block_tables=block_tables)
+        if self.paged:
+            table = _table_for(block_tables, kind, cfg)
+            return _paged_decode_sharded(params, q, k_new, v_new, cache,
+                                         lengths, table, ctx, cfg,
+                                         cfg.attn_logit_softcap, vq_params)
         return _decode_sharded(params, q, k_new, v_new, cache, lengths,
                                ctx, cfg, cfg.attn_logit_softcap, vq_params)
+
+    def chunk_attend(self, params, q, k_new, v_new, cache, chunk_start,
+                     lengths, *, ctx, kind, vq_params=None,
+                     block_tables=None, history_len=0):
+        cfg = ctx.cfg
+        window = attn.kind_window(kind, cfg)
+        if window:  # replicated ring / page ring: the inner layout's path
+            return self.inner.chunk_attend(
+                params, q, k_new, v_new, cache, chunk_start, lengths,
+                ctx=ctx, kind=kind, vq_params=vq_params,
+                block_tables=block_tables, history_len=history_len)
+        if self.vq_codes:
+            _require_scratch(cache, self.name)
+        if self.paged:
+            table = _table_for(block_tables, kind, cfg)
+            return _paged_chunk_sharded(params, q, k_new, v_new, cache,
+                                        chunk_start, table, ctx, cfg,
+                                        cfg.attn_logit_softcap, vq_params)
+        return _chunk_sharded(params, q, k_new, v_new, cache, chunk_start,
+                              ctx, cfg, cfg.attn_logit_softcap, vq_params)
+
+    def verify_rollback(self, cache, old_cache, starts, accepted,
+                        num_tokens, *, ctx, kind, block_tables=None):
+        # rollback only ever touches windowed rings, which stay replicated
+        # under the mesh — the inner layout's restore applies verbatim
+        return self.inner.verify_rollback(cache, old_cache, starts, accepted,
+                                          num_tokens, ctx=ctx, kind=kind,
+                                          block_tables=block_tables)
+
+    def make_state(self, cfg, *, slots, max_len, ctx, dtype=None,
+                   page_size=16, num_pages=None):
+        return self.inner.make_state(cfg, slots=slots, max_len=max_len,
+                                     ctx=ctx, dtype=dtype,
+                                     page_size=page_size,
+                                     num_pages=num_pages)
 
     def bytes_report(self, cfg, *, max_len, slots=1, page_size=16,
                      num_pages=None, dtype_bytes=4):
@@ -1143,6 +1190,316 @@ def _decode_sharded(params, q, k_new, v_new, cache, lengths, ctx, cfg, cap,
     return y, new_cache
 
 
+def _shard_chunk_write(buf: jax.Array, vals: jax.Array,
+                       loc_pos: jax.Array) -> jax.Array:
+    """Write a chunk (B, W, ...) into a shard-local (B, S_loc, ...) slab at
+    shard-local positions ``loc_pos`` (W,).  Positions outside
+    ``[0, S_loc)`` — the parts of the chunk other shards own, and bucket
+    overhang — are routed to index ``S_loc`` and dropped: a negative traced
+    index would wrap and a clamp would shift the write over live history."""
+    s_loc = buf.shape[1]
+    dest = jnp.where((loc_pos >= 0) & (loc_pos < s_loc), loc_pos, s_loc)
+    return buf.at[:, dest].set(vals.astype(buf.dtype), mode="drop")
+
+
+def _chunk_shard_merge(q_l, k_view, v_view, chunk_start, off, cap, axis,
+                       pallas_on):
+    """Score one chunk's W queries against one shard's local view (keys at
+    global positions ``off .. off + S_loc - 1``) and merge the flash
+    partials across the mesh axis — ``merge_partial_stats`` is
+    width-agnostic, so the decode merge applies to W-wide stats verbatim."""
+    b, w = q_l.shape[:2]
+    s_loc = k_view.shape[1]
+    k_pos = off + jnp.arange(s_loc)
+    if pallas_on:
+        from repro.kernels.ops import chunk_attention_partials
+
+        m_, l_, acc_ = chunk_attention_partials(
+            q_l, k_view, v_view, k_pos, chunk_start, softcap=cap,
+            use_pallas=True)
+    else:
+        q_pos = chunk_start + jnp.arange(w)
+        valid = jnp.broadcast_to(
+            (k_pos[None, :] <= q_pos[:, None])[None], (b, w, s_loc))
+        m_, l_, acc_ = chunk_partial_stats(q_l, k_view, v_view, valid=valid,
+                                           softcap=cap)
+    return merge_partial_stats(m_, l_, acc_, axis)
+
+
+def _chunk_sharded(params, q, k_new, v_new, cache, chunk_start, ctx, cfg,
+                   cap, vq_params):
+    """Seq-sharded chunked prefill over slab caches (global layers): every
+    shard scatters the chunk positions it owns into its slab shard
+    (out-of-shard positions drop), scores the whole chunk against its local
+    prefix, and the partial softmax stats merge across the mesh axis — the
+    ``_decode_sharded`` flash-decoding merge widened to W queries with a
+    per-query causal mask.  Junk beyond a row's prompt is causally
+    unreachable from any valid query, exactly as in the single-host slab
+    path, so no length mask is needed; the per-shard view is already
+    ``max_len / n_shards`` so the static ``history_len`` crop is moot."""
+    axis = ctx.mesh.seq_axis
+    bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+    b, w = q.shape[:2]
+    vq_cache = "k_codes" in cache
+    pallas_on = ctx.use_pallas
+    cs = jnp.asarray(chunk_start, jnp.int32)
+
+    def body(q_l, k_n, v_n, ck, cv, kf, vf, cs_l, cb_k, cb_v):
+        s_loc = ck.shape[1]
+        off = jax.lax.axis_index(axis) * s_loc
+        loc_pos = cs_l + jnp.arange(w) - off
+        if vq_cache:
+            spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups,
+                             cfg.astra.codebook_size)
+            bl = q_l.shape[0]
+            kc = vq.encode({"codebook": cb_k}, k_n.reshape(bl, w, -1), spec)
+            vc = vq.encode({"codebook": cb_v}, v_n.reshape(bl, w, -1), spec)
+            ck2 = _shard_chunk_write(ck, kc, loc_pos)
+            cv2 = _shard_chunk_write(cv, vc, loc_pos)
+            kf2 = _shard_chunk_write(kf, k_n, loc_pos)
+            vf2 = _shard_chunk_write(vf, v_n, loc_pos)
+            k_view, v_view = kf2, vf2
+        else:
+            ck2 = _shard_chunk_write(ck, k_n, loc_pos)
+            cv2 = _shard_chunk_write(cv, v_n, loc_pos)
+            kf2, vf2 = kf, vf
+            k_view, v_view = ck2, cv2
+        out = _chunk_shard_merge(q_l, k_view, v_view, cs_l, off, cap, axis,
+                                 pallas_on)
+        return out, ck2, cv2, kf2, vf2
+
+    qspec = P(bspec, None, None, None)
+    cspec4 = P(bspec, axis, None, None)
+    cspec3 = P(bspec, axis, None)
+    if vq_cache:
+        in_specs = (qspec, qspec, qspec, cspec3, cspec3, cspec4, cspec4,
+                    P(), P(), P())
+        out_specs = (qspec, cspec3, cspec3, cspec4, cspec4)
+        cb_k = vq_params["k"]["codebook"]
+        cb_v = vq_params["v"]["codebook"]
+        ck_in, cv_in = cache["k_codes"], cache["v_codes"]
+        kf_in, vf_in = cache["k_fp"], cache["v_fp"]
+    else:
+        in_specs = (qspec, qspec, qspec, cspec4, cspec4, P(), P(),
+                    P(), P(), P())
+        out_specs = (qspec, cspec4, cspec4, P(), P())
+        cb_k = cb_v = jnp.zeros((1,), jnp.float32)
+        ck_in, cv_in = cache["k"], cache["v"]
+        kf_in = vf_in = jnp.zeros((1,), jnp.float32)
+
+    out, ck2, cv2, kf2, vf2 = shard_map(
+        body, mesh=ctx.mesh.mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(q, k_new, v_new, ck_in, cv_in, kf_in, vf_in, cs,
+                         cb_k, cb_v)
+    y = out.reshape(b, w, -1) @ params["wo"]
+    new_cache = ({"k_codes": ck2, "v_codes": cv2, "k_fp": kf2, "v_fp": vf2}
+                 if vq_cache else {"k": ck2, "v": cv2})
+    return y, new_cache
+
+
+def _paged_shard_geometry(cache, table, ctx):
+    """Static geometry of a sharded page pool: shard i owns the page-id
+    range ``[i * n_loc, (i+1) * n_loc)`` (``PagedKVCache`` allocates table
+    entry j from shard ``j // span_loc``, so shard i's table columns hold
+    only its own ids) and the sequence range ``[i * s_loc, (i+1) * s_loc)``
+    of every request."""
+    n_shards = ctx.mesh.num_seq_shards
+    vq_pool = "k_code_pages" in cache
+    kp = cache["k_code_pages" if vq_pool else "k_pages"]
+    ps = kp.shape[1]
+    span = table.shape[1]
+    if span % n_shards or kp.shape[0] % n_shards:
+        raise ValueError(
+            f"sharded paged pools need the table span ({span}) and pool "
+            f"size ({kp.shape[0]}) divisible by the {n_shards} sequence "
+            f"shards")
+    span_loc = span // n_shards
+    return vq_pool, ps, span_loc, span_loc * ps
+
+
+def _paged_decode_sharded(params, q, k_new, v_new, cache, lengths, table,
+                          ctx, cfg, cap, vq_params):
+    """Distributed decode over sharded page pools: the owning shard
+    scatter-writes the token into its local page (everyone else hits its
+    local scratch page 0), each shard gathers its own table slice into a
+    contiguous local view, and the per-shard flash partials merge exactly
+    as in ``_decode_sharded``."""
+    axis = ctx.mesh.seq_axis
+    bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+    b = q.shape[0]
+    vq_pool, ps, span_loc, s_loc = _paged_shard_geometry(cache, table, ctx)
+    kp_in = cache["k_code_pages" if vq_pool else "k_pages"]
+    vp_in = cache["v_code_pages" if vq_pool else "v_pages"]
+    pallas_on = ctx.use_pallas or ctx.use_pallas_decode
+    kernel_ok = pallas_on and vq_pool and _coded_kernel_ok(cfg)
+
+    def body(q_l, k_n, v_n, kp, vp, tab, lens, cb_k, cb_v):
+        n_loc = kp.shape[0]
+        i = jax.lax.axis_index(axis)
+        off = i * s_loc
+        tab_loc = jax.lax.dynamic_slice_in_dim(tab, i * span_loc, span_loc,
+                                               axis=1)
+        # global -> shard-local page ids; ungranted entries (0) clip to the
+        # local scratch page, whose junk the validity mask already rejects
+        loc_ids = jnp.clip(tab_loc - i * n_loc, 0, n_loc - 1)
+        mine = (lens >= off) & (lens < off + s_loc)
+        lpos = jnp.clip(lens - off, 0, s_loc - 1)
+        entry = jnp.take_along_axis(loc_ids, (lpos // ps)[:, None],
+                                    axis=1)[:, 0]
+        dest = jnp.where(mine, entry, 0)
+        offs = jnp.mod(lpos, ps)
+        bl = q_l.shape[0]
+        lens_local = lens - off  # negative => nothing valid on this shard
+        if vq_pool:
+            spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups,
+                             cfg.astra.codebook_size)
+            kc = vq.encode({"codebook": cb_k}, k_n.reshape(bl, 1, -1), spec)
+            vc = vq.encode({"codebook": cb_v}, v_n.reshape(bl, 1, -1), spec)
+            kp2 = kp.at[dest, offs].set(kc[:, 0].astype(kp.dtype))
+            vp2 = vp.at[dest, offs].set(vc[:, 0].astype(vp.dtype))
+            codes_k = kp2[loc_ids].reshape(bl, s_loc, spec.groups)
+            codes_v = vp2[loc_ids].reshape(bl, s_loc, spec.groups)
+            if kernel_ok:
+                from repro.kernels.ops import decode_attention_partials
+
+                m_, l_, acc_ = decode_attention_partials(
+                    q_l[:, 0], codes_k, codes_v, cb_k, cb_v, lens_local,
+                    softcap=cap, use_pallas=True)
+                out = merge_partial_stats(m_[..., None], l_[..., None],
+                                          acc_[:, None], axis)
+                return out, kp2, vp2
+            k_shard = vq.decode({"codebook": cb_k},
+                                codes_k.astype(jnp.int32), spec).reshape(
+                bl, s_loc, cfg.num_kv_heads, cfg.head_dim)
+            v_shard = vq.decode({"codebook": cb_v},
+                                codes_v.astype(jnp.int32), spec).reshape(
+                bl, s_loc, cfg.num_kv_heads, cfg.head_dim)
+        else:
+            kp2 = kp.at[dest, offs].set(k_n[:, 0].astype(kp.dtype))
+            vp2 = vp.at[dest, offs].set(v_n[:, 0].astype(vp.dtype))
+            k_shard = kp2[loc_ids].reshape((bl, s_loc) + kp.shape[2:])
+            v_shard = vp2[loc_ids].reshape((bl, s_loc) + vp.shape[2:])
+        if pallas_on:
+            from repro.kernels.ops import fp_decode_partials
+
+            m_, l_, acc_ = fp_decode_partials(q_l[:, 0], k_shard, v_shard,
+                                              lens_local, softcap=cap,
+                                              use_pallas=True)
+            out = merge_partial_stats(m_[..., None], l_[..., None],
+                                      acc_[:, None], axis)
+            return out, kp2, vp2
+        pos = off + jnp.arange(s_loc)[None, :]
+        valid = pos <= lens[:, None]
+        m, l, o = partial_attention_stats(q_l, k_shard, v_shard,
+                                          k_valid=valid, softcap=cap)
+        out = merge_partial_stats(m, l, o, axis)
+        return out, kp2, vp2
+
+    qspec = P(bspec, None, None, None)
+    pspec = P(*((axis,) + (None,) * (kp_in.ndim - 1)))
+    in_specs = (qspec, qspec, qspec, pspec, pspec, P(bspec, None),
+                P(bspec), P(), P())
+    out_specs = (qspec, pspec, pspec)
+    if vq_pool:
+        cb_k = vq_params["k"]["codebook"]
+        cb_v = vq_params["v"]["codebook"]
+    else:
+        cb_k = cb_v = jnp.zeros((1,), jnp.float32)
+    out, kp2, vp2 = shard_map(
+        body, mesh=ctx.mesh.mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(q, k_new, v_new, kp_in, vp_in, table, lengths,
+                         cb_k, cb_v)
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    new_cache = ({"k_code_pages": kp2, "v_code_pages": vp2} if vq_pool
+                 else {"k_pages": kp2, "v_pages": vp2})
+    return y, new_cache
+
+
+def _paged_chunk_sharded(params, q, k_new, v_new, cache, chunk_start, table,
+                         ctx, cfg, cap, vq_params):
+    """Seq-sharded chunked prefill over sharded page pools: token-granular
+    scatter of the chunk positions this shard owns through its table slice
+    (everything else routes to the local scratch page), then the same
+    local-view score + cross-shard partial merge as ``_chunk_sharded``.
+    vq pools additionally carry the fp prefill-view scratch as sharded
+    slabs, exactly mirroring the single-host paged_vq chunk step."""
+    axis = ctx.mesh.seq_axis
+    bspec = ctx.mesh.batch_axes if ctx.mesh.batch_axes else None
+    b, w = q.shape[:2]
+    vq_pool, ps, span_loc, s_loc = _paged_shard_geometry(cache, table, ctx)
+    kp_in = cache["k_code_pages" if vq_pool else "k_pages"]
+    vp_in = cache["v_code_pages" if vq_pool else "v_pages"]
+    pallas_on = ctx.use_pallas
+    cs = jnp.asarray(chunk_start, jnp.int32)
+
+    def body(q_l, k_n, v_n, kp, vp, kf, vf, tab, cs_l, cb_k, cb_v):
+        n_loc = kp.shape[0]
+        i = jax.lax.axis_index(axis)
+        off = i * s_loc
+        tab_loc = jax.lax.dynamic_slice_in_dim(tab, i * span_loc, span_loc,
+                                               axis=1)
+        loc_ids = jnp.clip(tab_loc - i * n_loc, 0, n_loc - 1)
+        bl = q_l.shape[0]
+        loc_pos = cs_l + jnp.arange(w) - off  # (W,) shard-local positions
+        inside = (loc_pos >= 0) & (loc_pos < s_loc)
+        page_idx = jnp.clip(loc_pos // ps, 0, span_loc - 1)
+        entry = loc_ids[:, page_idx]  # (B, W)
+        dest = jnp.where(inside[None, :], entry, 0)
+        offs = jnp.broadcast_to(jnp.where(inside, jnp.mod(loc_pos, ps), 0),
+                                (bl, w))
+        if vq_pool:
+            spec = vq.VQSpec(cfg.d_kv, cfg.astra.groups,
+                             cfg.astra.codebook_size)
+            kc = vq.encode({"codebook": cb_k}, k_n.reshape(bl, w, -1), spec)
+            vc = vq.encode({"codebook": cb_v}, v_n.reshape(bl, w, -1), spec)
+            kp2 = kp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                kc.reshape((bl * w,) + kc.shape[2:]).astype(kp.dtype))
+            vp2 = vp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                vc.reshape((bl * w,) + vc.shape[2:]).astype(vp.dtype))
+            kf2 = _shard_chunk_write(kf, k_n, loc_pos)
+            vf2 = _shard_chunk_write(vf, v_n, loc_pos)
+            k_view, v_view = kf2, vf2
+        else:
+            kp2 = kp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                k_n.reshape((bl * w,) + k_n.shape[2:]).astype(kp.dtype))
+            vp2 = vp.at[dest.reshape(-1), offs.reshape(-1)].set(
+                v_n.reshape((bl * w,) + v_n.shape[2:]).astype(vp.dtype))
+            kf2, vf2 = kf, vf
+            k_view = kp2[loc_ids].reshape((bl, s_loc) + kp.shape[2:])
+            v_view = vp2[loc_ids].reshape((bl, s_loc) + vp.shape[2:])
+        out = _chunk_shard_merge(q_l, k_view, v_view, cs_l, off, cap, axis,
+                                 pallas_on)
+        return out, kp2, vp2, kf2, vf2
+
+    qspec = P(bspec, None, None, None)
+    cspec4 = P(bspec, axis, None, None)
+    pspec = P(*((axis,) + (None,) * (kp_in.ndim - 1)))
+    tspec = P(bspec, None)
+    if vq_pool:
+        in_specs = (qspec, qspec, qspec, pspec, pspec, cspec4, cspec4,
+                    tspec, P(), P(), P())
+        out_specs = (qspec, pspec, pspec, cspec4, cspec4)
+        cb_k = vq_params["k"]["codebook"]
+        cb_v = vq_params["v"]["codebook"]
+        kf_in, vf_in = cache["k_fp"], cache["v_fp"]
+    else:
+        in_specs = (qspec, qspec, qspec, pspec, pspec, P(), P(),
+                    tspec, P(), P(), P())
+        out_specs = (qspec, pspec, pspec, P(), P())
+        cb_k = cb_v = jnp.zeros((1,), jnp.float32)
+        kf_in = vf_in = jnp.zeros((1,), jnp.float32)
+
+    out, kp2, vp2, kf2, vf2 = shard_map(
+        body, mesh=ctx.mesh.mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(q, k_new, v_new, kp_in, vp_in, kf_in, vf_in, table,
+                         cs, cb_k, cb_v)
+    y = out.reshape(b, w, -1) @ params["wo"]
+    new_cache = ({"k_code_pages": kp2, "v_code_pages": vp2, "k_fp": kf2,
+                  "v_fp": vf2} if vq_pool
+                 else {"k_pages": kp2, "v_pages": vp2})
+    return y, new_cache
+
+
 # ---------------------------------------------------------------------------
 # Resolution
 # ---------------------------------------------------------------------------
@@ -1165,9 +1522,5 @@ def get_backend(cache_mode: str, *, seq_sharded: bool = False) -> CacheBackend:
             f"unknown cache_mode {cache_mode!r}; expected one of "
             f"{CACHE_MODES}")
     if seq_sharded:
-        if base.paged:
-            raise NotImplementedError(
-                "paged cache modes are single-host; the seq-sharded decode "
-                "path keeps the fp/vq shard cache")
         return ShardedBackend(base)
     return base

@@ -62,7 +62,7 @@ class ServingEngine:
         decode_chunk: Optional[int] = None,
         page_size: int = 16,
         donate: Optional[bool] = None,
-        prefill_mode: str = "chunked",
+        prefill_mode: Optional[str] = None,
         prefill_chunk: Optional[int] = None,
         use_pallas: bool = False,
         speculative: int = 0,
@@ -83,7 +83,7 @@ class ServingEngine:
         self-heal without rollback."""
         seq_sharded = (mesh_ctx.seq_axis is not None
                        and mesh_ctx.mesh is not None)
-        # resolves the layout (and rejects unknown modes / paged+sharded)
+        # resolves the layout (and rejects unknown modes)
         self.backend = cbe.get_backend(cache_mode, seq_sharded=seq_sharded)
         self.cfg = cfg
         self.params = params
@@ -105,15 +105,22 @@ class ServingEngine:
         self.decode_ctx = StepCtx(cfg=cfg, mesh=mesh_ctx, mode="decode",
                                   astra_mode=astra_mode, cache_mode=cache_mode,
                                   use_pallas=self.use_pallas)
-        if prefill_mode not in ("chunked", "padded"):
+        if prefill_mode not in (None, "chunked", "padded"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
-        # chunked prefill rides the CacheBackend chunk ops; the seq-sharded
-        # shard cache keeps the one-shot ASTRA sequence-parallel prefill,
-        # and an astra-simulated prefill attends through quantized K/V sim
-        # that the chunk step (exact cached attention) does not reproduce.
-        self.prefill_mode = prefill_mode
-        if not self.backend.chunkable or self.prefill_ctx.astra_on:
-            self.prefill_mode = "padded"
+        # every cache layout chunks (the seq-sharded shard cache scatters
+        # shard-locally and merges per-shard partials); only an
+        # astra-simulated prefill still needs the one-shot padded path —
+        # it attends through quantized K/V sim that the chunk step (exact
+        # cached attention) does not reproduce.  An explicit request the
+        # engine cannot honor is an error, never a silent downgrade.
+        if prefill_mode == "chunked" and self.prefill_ctx.astra_on:
+            raise ValueError(
+                "prefill_mode='chunked' cannot run under astra simulation: "
+                "the simulated prefill attends through quantized K/V that "
+                "the exact chunked step does not reproduce; pass "
+                "prefill_mode='padded' or leave it unset")
+        self.prefill_mode = prefill_mode or (
+            "padded" if self.prefill_ctx.astra_on else "chunked")
         if prefill_chunk is None:
             prefill_chunk = (
                 serving_autotune.load_prefill_chunk(cfg.name)

@@ -700,14 +700,113 @@ def hydrate_prefill_scratch(caches: List[Dict], fp_pages: Sequence[Dict],
 
 
 class _PageGroup:
-    """One block-table group: its own id space, allocator and table width."""
+    """One block-table group: its own id space, allocator(s) and table
+    width.
 
-    def __init__(self, name: str, slots: int, span: int, num_pages: int):
+    With ``shards > 1`` (sequence-sharded paged pools) the group splits
+    into per-shard ``PageAllocator`` instances behind the same protocol:
+    shard ``i`` owns the global page-id range ``[i*n, (i+1)*n)`` (``n =
+    num_pages // shards``) and table entry ``j`` draws from shard
+    ``j // (span // shards)`` — so the device-side shard_map can slice its
+    own table columns and find only its own page ids there, and each shard
+    reserves its own local scratch page (global id ``i*n``).  Admission
+    stalls when *any* needed shard's allocator runs dry."""
+
+    def __init__(self, name: str, slots: int, span: int, num_pages: int,
+                 shards: int = 1):
         self.name = name
         self.span = int(span)
+        self.shards = int(shards)
+        if self.shards > 1 and self.span % self.shards:
+            raise ValueError(
+                f"page group {name!r}: table span {self.span} must divide "
+                f"across {self.shards} sequence shards (use a max_len that "
+                f"is a multiple of shards * page_size)")
+        if int(num_pages) % self.shards:
+            raise ValueError(
+                f"page group {name!r}: num_pages={num_pages} must be a "
+                f"multiple of the {self.shards} sequence shards")
         self.num_pages = int(num_pages)
-        self.allocator = PageAllocator(self.num_pages)
+        self.pages_per_shard = self.num_pages // self.shards
+        self.allocators = [PageAllocator(self.pages_per_shard)
+                           for _ in range(self.shards)]
         self.block_table = np.zeros((slots, self.span), np.int32)
+
+    @property
+    def allocator(self) -> PageAllocator:
+        """Single-allocator view (shard 0) for unsharded callers — the
+        prefix index goes through this, and sharded groups never enable
+        prefix caching (``prefix_shareable`` is False under the mesh)."""
+        return self.allocators[0]
+
+    def _shard_of_entry(self, entry: int) -> int:
+        return entry * self.shards // self.span
+
+    def entries_granted(self, owner) -> int:
+        """Table entries granted to ``owner`` (entries always grow as a
+        prefix ``[0, have)``, so the per-shard owned counts sum to it)."""
+        return sum(len(a.owned(owner)) for a in self.allocators)
+
+    def _need_per_shard(self, owner, need: int) -> Dict[int, List[int]]:
+        have = self.entries_granted(owner)
+        per: Dict[int, List[int]] = {}
+        for j in range(have, need):
+            per.setdefault(self._shard_of_entry(j), []).append(j)
+        return per
+
+    def can_grow(self, owner, need: int) -> bool:
+        return all(len(js) <= self.allocators[s].num_free
+                   for s, js in self._need_per_shard(owner, need).items())
+
+    def grow(self, owner, need: int) -> None:
+        """Grant the table entries ``[have, need)`` from their owning
+        shards' allocators, writing *global* page ids into the table.
+        Callers pre-check ``can_grow``."""
+        per = self._need_per_shard(owner, need)
+        for s in sorted(per):
+            js = per[s]
+            pages = self.allocators[s].alloc(owner, len(js))
+            assert pages is not None  # pre-checked by can_grow
+            base = s * self.pages_per_shard
+            for j, p in zip(js, pages):
+                self.block_table[owner, j] = base + p
+
+    def shrink(self, owner, keep: int) -> int:
+        """Release the table entries past ``keep`` (rollback tail); a page
+        co-owned by the prefix index or another slot only drops this
+        owner's reference.  Returns the pages actually freed."""
+        have = self.entries_granted(owner)
+        freed = 0
+        for j in range(max(int(keep), 0), have):
+            s = self._shard_of_entry(j)
+            local = (int(self.block_table[owner, j])
+                     - s * self.pages_per_shard)
+            freed += len(self.allocators[s].release_pages(owner, [local]))
+            self.block_table[owner, j] = 0
+        return freed
+
+    def free_owner(self, owner) -> int:
+        """Retire ``owner``: return all its pages, point its row at
+        scratch."""
+        n = 0
+        for a in self.allocators:
+            n += len(a.free(owner))
+        self.block_table[owner, :] = 0
+        return n
+
+    def can_ever_fit_entries(self, need: int) -> bool:
+        if self.shards > 1:
+            # entries spread across shards; shard 0 carries the most
+            need = min(need, self.span // self.shards)
+        return need <= self.allocators[0].capacity
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(a.pages_in_use for a in self.allocators)
+
+    def check_invariants(self) -> None:
+        for a in self.allocators:
+            a.check_invariants()
 
 
 class PagedKVCache:
@@ -747,11 +846,20 @@ class PagedKVCache:
         if not self.spans:
             raise ValueError(f"{cfg.name}: no attention layers to page")
         self.dominant = dominant_group(self.spans)
+        # under a sequence-sharded mesh the global pool splits into
+        # per-shard allocators (shard-local pages, global ids); window
+        # rings stay replicated and keep one allocator
+        mesh = getattr(ctx, "mesh", None)
+        self.seq_shards = (int(mesh.num_seq_shards)
+                           if getattr(ctx, "seq_sharded", False)
+                           and mesh is not None else 1)
         self.groups: Dict[str, _PageGroup] = {}
         for name, span in self.spans.items():
+            shards = self.seq_shards if name == "global" else 1
             n = (int(num_pages) if num_pages and name == self.dominant
-                 else self.slots * span + 1)
-            self.groups[name] = _PageGroup(name, self.slots, span, n)
+                 else self.slots * span + shards)
+            self.groups[name] = _PageGroup(name, self.slots, span, n,
+                                           shards=shards)
         # engine-facing compat: the dominant group's knobs
         self.num_pages = self.groups[self.dominant].num_pages
         # cross-request prefix index; None until enable_prefix_cache()
@@ -780,16 +888,12 @@ class PagedKVCache:
         return min(self.pages_for(num_tokens), self.groups[name].span)
 
     def can_allocate(self, slot, num_tokens: int) -> bool:
-        for name, g in self.groups.items():
-            need = (self.group_pages_for(name, num_tokens)
-                    - len(g.allocator.owned(slot)))
-            if need > g.allocator.num_free:
-                return False
-        return True
+        return all(g.can_grow(slot, self.group_pages_for(name, num_tokens))
+                   for name, g in self.groups.items())
 
     def can_ever_fit(self, num_tokens: int) -> bool:
-        return all(self.group_pages_for(name, num_tokens)
-                   <= g.allocator.capacity
+        return all(g.can_ever_fit_entries(
+                       self.group_pages_for(name, num_tokens))
                    for name, g in self.groups.items())
 
     def advance(self, slot, num_tokens: int) -> bool:
@@ -798,13 +902,7 @@ class PagedKVCache:
         if not self.can_allocate(slot, num_tokens):
             return False
         for name, g in self.groups.items():
-            need = self.group_pages_for(name, num_tokens)
-            have = len(g.allocator.owned(slot))
-            if need <= have:
-                continue
-            pages = g.allocator.alloc(slot, need - have)
-            assert pages is not None  # pre-checked above
-            g.block_table[slot, have:need] = pages
+            g.grow(slot, self.group_pages_for(name, num_tokens))
         self._granted[slot] = max(self._granted.get(slot, 0),
                                   int(num_tokens))
         return True
@@ -841,12 +939,7 @@ class PagedKVCache:
                 continue  # ring: every page may hold live window positions
             keep = self.group_pages_for(name, new_tokens) if new_tokens \
                 else 0
-            held = g.allocator.owned(slot)
-            if keep >= len(held):
-                continue
-            tail = held[keep:]
-            freed += len(g.allocator.release_pages(slot, tail))
-            g.block_table[slot, keep:len(held)] = 0
+            freed += g.shrink(slot, keep)
         return freed
 
     def free(self, slot) -> int:
@@ -854,20 +947,19 @@ class PagedKVCache:
         scratch."""
         n = 0
         for g in self.groups.values():
-            n += len(g.allocator.free(slot))
-            g.block_table[slot, :] = 0
+            n += g.free_owner(slot)
         self._granted.pop(slot, None)
         return n
 
     @property
     def pages_in_use(self) -> int:
-        return sum(g.allocator.pages_in_use for g in self.groups.values())
+        return sum(g.pages_in_use for g in self.groups.values())
 
     def check_invariants(self) -> None:
         """Allocator bookkeeping balances in every page group (refcounts
         match owner lists, free list disjoint from live pages)."""
         for g in self.groups.values():
-            g.allocator.check_invariants()
+            g.check_invariants()
 
     # -- cross-request prefix caching ---------------------------------------
     @property
@@ -881,6 +973,11 @@ class PagedKVCache:
         from repro.models.transformer import ATTN_KINDS, stages
 
         if set(self.groups) != {"global"}:
+            return False
+        if any(g.shards > 1 for g in self.groups.values()):
+            # per-shard allocators don't share pages across requests (a
+            # shared chain would pin the same shard-local ids on every
+            # shard); prefix caching stays a single-host feature
             return False
         return all(kind in ATTN_KINDS and not _attn_kind_window(kind, self.cfg)
                    for kinds, _ in stages(self.cfg) for kind in kinds)

@@ -110,7 +110,7 @@ class ContinuousBatchingEngine:
                  decode_chunk: Optional[int] = None, page_size: int = 16,
                  num_pages: Optional[int] = None,
                  donate: Optional[bool] = None,
-                 prefill_mode: str = "chunked",
+                 prefill_mode: Optional[str] = None,
                  prefill_chunk: Optional[int] = None,
                  use_pallas: bool = False,
                  prefix_cache: Optional[bool] = None,
@@ -142,11 +142,19 @@ class ContinuousBatchingEngine:
                                   astra_mode=astra_mode,
                                   cache_mode=cache_mode,
                                   use_pallas=self.use_pallas)
-        if prefill_mode not in ("chunked", "padded"):
+        if prefill_mode not in (None, "chunked", "padded"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
-        self.prefill_mode = prefill_mode
-        if not self.backend.chunkable or self.prefill_ctx.astra_on:
-            self.prefill_mode = "padded"
+        # an explicit chunked request the engine cannot honor (astra-sim
+        # prefill attends through quantized K/V sim the exact chunk step
+        # does not reproduce) raises; unset picks the best supported mode
+        if prefill_mode == "chunked" and self.prefill_ctx.astra_on:
+            raise ValueError(
+                "prefill_mode='chunked' cannot run under astra simulation: "
+                "the simulated prefill attends through quantized K/V that "
+                "the exact chunked step does not reproduce; pass "
+                "prefill_mode='padded' or leave it unset")
+        self.prefill_mode = prefill_mode or (
+            "padded" if self.prefill_ctx.astra_on else "chunked")
         if prefill_chunk is None:
             prefill_chunk = (
                 serving_autotune.load_prefill_chunk(cfg.name, batch=slots)

@@ -45,6 +45,8 @@ SPECS = {
     "paged_vq": ("paged_vq", True, False, "vq"),
     "sharded_fp": ("fp", False, True, "fp"),
     "sharded_vq": ("vq", True, True, "vq"),
+    "sharded_paged": ("paged", False, True, "fp"),
+    "sharded_paged_vq": ("paged_vq", True, True, "vq"),
 }
 
 _MODELS = {}
@@ -130,15 +132,14 @@ def test_continuous_engine_parity_and_compile_once(name):
     assert got == want, (name, got, want)
     assert eng.kv.pages_in_use == 0  # trivially 0 for slabs, drained paged
     assert eng._decode_chunk.trace_count == 1
-    if eng.prefill_mode == "chunked":
-        # traced chunk_start: compiles are O(bucket widths), and the
-        # on-device slot merge (traced slot index) compiles once
-        assert 1 <= eng._prefill_chunk.trace_count <= len(
-            eng.prefill_buckets)
-        assert eng._merge.trace_count == 1
-        assert eng._prefill.trace_count == 0
-    else:  # seq-sharded keeps the one-shot prefill: one compile
-        assert eng._prefill.trace_count == 1
+    # every layout chunks (seq-sharded included since PR 9): compiles are
+    # O(bucket widths) under the traced chunk_start, and the on-device
+    # slot merge (traced slot index) compiles once
+    assert eng.prefill_mode == "chunked"
+    assert 1 <= eng._prefill_chunk.trace_count <= len(
+        eng.prefill_buckets)
+    assert eng._merge.trace_count == 1
+    assert eng._prefill.trace_count == 0
 
 
 @pytest.mark.parametrize("name", sorted(SPECS))
@@ -189,9 +190,31 @@ def test_unknown_cache_mode_rejected():
             eng_cls(cfg, params, cache_mode="nope", **kw)
 
 
-def test_paged_plus_seq_sharded_rejected():
-    with pytest.raises(NotImplementedError, match="single-host"):
-        cbe.get_backend("paged", seq_sharded=True)
+def test_paged_plus_seq_sharded_constructs():
+    """Paged pools under the mesh are supported (PR 9): the shard cache
+    wraps the paged backends and the pool splits into per-shard
+    allocators with shard-local page ids."""
+    for mode in ("paged", "paged_vq"):
+        backend = cbe.get_backend(mode, seq_sharded=True)
+        assert backend.sharded and backend.paged
+        assert backend.name == f"sharded_{mode}"
+
+
+def test_explicit_chunked_with_astra_sim_raises():
+    """An explicit ``prefill_mode="chunked"`` the engine cannot honor must
+    raise, never silently downgrade; the *default* still resolves to the
+    padded astra-sim prefill (the one remaining fallback)."""
+    cfg, params = small_lm(astra=True)
+    for eng_cls, kw in ((ServingEngine, {}),
+                        (ContinuousBatchingEngine, {"slots": 2})):
+        with pytest.raises(ValueError, match="astra simulation"):
+            eng_cls(cfg, params, max_len=64, astra_mode="sim",
+                    prefill_mode="chunked", **kw)
+        eng = eng_cls(cfg, params, max_len=64, astra_mode="sim", **kw)
+        assert eng.prefill_mode == "padded"  # default: documented fallback
+        with pytest.raises(ValueError, match="unknown prefill_mode"):
+            eng_cls(cfg, params, max_len=64, astra_mode="off",
+                    prefill_mode="bogus", **kw)
 
 
 # ---------------------------------------------------------------------------

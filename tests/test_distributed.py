@@ -31,6 +31,24 @@ def test_spmd_parity_suite():
 
 
 @pytest.mark.slow
+def test_mesh_serving_suite_on_forced_4_devices():
+    """tests/test_mesh_serving.py (seq-sharded chunked prefill, sharded
+    paged pools, disaggregated hand-off) on a forced 4-device host — the
+    same lane CI runs; on the default host those tests skip."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         os.path.join(ROOT, "tests", "test_mesh_serving.py")],
+        capture_output=True, text=True, timeout=560, env=env, cwd=ROOT)
+    sys.stdout.write(r.stdout[-4000:])
+    sys.stderr.write(r.stderr[-2000:])
+    assert r.returncode == 0
+    assert "passed" in r.stdout and "skipped" not in r.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_single_combo_executes():
     """The dry-run entry point itself (with its 512-device flag) lowers,
     compiles and reports a roofline for one combo.  The decode shape also
