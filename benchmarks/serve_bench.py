@@ -41,6 +41,17 @@ perf PR diffs against.  Sections:
   single-device host the mesh collapses to one shard and the disagg
   groups overlap, so the rows land in CI regardless of topology.
 * compile counts (CountingJit traces) and host syncs for every engine run.
+* **traffic** (written by ``benchmarks/traffic_bench.py``, merged into the
+  same report): SLA numbers from seeded Poisson/bursty arrival traces
+  through the priority/deadline scheduler.  One row per trace mode, each
+  with ``p50_ttft_steps``/``p99_ttft_steps`` (plus ``mean_ttft_ms``),
+  ``steps_per_token``/``ms_per_token``, ``goodput_tokens`` +
+  ``goodput_tok_per_s`` (tokens from requests that met their TTFT
+  deadline), ``slo`` (met/total per the trace's priority classes),
+  ``admission_stalls`` (episodes), ``preemptions`` /
+  ``preempted_requests``, ``swap`` (arena swap_outs/ins + bytes moved),
+  and the replay artifact: the ``events`` log with its ``events_sha256``
+  (identical across same-seed runs — the CI ``traffic`` lane diffs it).
 
 Usage:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
             [--use-pallas] [--speculate] [--mesh] [--out F]

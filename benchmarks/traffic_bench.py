@@ -1,0 +1,275 @@
+"""Trace-driven traffic harness for the continuous-batching scheduler.
+
+Replays a *seeded* arrival trace — Poisson or bursty inter-arrivals, mixed
+prompt/output lengths, mixed priority classes with per-class TTFT deadlines
+— through ``ContinuousBatchingEngine`` and reports the SLA numbers the
+ROADMAP's serving north star is judged by:
+
+* p50/p99 TTFT (scheduler steps — deterministic under replay — plus
+  wall-clock ms),
+* per-token decode latency (steps/token and ms/token),
+* goodput-under-SLO (tokens from requests that met their deadline, DeepSpeed
+  style) next to raw throughput,
+* admission-stall episodes, preemption counts and swap-arena traffic
+  (``paged_vq`` swaps code pages, ~16x smaller than fp — the Appendix-G
+  ratio applied to the memory hierarchy).
+
+Everything derives from one ``numpy.random.RandomState(seed)`` and the
+engine's *step counter* (never wall-clock), so a replay with the same seed
+produces the identical **event log** — ``(step, event, uid)`` for every
+submit / first_token / preempt / finish.  That makes the harness double as
+the scheduler's randomized stress suite: ``tests/test_traffic.py`` replays
+traces twice and asserts identical logs, and the CI ``traffic`` lane does
+the same from the CLI (``--smoke --events-out``).  The smoke engine is
+deliberately page-starved (2 slots, a pool barely past 2 requests wide) so
+the replay actually exercises preemption, restore and stall paths, not just
+the happy path.
+
+Results merge into the ``"traffic"`` section of ``BENCH_serving.json``
+(see ``benchmarks/serve_bench.py`` for the row schema).
+
+Usage:  PYTHONPATH=src python -m benchmarks.traffic_bench [--smoke]
+            [--seed N] [--arch A] [--cache-mode M] [--preempt-mode M]
+            [--out F] [--events-out F]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+
+# priority classes as (priority, ttft_deadline_steps): a latency-critical
+# slice with a tight SLO, a default class with a loose one, best-effort
+# with none — the mix that makes preemption earn its keep
+TRAFFIC_CLASSES = ((0, 12.0), (1, 32.0), (2, None))
+TRAFFIC_WEIGHTS = (0.2, 0.5, 0.3)
+
+
+def make_trace(seed: int, *, n_requests: int, mode: str, vocab: int,
+               mean_gap: float = 2.0, burst: int = 4, burst_gap: int = 10,
+               prompt_lens=(4, 20), max_new=(4, 16),
+               classes=TRAFFIC_CLASSES, weights=TRAFFIC_WEIGHTS):
+    """A seeded arrival trace: list of submit records with arrival *steps*.
+
+    ``mode="poisson"``: independent Poisson inter-arrival gaps (open-loop
+    load).  ``mode="bursty"``: requests arrive in bunches of ``burst`` with
+    quiet gaps of ~``burst_gap`` steps between bunches — the pattern that
+    maximizes page pressure and admission queueing."""
+    if mode not in ("poisson", "bursty"):
+        raise ValueError(f"unknown trace mode {mode!r}")
+    rng = np.random.RandomState(seed)
+    p = np.asarray(weights, float)
+    p = p / p.sum()
+    step = 0
+    trace = []
+    for i in range(n_requests):
+        if mode == "poisson":
+            step += int(rng.poisson(mean_gap))
+        elif i and i % burst == 0:
+            step += burst_gap + int(rng.poisson(2.0))
+        prio, deadline = classes[int(rng.choice(len(classes), p=p))]
+        plen = int(rng.randint(prompt_lens[0], prompt_lens[1] + 1))
+        trace.append({
+            "arrive_step": step,
+            "prompt": rng.randint(1, vocab, size=plen).tolist(),
+            "max_new": int(rng.randint(max_new[0], max_new[1] + 1)),
+            "priority": int(prio),
+            "deadline": deadline,
+        })
+    return trace
+
+
+def event_log(eng):
+    """The deterministic replay artifact: every lifecycle event as
+    ``(step, event, uid)``, sorted.  Derived purely from step counters, so
+    two runs of the same seeded trace must produce identical logs."""
+    evs = [(r.submitted_step, "submit", r.uid) for r in eng.finished]
+    evs += [(r.first_token_step, "first_token", r.uid)
+            for r in eng.finished]
+    evs += [(r.done_step, "finish", r.uid) for r in eng.finished]
+    evs += [(s, "preempt", u) for s, u in eng.preempt_log]
+    return sorted(evs)
+
+
+def run_trace(eng, trace, *, max_steps: int = 20_000,
+              check_invariants: bool = False):
+    """Replay ``trace`` against ``eng``: submit each record once the
+    engine's step counter reaches its arrival step, step until drained.
+    Returns ``{stats, events, ...latency metrics}``."""
+    pending = sorted(trace, key=lambda r: r["arrive_step"])
+    i = 0
+    t0 = time.time()
+    while i < len(pending) or not eng.idle:
+        while (i < len(pending)
+               and pending[i]["arrive_step"] <= eng.step_count):
+            r = pending[i]
+            eng.submit(r["prompt"], r["max_new"],
+                       priority=r["priority"], deadline=r["deadline"])
+            i += 1
+        eng.step()
+        if check_invariants and hasattr(eng.kv, "check_invariants"):
+            eng.kv.check_invariants()
+        if eng.step_count >= max_steps:
+            raise RuntimeError(
+                f"trace did not drain in {max_steps} steps "
+                f"(queue={len(eng.queue)}, "
+                f"active={sum(r is not None for r in eng.active)})")
+    wall = max(time.time() - t0, 1e-9)
+    stats = eng.run_until_drained()  # already drained: stats only
+    ttfts = [r.first_token_step - r.submitted_step for r in eng.finished]
+    spt = [(r.done_step - r.first_token_step) / max(len(r.output) - 1, 1)
+           for r in eng.finished if len(r.output) > 1]
+    tokens = stats["tokens"]
+    slo = stats["slo"]
+    events = event_log(eng)
+    blob = json.dumps(events).encode()
+    return {
+        "requests": stats["requests"],
+        "tokens": tokens,
+        "steps": stats["steps"],
+        "wall_s": wall,
+        "tok_per_s": tokens / wall,
+        "p50_ttft_steps": float(np.percentile(ttfts, 50)) if ttfts else 0.0,
+        "p99_ttft_steps": float(np.percentile(ttfts, 99)) if ttfts else 0.0,
+        "mean_ttft_ms": wall / max(stats["steps"], 1) * 1e3
+        * (float(np.mean(ttfts)) if ttfts else 0.0),
+        "steps_per_token": float(np.mean(spt)) if spt else 0.0,
+        "ms_per_token": wall / max(tokens, 1) * 1e3,
+        "goodput_tokens": slo["goodput_tokens"],
+        "goodput_tok_per_s": slo["goodput_tokens"] / wall,
+        "slo": slo,
+        "admission_stalls": stats["admission_stalls"],
+        "preemptions": stats["preemptions"],
+        "preempted_requests": stats["preempted_requests"],
+        "swap": stats["swap"],
+        "events": events,
+        "events_sha256": hashlib.sha256(blob).hexdigest(),
+    }
+
+
+def bench_traffic(cfg, params, *, seed: int, smoke: bool, cache_mode: str,
+                  preempt_mode: str = "swap",
+                  check_invariants: bool = False):
+    """One row per trace mode through a page-starved engine (undersized
+    pool + fewer slots than the offered load, so stalls and preemptions
+    genuinely happen)."""
+    from repro.serving.scheduler import ContinuousBatchingEngine
+
+    if smoke:
+        eng_kw = dict(slots=2, max_len=64, page_size=8, decode_chunk=2,
+                      prefill_chunk=16)
+        # one max-length request wide plus the scratch page: admissions
+        # genuinely contend, so both the stall and preemption paths fire
+        pool = (64 // 8) + 1
+        trace_kw = dict(n_requests=12, prompt_lens=(4, 24),
+                        max_new=(6, 20), mean_gap=1.0, burst=5)
+    else:
+        eng_kw = dict(slots=4, max_len=256, page_size=16, decode_chunk=4,
+                      prefill_chunk=64)
+        pool = 3 * (256 // 16) + 1
+        trace_kw = dict(n_requests=48, prompt_lens=(16, 96),
+                        max_new=(8, 48), mean_gap=1.5)
+    paged = cache_mode.startswith("paged")
+    rows = {}
+    for mode in ("poisson", "bursty"):
+        eng = ContinuousBatchingEngine(
+            cfg, params, cache_mode=cache_mode,
+            num_pages=pool if paged else None,
+            preempt_mode=preempt_mode, **eng_kw)
+        trace = make_trace(seed, vocab=cfg.vocab_size, mode=mode,
+                           **trace_kw)
+        rows[mode] = run_trace(eng, trace,
+                               check_invariants=check_invariants)
+    return {
+        "seed": seed,
+        "smoke": smoke,
+        "cache_mode": cache_mode,
+        "preempt_mode": preempt_mode,
+        "engine": {k: eng_kw[k] for k in ("slots", "max_len", "page_size")},
+        "num_pages": pool if paged else None,
+        "classes": [[p, d] for p, d in TRAFFIC_CLASSES],
+        **rows,
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: 2 slots, 10-request traces, "
+                         "page-starved pool (preemption really fires)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed; same seed => identical event log")
+    ap.add_argument("--arch", default="gpt2-small")
+    ap.add_argument("--cache-mode", default="paged_vq",
+                    help="engine cache layout; paged_vq swaps code pages "
+                         "(~16x smaller than fp) on preemption")
+    ap.add_argument("--preempt-mode", default="swap",
+                    choices=("swap", "recompute"))
+    ap.add_argument("--check-invariants", action="store_true",
+                    help="run PageAllocator.check_invariants every step "
+                         "(slow; the stress-suite configuration)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serving.json"),
+        help="merge results into this report's 'traffic' section")
+    ap.add_argument("--events-out", default="",
+                    help="also write the raw event logs to this JSON file "
+                         "(the CI determinism diff artifact)")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model_factory as mf
+
+    cfg = get_config(args.arch).reduced()
+    if "vq" not in args.cache_mode:
+        # fp layouts don't need the VQ codebooks in params
+        cfg = dataclasses.replace(
+            cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+    params = mf.init_params(jax.random.PRNGKey(0), cfg)
+
+    t0 = time.time()
+    section = bench_traffic(cfg, params, seed=args.seed, smoke=args.smoke,
+                            cache_mode=args.cache_mode,
+                            preempt_mode=args.preempt_mode,
+                            check_invariants=args.check_invariants)
+    section["bench_wall_s"] = time.time() - t0
+
+    out_path = os.path.abspath(args.out)
+    report = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            report = json.load(f)
+    report["traffic"] = section
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    if args.events_out:
+        with open(os.path.abspath(args.events_out), "w") as f:
+            json.dump({m: section[m]["events"]
+                       for m in ("poisson", "bursty")}, f, indent=0)
+
+    print(f"# traffic_bench ({cfg.name}, cache_mode={args.cache_mode}, "
+          f"seed={args.seed})")
+    for mode in ("poisson", "bursty"):
+        r = section[mode]
+        print(f"  {mode}: {r['requests']} req, {r['tokens']} tok in "
+              f"{r['steps']} steps | TTFT p50 {r['p50_ttft_steps']:.0f} "
+              f"p99 {r['p99_ttft_steps']:.0f} steps | "
+              f"{r['steps_per_token']:.2f} steps/tok | "
+              f"goodput {r['goodput_tokens']}/{r['tokens']} tok "
+              f"({r['slo']['met']}/{r['slo']['requests']} met SLO)")
+        print(f"    stall episodes={r['admission_stalls']} "
+              f"preemptions={r['preemptions']} "
+              f"swap {r['swap']['bytes_out']:,} B out / "
+              f"{r['swap']['bytes_in']:,} B in | "
+              f"events sha256 {r['events_sha256'][:12]}")
+    return section
+
+
+if __name__ == "__main__":
+    main()

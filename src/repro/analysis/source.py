@@ -47,6 +47,13 @@ The rules registered here (see each ``register`` call):
     high-water, the block-table rows and the page refcounts *together*;
     a direct poke desyncs them.  Engines use
     ``advance``/``rollback``/``release``/``tables``.
+``swap-arena-internals``
+    ``._swapped`` access outside ``serving/kv_cache.py`` — the preemption
+    swap arena keys host-side payloads by request uid and keeps its
+    traffic counters consistent through ``stash``/``peek``/``pop``; a
+    direct poke at the backing dict leaks resident bytes or double-frees
+    a restore.  Schedulers use ``holds``/``stash``/``peek``/``pop``/
+    ``stats``.
 """
 from __future__ import annotations
 
@@ -327,6 +334,22 @@ _regex_rule(
     "high-water and block-table rows together; a direct poke desyncs them "
     "from the page refcounts.  Use advance/rollback/release/tables",
     exclude=("serving/kv_cache.py", "serving/cache_backend.py"),
+)
+
+
+# ---------------------------------------------------------------------------
+# swap-arena-internals — preemption swap payloads stay behind the arena API
+# ---------------------------------------------------------------------------
+
+_regex_rule(
+    "swap-arena-internals",
+    "SwapArena internals (._swapped) stay inside serving/kv_cache.py",
+    [r"\.\s*_swapped\b"],
+    "swap-arena internal state accessed outside serving/kv_cache.py — "
+    "entries are keyed by request uid and the swap_ins/bytes_in counters "
+    "move with them; poking the dict directly leaks resident bytes or "
+    "double-restores a victim.  Use holds/stash/peek/pop/stats",
+    exclude=("serving/kv_cache.py",),
 )
 
 

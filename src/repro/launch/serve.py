@@ -64,9 +64,35 @@ def main() -> None:
                          "the groups — as VQ codes under --cache-mode vq — "
                          "and the hand-off bytes are reported against the "
                          "fp baseline at 10/100/500 Mbps")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching scheduler "
+                         "(slot-based admission, chunked prefill, "
+                         "priority/deadline-aware preemption) instead of "
+                         "one static batch")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots for --continuous")
+    ap.add_argument("--priority", default="",
+                    help="comma-separated priority classes cycled across "
+                         "the requests (lower = more urgent, e.g. "
+                         "'0,1,1,2'); default: every request class 1. "
+                         "Needs --continuous")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request TTFT deadline in scheduler steps "
+                         "(0 = none); missed deadlines still finish but "
+                         "count against goodput. Needs --continuous")
+    ap.add_argument("--preempt-mode", default="swap",
+                    choices=("swap", "recompute"),
+                    help="how --continuous evicts a low-priority decode "
+                         "under pressure: 'swap' stashes its exact cache "
+                         "bytes host-side (bitwise restore), 'recompute' "
+                         "re-prefills on re-admission")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if (args.priority or args.deadline) and not args.continuous:
+        raise SystemExit("--priority/--deadline need --continuous (the "
+                         "static engine has no scheduler to honor them)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -91,6 +117,47 @@ def main() -> None:
         if args.draft_checkpoint:
             dparams = checkpoint.restore(args.draft_checkpoint, dparams)
         draft = (dcfg, dparams)
+
+    if args.continuous:
+        from repro.serving.scheduler import ContinuousBatchingEngine
+
+        if args.disagg:
+            raise SystemExit("--continuous does not compose with --disagg")
+        if args.speculative and args.draft != "ngram":
+            raise SystemExit("--continuous drafts by n-gram only")
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=args.slots, max_len=args.max_len,
+            astra_mode="off", cache_mode=args.cache_mode,
+            page_size=args.page_size,
+            decode_chunk=args.decode_chunk or None,
+            temperature=args.temperature, seed=args.seed,
+            use_pallas=args.use_pallas, speculative=args.speculative,
+            preempt_mode=args.preempt_mode)
+        classes = ([int(x) for x in args.priority.split(",")]
+                   if args.priority else [1])
+        rng = np.random.RandomState(args.seed)
+        for i in range(args.requests):
+            prompt = rng.randint(
+                1, cfg.vocab_size,
+                size=rng.randint(4, args.prompt_len + 1)).tolist()
+            eng.submit(prompt, args.max_new_tokens,
+                       priority=classes[i % len(classes)],
+                       deadline=args.deadline or None)
+        stats = eng.run_until_drained()
+        slo = stats["slo"]
+        print(f"arch={cfg.name} continuous slots={args.slots} "
+              f"requests={stats['requests']} tokens={stats['tokens']} "
+              f"steps={stats['steps']} ({stats['tok_per_s']:.1f} tok/s)")
+        print(f"  TTFT steps: mean {stats['mean_ttft_steps']:.1f} "
+              f"p50 {stats['p50_ttft_steps']:.0f} "
+              f"p99 {stats['p99_ttft_steps']:.0f} | "
+              f"stall episodes {stats['admission_stalls']} | "
+              f"preemptions {stats['preemptions']}")
+        print(f"  SLO: {slo['met']}/{slo['requests']} met "
+              f"({slo['with_deadline']} with deadlines), goodput "
+              f"{slo['goodput_tokens']} tok | swap "
+              f"{stats['swap']['bytes_out']:,} B out")
+        return
 
     if args.disagg:
         from repro.serving.disagg import DisaggregatedEngine

@@ -482,9 +482,33 @@ class CacheBackend:
         bookkeeping twin of ``verify_rollback``): slabs are a no-op, paged
         layouts drop the tail page references the retreat implies — never
         freeing a page the prefix index (or another slot) still co-owns.
-        Returns the pages freed.  The same primitive request preemption
-        needs (ROADMAP)."""
+        Returns the pages freed.  Request preemption's recompute path
+        re-admits through the same primitive (scheduler ``preempt_mode=
+        "recompute"`` re-prefills over prompt + emitted output)."""
         return state.rollback(slot, n)
+
+    @property
+    def preemptible(self) -> bool:
+        """Whether the scheduler may preempt a decoding slot on this
+        layout: ``swap_out`` snapshots the slot's exact cache bytes to the
+        host arena and ``kvc.restore_slot`` scatters them back, so a
+        restored decode is bitwise identical to a never-preempted one.
+        Single-host layouts all support it; the sequence-sharded wrapper
+        refuses (per-shard pools + replicated rings have no single-host
+        payload to stash)."""
+        return True
+
+    def swap_out(self, state, slot, caches) -> "kvc.SwapEntry":
+        """Preemption: host-snapshot everything ``slot`` owns (pages +
+        dense rows; ``paged_vq`` swaps code pages, ~16x cheaper than fp).
+        The caller still ``release``s the slot afterwards — prefix-shared
+        pages survive through their other owners' refcounts."""
+        return state.swap_out(slot, caches)
+
+    def swap_dests(self, state, slot, entry) -> list:
+        """Destination block-table rows for ``kvc.restore_slot`` after the
+        slot has been re-granted ``entry.granted`` tokens."""
+        return state.swap_dests(slot, entry.pages)
 
     def donate_argnums(self, argnums: Tuple[int, ...],
                        platform: Optional[str] = None) -> Tuple[int, ...]:
@@ -1082,6 +1106,19 @@ class ShardedBackend(CacheBackend):
                                      ctx=ctx, dtype=dtype,
                                      page_size=page_size,
                                      num_pages=num_pages)
+
+    @property
+    def preemptible(self) -> bool:
+        """Preemption stays a single-host feature (like prefix caching):
+        under the mesh the global pools are per-shard and the snapshot /
+        restore pair would have to gather and re-scatter shard-local page
+        ids — not worth it when the scheduler can simply defer instead."""
+        return False
+
+    def swap_out(self, state, slot, caches):
+        raise ValueError(
+            f"{self.name}: preemption swap is not supported under a "
+            f"sequence-sharded mesh (check backend.preemptible first)")
 
     def bytes_report(self, cfg, *, max_len, slots=1, page_size=16,
                      num_pages=None, dtype_bytes=4):

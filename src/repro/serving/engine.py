@@ -261,6 +261,14 @@ class ServingEngine:
         seed: int = 0,
     ) -> GenerationResult:
         b = len(prompts)
+        max_new_tokens = int(max_new_tokens)
+        if max_new_tokens <= 0:
+            # fail fast: the decode loop's budget is max_new_tokens - 1
+            # *after* the unconditional first token, so a non-positive
+            # budget would still emit one token and then underflow the
+            # remaining-counter into a full-max_len decode.
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
         lens = np.array([len(p) for p in prompts], np.int32)
         if int(lens.max()) + max_new_tokens > self.max_len:
             # fail fast: the dense slab would silently clamp writes at the

@@ -50,9 +50,24 @@ history — ``PagedKVCache.prefix_shareable`` gates the feature to all-global
 attention stacks, and ``paged_vq`` nodes additionally carry host-side fp
 snapshots of the prefill-view scratch so reuse stays bitwise identical to a
 cold prefill.
+
+**Preemption swap arena** (``SwapArena`` + ``snapshot_slot`` /
+``restore_slot``): when the scheduler preempts a decoding request, the exact
+bytes the victim owns — its block-table rows' pages per pool leaf, its
+per-slot rows of every dense leaf, and (paged_vq) its per-page fp prefill
+scratch — move to a host-side arena keyed by request uid.  Under
+``paged_vq`` the swapped pages are *code* pages, so swap traffic is the
+same ~16x cheaper than fp that Appendix G gets on the wire, applied to the
+host memory hierarchy instead.  Re-admission re-grants pages and scatters
+the saved payload into the new page ids (``restore_slot``, one fixed-shape
+jit), so a restored decode is bitwise identical to one that was never
+preempted.  The arena's ``_swapped`` dict is private to this module — the
+``swap-arena-internals`` lint rule keeps every other module on the
+``stash``/``peek``/``pop``/``holds``/``stats`` surface.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Any, Dict, List, Optional, Sequence, Union
 
@@ -695,6 +710,148 @@ def hydrate_prefill_scratch(caches: List[Dict], fp_pages: Sequence[Dict],
 
 
 # ---------------------------------------------------------------------------
+# Preemption swap arena
+# ---------------------------------------------------------------------------
+
+
+def snapshot_slot(caches: List[Dict], slot: int, table_row_for):
+    """Host numpy snapshot of everything ``slot`` holds in a cache tree:
+    per pool sub, the pages its block-table row points at (span-shaped —
+    ungranted tail entries gather the scratch page, junk that the restore
+    scatter routes straight back to scratch, so payload shapes are fixed
+    and the restore jit compiles once); per dense sub, the ``(R, 1, ...)``
+    slot rows ``merge_slot`` would write.  ``table_row_for(kind)`` maps an
+    attention-kind name to its group's block-table row (unused on slab
+    trees, which have no pool subs).  Returns ``(pages, dense, nbytes)``."""
+    import jax
+
+    pages: List[Dict] = []
+    dense: List[Dict] = []
+    for stage in caches:
+        p_stage: Dict[str, Dict] = {}
+        d_stage: Dict[str, Any] = {}
+        for name, sub in stage.items():
+            if is_paged_sub(sub):
+                ids = table_row_for(name)
+                p_stage[name] = {k: np.asarray(v[:, ids])
+                                 for k, v in sub.items()
+                                 if k in PAGED_LEAF_KEYS}
+            else:
+                d_stage[name] = jax.tree.map(
+                    lambda leaf: np.asarray(leaf[:, slot:slot + 1]), sub)
+        pages.append(p_stage)
+        dense.append(d_stage)
+    nbytes = sum(leaf.nbytes
+                 for leaf in jax.tree.leaves((pages, dense)))
+    return pages, dense, nbytes
+
+
+def restore_slot(live: List[Dict], pages: List[Dict], dests: List[Dict],
+                 dense: List[Dict], slot) -> List[Dict]:
+    """Device-side inverse of ``snapshot_slot`` (jit-traced; the
+    scheduler's wrapper donates ``live``).  Pool payloads scatter into the
+    slot's *new* block-table rows (``dests``) — the junk tail entries land
+    on reserved scratch page 0, which no valid read ever sees — and dense
+    rows merge back at ``slot`` exactly like ``merge_slot``.  All shapes
+    are fixed (span-shaped payloads, ``(R, 1, ...)`` rows), so one compile
+    covers every restore regardless of how many pages the victim held."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def one(batch_leaf, row):
+        return lax.dynamic_update_slice_in_dim(
+            batch_leaf, jnp.asarray(row).astype(batch_leaf.dtype),
+            jnp.asarray(slot), axis=1)
+
+    out = []
+    for l_stage, p_stage, t_stage, d_stage in zip(live, pages, dests, dense):
+        sub_out = {}
+        for name, l_sub in l_stage.items():
+            if is_paged_sub(l_sub):
+                ids = t_stage[name]
+                pay = p_stage[name]
+                sub_out[name] = {
+                    k: (v.at[:, ids].set(jnp.asarray(pay[k]).astype(v.dtype))
+                        if k in PAGED_LEAF_KEYS else v)
+                    for k, v in l_sub.items()}
+            else:
+                sub_out[name] = jax.tree.map(one, l_sub, d_stage[name])
+        out.append(sub_out)
+    return out
+
+
+@dataclasses.dataclass
+class SwapEntry:
+    """One preempted request's host-resident cache state: the page payload
+    and dense rows from ``snapshot_slot``, the token high-water to re-grant
+    on restore, the decode cursor (``length``/``cur_token``), and — for
+    ``paged_vq`` under the prefix cache — the per-page fp prefill scratch
+    snapshots that keep a later ``prefix_insert`` bitwise-exact."""
+
+    uid: int
+    granted: int
+    pages: List[Dict]
+    dense: List[Dict]
+    length: int = 0
+    cur_token: int = 0
+    fp_pages: Optional[List] = None
+    nbytes: int = 0
+
+
+class SwapArena:
+    """Host-side arena for preempted requests' swapped cache state, keyed
+    by request uid, with swap-traffic accounting (counts + bytes each way;
+    ``paged_vq`` entries hold code pages, so they are ~16x smaller than
+    their fp equivalents — Appendix G applied to the memory hierarchy).
+
+    The backing ``_swapped`` dict is private to ``serving/kv_cache.py``
+    (enforced by the ``swap-arena-internals`` lint rule); schedulers use
+    ``stash``/``holds``/``peek``/``pop``/``stats``."""
+
+    def __init__(self) -> None:
+        self._swapped: Dict[int, SwapEntry] = {}
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.bytes_out = 0
+        self.bytes_in = 0
+
+    def __len__(self) -> int:
+        return len(self._swapped)
+
+    def holds(self, uid) -> bool:
+        return uid in self._swapped
+
+    def stash(self, entry: SwapEntry) -> None:
+        if entry.uid in self._swapped:
+            raise ValueError(f"uid {entry.uid} is already swapped out")
+        self._swapped[entry.uid] = entry
+        self.swap_outs += 1
+        self.bytes_out += entry.nbytes
+
+    def peek(self, uid) -> SwapEntry:
+        """The entry for ``uid`` without swapping it in (grant sizing)."""
+        return self._swapped[uid]
+
+    def pop(self, uid) -> SwapEntry:
+        """Swap ``uid`` back in: remove and return its entry."""
+        entry = self._swapped.pop(uid)
+        self.swap_ins += 1
+        self.bytes_in += entry.nbytes
+        return entry
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(e.nbytes for e in self._swapped.values())
+
+    def stats(self) -> Dict[str, int]:
+        return {"swap_outs": self.swap_outs, "swap_ins": self.swap_ins,
+                "bytes_out": self.bytes_out, "bytes_in": self.bytes_in,
+                "resident": len(self._swapped),
+                "resident_bytes": self.resident_bytes}
+
+
+# ---------------------------------------------------------------------------
 # Paged KV cache
 # ---------------------------------------------------------------------------
 
@@ -867,6 +1024,8 @@ class PagedKVCache:
         # per-slot granted token high-water (what ``advance`` covered);
         # ``rollback`` retreats it and frees the tail pages it implies
         self._granted: Dict[Any, int] = {}
+        # host-side swap arena for preempted requests (uid -> SwapEntry)
+        self.arena = SwapArena()
 
     # -- host-side bookkeeping ----------------------------------------------
     @property
@@ -950,6 +1109,32 @@ class PagedKVCache:
             n += g.free_owner(slot)
         self._granted.pop(slot, None)
         return n
+
+    # -- preemption swap ----------------------------------------------------
+    def swap_out(self, slot, caches) -> SwapEntry:
+        """Host snapshot of everything ``slot`` owns, for preemption: the
+        pages its block-table rows point at (``paged_vq``: code pages —
+        ~16x cheaper than fp) plus its rows of every dense leaf.  Pure
+        read — the caller then drops the slot's page references
+        (``CacheBackend.release``; prefix-shared pages survive via their
+        other owners' refcounts), requeues the request, and later restores
+        with ``advance`` + ``swap_dests`` + ``restore_slot``."""
+        pages, dense, nbytes = snapshot_slot(
+            caches, slot,
+            lambda kind: np.asarray(
+                self.groups[page_group_for(kind, self.cfg)]
+                .block_table[slot], np.int32))
+        return SwapEntry(uid=-1, granted=self.granted(slot), pages=pages,
+                         dense=dense, nbytes=nbytes)
+
+    def swap_dests(self, slot, pages: List[Dict]) -> List[Dict]:
+        """Destination block-table rows for ``restore_slot``, mirroring a
+        swap payload's stage/kind structure — call after re-granting the
+        slot so the rows hold the fresh page ids."""
+        return [{kind: np.asarray(
+                     self.groups[page_group_for(kind, self.cfg)]
+                     .block_table[slot], np.int32)
+                 for kind in p_stage} for p_stage in pages]
 
     @property
     def pages_in_use(self) -> int:
@@ -1142,6 +1327,8 @@ class SlabCache:
         self.slots = int(slots)
         self.max_len = int(max_len)
         self.dtype = jnp.float32 if dtype is None else dtype
+        # host-side swap arena for preempted requests (uid -> SwapEntry)
+        self.arena = SwapArena()
 
     def advance(self, slot, num_tokens: int) -> bool:
         return int(num_tokens) <= self.max_len
@@ -1164,6 +1351,20 @@ class SlabCache:
 
     def tables(self) -> None:
         return None
+
+    # -- preemption swap ----------------------------------------------------
+    def swap_out(self, slot, caches) -> SwapEntry:
+        """Slab swap-out: no page pools — the per-slot rows of every dense
+        leaf are the whole state, so slot preemption works on the
+        contiguous fp/vq layouts too (at slab cost: a full ``max_len``
+        row each way instead of page-granular payloads)."""
+        pages, dense, nbytes = snapshot_slot(caches, slot, None)
+        return SwapEntry(uid=-1, granted=self.max_len, pages=pages,
+                         dense=dense, nbytes=nbytes)
+
+    def swap_dests(self, slot, pages: List[Dict]) -> List[Dict]:
+        """No pool leaves on a slab tree: one empty dict per stage."""
+        return [{} for _ in pages]
 
     def init_cache(self, batch: Optional[int] = None,
                    prefill_scratch: bool = False):

@@ -48,6 +48,45 @@ jitted multi-token chunk as ``ServingEngine`` (``repro.serving.steps``):
 each ``step()`` advances every active slot by up to ``decode_chunk`` tokens
 on device and syncs with the host once, so admission/retirement happen at
 chunk boundaries instead of after every token.
+
+**Priority, deadlines and preemption** (the SLA layer):
+
+* ``submit(..., priority=, deadline=)`` — ``priority`` is a class number,
+  *lower = more urgent* (default 1, so a ``priority=0`` request outranks
+  every default submission); ``deadline`` is an optional per-request TTFT
+  SLO in *scheduler steps* (deterministic under replay, unlike wall-clock).
+  Admission picks the queued request with the smallest ``(priority,
+  deadline, uid)`` — strict priority classes, earliest-deadline-first
+  within a class, FIFO within a deadline.  The selected request is
+  head-blocking: if its pages aren't grantable (and nothing may be
+  preempted for it) admission waits rather than letting smaller requests
+  starve it.
+
+* **Preemption** is the release valve for that wait: when the selected
+  request has no free slot or can't get pages, the scheduler preempts the
+  *lowest-priority* active decode whose class is strictly below the
+  candidate's (highest priority number; youngest uid among ties — it has
+  done the least work).  Equal-priority decodes are never preempted.
+
+* Under ``preempt_mode="swap"`` (default) the victim's exact cache bytes
+  move to a host-side arena (``kv_cache.SwapArena``): its block-table
+  rows' pages per pool leaf (``paged_vq`` swaps *code* pages, ~16x smaller
+  than fp — the Appendix-G ratio applied to the memory hierarchy), its
+  per-slot rows of every dense leaf, its decode cursor, and the per-page
+  fp prefill scratch the prefix index would need at retirement.  The
+  slot's page references are then dropped through ``backend.release`` —
+  refcount-aware, so prefix-shared pages survive via their other owners.
+  Re-admission re-grants the same token high-water and scatters the saved
+  payload into the fresh pages in one fixed-shape jit
+  (``kv_cache.restore_slot``); decode resumes from the saved cursor, so a
+  restored request's greedy output is *bitwise identical* to one that was
+  never preempted.  ``preempt_mode="recompute"`` drops the cache instead
+  and re-admits through the ordinary prefill pipeline over
+  ``prompt + output[:-1]`` (the ``CacheBackend.rollback``/prefix-grant
+  machinery), resuming from the last emitted token — cheaper in host
+  memory, but a prefill-vs-decode numeric path difference means it only
+  promises completion, not bitwise parity.  Preemption is refused under a
+  sequence-sharded mesh (``backend.preemptible``).
 """
 from __future__ import annotations
 
@@ -77,11 +116,18 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    # SLA knobs: lower priority number = more urgent (default class 1, so
+    # priority 0 outranks every default submission); deadline is a TTFT
+    # SLO in scheduler steps (None = best-effort), used for EDF ordering
+    # within a class and for goodput accounting — missing it never cancels
+    priority: int = 1
+    deadline: Optional[float] = None
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     submitted_step: int = -1
     first_token_step: int = -1
     done_step: int = -1
+    preemptions: int = 0
 
 
 @dataclasses.dataclass
@@ -95,7 +141,10 @@ class _PendingPrefill:
 
     req: Request
     slot: int
-    n: int  # true (possibly truncated) prompt length
+    n: int  # length of ``tokens`` (prompt, or prompt + output[:-1])
+    tokens: List[int]  # the sequence being prefilled: the prompt for a
+    # fresh admission; prompt + already-emitted output minus the resume
+    # token for a ``preempt_mode="recompute"`` re-admission
     plan: List  # [(chunk_start, width)] from serving_steps.plan_chunks
     next_chunk: int
     caches: Any
@@ -115,7 +164,8 @@ class ContinuousBatchingEngine:
                  use_pallas: bool = False,
                  prefix_cache: Optional[bool] = None,
                  speculative: int = 0,
-                 draft=None):
+                 draft=None,
+                 preempt_mode: str = "swap"):
         if cfg.arch_type in ("vit",):
             raise ValueError("classification models are not generative")
         seq_sharded = (mesh_ctx.seq_axis is not None
@@ -171,7 +221,14 @@ class ContinuousBatchingEngine:
             page_size=page_size, num_pages=num_pages, dtype=jnp.float32)
         self.caches = self.kv.init_cache()
         self._bt = self.kv.tables()
-        self.admission_stalls = 0  # admissions deferred by page pressure
+        self.admission_stalls = 0  # deferral *episodes* (see _note_stall)
+        self._stalled_uid: Optional[int] = None
+        if preempt_mode not in ("swap", "recompute"):
+            raise ValueError(f"unknown preempt_mode {preempt_mode!r} "
+                             f"(choose 'swap' or 'recompute')")
+        self.preempt_mode = preempt_mode
+        self.preemptions = 0  # preemption events (a request may repeat)
+        self.preempt_log: List = []  # (step, uid) per event
         self.lengths = jnp.zeros((slots,), jnp.int32)
         self.cur_token = jnp.zeros((slots,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * slots
@@ -196,6 +253,13 @@ class ContinuousBatchingEngine:
             kvc.merge_slot, donate_argnums=merge_donate)
         self._decode_chunk = serving_steps.make_decode_chunk(self.decode_ctx,
                                                              donate=donate)
+        # swap-restore for preempted requests: span-shaped payloads and
+        # (R, 1, ...) dense rows scatter back at the (traced) slot — one
+        # compile covers every restore (kvc.restore_slot)
+        restore_donate = (self.backend.donate_argnums((0,)) if donate is None
+                          else ((0,) if donate else ()))
+        self._restore_jit = serving_steps.CountingJit(
+            kvc.restore_slot, donate_argnums=restore_donate)
         # speculative decoding: each tick drafts k tokens per slot by n-gram
         # lookup over the slot's own prompt + output and verifies all k+1
         # positions in one jitted step — variable tokens per slot per tick,
@@ -282,16 +346,39 @@ class ContinuousBatchingEngine:
 
     # -- slot management -----------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None, *, priority: int = 1,
+               deadline: Optional[float] = None) -> int:
         """Queue a request.  Invalid requests are rejected HERE, not during
         ``step()``: a bad request discovered mid-drain used to either wedge
         the engine (``can_ever_fit`` raising from the queue head) or
         silently truncate the prompt to ``max_len - max_new_tokens - 1`` —
         admitting a garbage all-zeros chunk once ``max_new_tokens`` got
-        within 1 of ``max_len``."""
+        within 1 of ``max_len``.  Likewise ``max_new_tokens <= 0`` (a
+        request that could never emit would pin its slot forever: the
+        budget check ``len(output) >= max_new_tokens`` only runs after a
+        token lands) and non-positive/NaN deadlines (NaN compares False
+        against every TTFT, silently exempting the request from its own
+        SLO and poisoning the EDF sort).
+
+        ``priority``: class number, lower = more urgent (default 1).
+        ``deadline``: optional TTFT SLO in scheduler steps; orders
+        admission within a class (EDF) and feeds goodput accounting."""
         prompt = list(prompt)
         if not prompt:
             raise ValueError("empty prompt")
+        max_new_tokens = int(max_new_tokens)
+        if max_new_tokens <= 0:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens} — the "
+                f"request could never emit and would pin its slot forever")
+        if int(priority) < 0:
+            raise ValueError(f"priority must be >= 0, got {priority}")
+        if deadline is not None:
+            deadline = float(deadline)
+            if not deadline > 0:  # rejects <= 0 and NaN in one comparison
+                raise ValueError(
+                    f"deadline must be a positive number of scheduler "
+                    f"steps, got {deadline}")
         if len(prompt) + max_new_tokens > self.max_len:
             raise ValueError(
                 f"prompt length {len(prompt)} + max_new_tokens "
@@ -303,7 +390,9 @@ class ContinuousBatchingEngine:
                 f"the pool can never hold them")
         self._uid += 1
         self.queue.append(Request(self._uid, prompt, max_new_tokens,
-                                  eos_id, submitted_step=self.step_count))
+                                  eos_id, priority=int(priority),
+                                  deadline=deadline,
+                                  submitted_step=self.step_count))
         return self._uid
 
     def _slot_tables(self, slot: int):
@@ -311,26 +400,141 @@ class ContinuousBatchingEngine:
             return None
         return {name: t[slot:slot + 1] for name, t in self._bt.items()}
 
-    def _grant_slot(self, slot: int):
-        """Page-grant the queue head into ``slot``; returns
-        ``(prompt_len, reuse_tokens, fp_pages)``, or None on allocator
-        pressure (slot untouched; the prefix index may have LRU-evicted).
-        ``submit`` already validated the request, so the full prompt is
-        admitted — no truncation, no mid-drain raise.  With the prefix
-        cache on, the grant routes through ``kv.prefix_grant``: shared
-        pages attach to the slot's block-table row first, a partial-page
-        match forks copy-on-write, and only the remainder allocates."""
-        req = self.queue[0]
-        n = len(req.prompt)
+    def _resume_seq(self, req: Request) -> List[int]:
+        """The token sequence a (re-)admission must prefill: the prompt for
+        a fresh request; prompt + emitted output minus the resume token for
+        a ``preempt_mode="recompute"`` re-admission (the last emitted token
+        becomes ``cur_token`` and is fed back to decode, not prefilled)."""
+        return req.prompt + req.output[:-1] if req.output else req.prompt
+
+    def _select_index(self) -> int:
+        """Index of the next admission candidate: strict priority classes
+        (lower number first), earliest deadline within a class, FIFO (uid)
+        within a deadline.  Deadline-less requests sort after any deadline
+        in their class."""
+        return min(range(len(self.queue)), key=lambda i: (
+            self.queue[i].priority,
+            self.queue[i].deadline if self.queue[i].deadline is not None
+            else float("inf"),
+            self.queue[i].uid))
+
+    def _note_stall(self, req: Request) -> None:
+        """Count one admission-stall *episode*: the same request deferred
+        again on consecutive ticks is one stall, not one per tick (the
+        counter is a how-often-did-pressure-bite signal, monotone but not
+        tick-inflated).  Cleared when the stalled request admits."""
+        if self._stalled_uid != req.uid:
+            self.admission_stalls += 1
+            self._stalled_uid = req.uid
+
+    def _pick_victim(self, req: Request) -> Optional[int]:
+        """Slot of the active decode to preempt for ``req``: the one whose
+        priority class is strictly below ``req``'s (largest priority
+        number), youngest uid among ties — it has done the least work.
+        None when nothing is preemptible: no strictly-lower-priority
+        active decode, or a sequence-sharded layout
+        (``backend.preemptible``)."""
+        if not self.backend.preemptible:
+            return None
+        best = None
+        for slot, r in enumerate(self.active):
+            if r is None or r.priority <= req.priority:
+                continue
+            if best is None or (r.priority, r.uid) > \
+                    (self.active[best].priority, self.active[best].uid):
+                best = slot
+        return best
+
+    def preempt(self, slot: int) -> Request:
+        """Preempt the active decode in ``slot`` and requeue it.
+
+        ``preempt_mode="swap"``: snapshot the exact bytes the slot owns
+        (pages per pool leaf — code pages under ``paged_vq`` —, dense rows,
+        decode cursor, pending fp prefill-scratch snapshots) into the host
+        arena, keyed by uid; re-admission restores them bitwise
+        (``_restore``).  ``"recompute"``: drop the cache and re-prefill at
+        re-admission (``_resume_seq``).  Either way the slot's page
+        references are released refcount-aware — pages the prefix index or
+        another slot still co-owns survive — and the slot's block-table
+        rows point back at scratch."""
+        req = self.active[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} has no active request")
+        if self.preempt_mode == "swap":
+            entry = self.backend.swap_out(self.kv, slot, self.caches)
+            entry.uid = req.uid
+            ln, ct = jax.device_get((self.lengths[slot],
+                                     self.cur_token[slot]))
+            self.host_syncs += 1
+            entry.length = int(ln)
+            entry.cur_token = int(ct)
+            entry.fp_pages = self._slot_fp.pop(slot, None)
+            self.kv.arena.stash(entry)
+        else:
+            self._slot_fp.pop(slot, None)
+        self.active[slot] = None
+        self.backend.release(self.kv, slot)
+        self._bt = self.kv.tables()
+        req.preemptions += 1
+        self.preemptions += 1
+        self.preempt_log.append((self.step_count, req.uid))
+        self.queue.append(req)
+        return req
+
+    def _restore(self, req: Request, slot: int) -> bool:
+        """Re-admit a swapped-out request into ``slot``: re-grant its token
+        high-water (preempting lower-priority decodes under pressure, like
+        any admission), scatter the arena payload into the fresh page ids
+        and merge the dense rows back in one fixed-shape jit, then resume
+        decode from the saved cursor — no prefill, no resampling, so the
+        greedy continuation is bitwise what the victim would have emitted.
+        False (arena entry kept) when pages stay unavailable."""
+        entry = self.kv.arena.peek(req.uid)
+        while not self.backend.advance(self.kv, slot, entry.granted):
+            victim = self._pick_victim(req)
+            if victim is None:
+                self._note_stall(req)
+                return False
+            self.preempt(victim)
+        entry = self.kv.arena.pop(req.uid)
+        self._bt = self.kv.tables()
+        dests = self.backend.swap_dests(self.kv, slot, entry)
+        self.caches = self._restore_jit(
+            self.caches, entry.pages, dests, entry.dense,
+            jnp.asarray(slot, jnp.int32))
+        if entry.fp_pages is not None:
+            self._slot_fp[slot] = entry.fp_pages
+        self.active[slot] = req
+        self.lengths = self.lengths.at[slot].set(entry.length)
+        self.cur_token = self.cur_token.at[slot].set(entry.cur_token)
+        if self._stalled_uid == req.uid:
+            self._stalled_uid = None
+        return True
+
+    def _grant_slot(self, slot: int, req: Request):
+        """Page-grant ``req`` into ``slot``; returns
+        ``(seq_len, reuse_tokens, fp_pages)``, or None on allocator
+        pressure (slot untouched; the prefix index may have LRU-evicted —
+        callers route pressure through ``_grant_or_preempt``, which counts
+        the stall episode and may preempt instead).  ``submit`` already
+        validated the request, so the full prompt is admitted — no
+        truncation, no mid-drain raise.  With the prefix cache on, the
+        grant routes through ``kv.prefix_grant``: shared pages attach to
+        the slot's block-table row first, a partial-page match forks
+        copy-on-write, and only the remainder allocates.  A recompute
+        re-admission grants (and prefix-matches) over ``_resume_seq`` —
+        same total footprint, the emitted output rides along."""
+        seq = self._resume_seq(req)
+        n = len(seq)
         # admission blocks on allocator pressure, not slot count: the
         # request needs pages for its prompt + full budget (slab
         # backends always have room — advance is a bound check there).
-        tokens_needed = min(n + req.max_new_tokens, self.max_len)
+        tokens_needed = min(len(req.prompt) + req.max_new_tokens,
+                            self.max_len)
         if self.prefix_cache:
-            granted = self.kv.prefix_grant(slot, req.prompt, tokens_needed)
+            granted = self.kv.prefix_grant(slot, seq, tokens_needed)
             if granted is None:
-                self.admission_stalls += 1
-                return None  # FIFO: wait for a retirement to free pages
+                return None  # wait for a retirement to free pages
             reuse, cow, fp_pages = granted
             if cow is not None:
                 src, dst = cow
@@ -342,28 +546,53 @@ class ContinuousBatchingEngine:
                 self.prefix_hit_tokens += reuse
         else:
             if not self.backend.advance(self.kv, slot, tokens_needed):
-                self.admission_stalls += 1
-                return None  # FIFO: wait for a retirement to free pages
+                return None  # wait for a retirement to free pages
             reuse, fp_pages = 0, None
         self._bt = self.kv.tables()
         return n, reuse, fp_pages
 
+    def _grant_or_preempt(self, slot: int, req: Request):
+        """``_grant_slot`` with the preemption release valve: on allocator
+        pressure, evict the lowest-priority active decode strictly below
+        ``req``'s class and retry; once no victim remains, count one stall
+        episode and defer."""
+        while True:
+            granted = self._grant_slot(slot, req)
+            if granted is not None:
+                if self._stalled_uid == req.uid:
+                    self._stalled_uid = None
+                return granted
+            victim = self._pick_victim(req)
+            if victim is None:
+                self._note_stall(req)
+                return None
+            self.preempt(victim)
+
     def _finish_admission(self, req: Request, slot: int, n: int,
                           last_logits) -> None:
-        """Sample the prefill continuation and activate the slot."""
-        self._rng, sub = jax.random.split(self._rng)
-        eos_arr = serving_steps.as_eos_array(req.eos_id, 1)
-        first, _ = serving_steps.first_token(
-            sub, last_logits, eos_arr, temperature=self.temperature,
-            top_k=self.top_k)
-        tok = int(first[0])
-        self.host_syncs += 1
-        req.output.append(tok)
-        req.first_token_step = self.step_count
+        """Sample the prefill continuation and activate the slot.  A
+        recompute re-admission (non-empty ``req.output``) resumes from its
+        already-emitted last token instead of sampling a fresh one — the
+        prefill covered ``_resume_seq``, and decode picks up exactly where
+        the victim stopped."""
+        resumed = bool(req.output)
+        if resumed:
+            tok = req.output[-1]
+        else:
+            self._rng, sub = jax.random.split(self._rng)
+            eos_arr = serving_steps.as_eos_array(req.eos_id, 1)
+            first, _ = serving_steps.first_token(
+                sub, last_logits, eos_arr, temperature=self.temperature,
+                top_k=self.top_k)
+            tok = int(first[0])
+            self.host_syncs += 1
+            req.output.append(tok)
+            req.first_token_step = self.step_count
         self.active[slot] = req
         self.lengths = self.lengths.at[slot].set(n)
         self.cur_token = self.cur_token.at[slot].set(tok)
-        self._maybe_finish(slot, tok)
+        if not resumed:
+            self._maybe_finish(slot, tok)
 
     def _admit(self) -> None:
         if self.prefill_mode == "padded":
@@ -372,19 +601,44 @@ class ContinuousBatchingEngine:
         self._start_pending()
         self._advance_pending()
 
+    def _free_slot_for(self, req: Request) -> Optional[int]:
+        """A slot for ``req``: the first free one, else the slot freed by
+        preempting a strictly-lower-priority decode (None when neither
+        exists)."""
+        slot = next((s for s in range(self.slots)
+                     if self.active[s] is None), None)
+        if slot is not None:
+            return slot
+        victim = self._pick_victim(req)
+        if victim is None:
+            return None
+        self.preempt(victim)
+        return victim
+
     def _admit_padded(self) -> None:
         """Legacy one-shot admission: the whole (max_len-padded) prompt
-        prefills in a single jitted step, stalling this tick's decode."""
-        for slot in range(self.slots):
-            if self.active[slot] is not None or not self.queue:
+        prefills in a single jitted step, stalling this tick's decode.
+        Candidates come in priority/EDF order; the selected request is
+        head-blocking (pressure it can't preempt away defers admission
+        entirely)."""
+        while self.queue:
+            req = self.queue[self._select_index()]
+            slot = self._free_slot_for(req)
+            if slot is None:
+                return
+            if self.preempt_mode == "swap" and self.kv.arena.holds(req.uid):
+                if not self._restore(req, slot):
+                    return
+                self.queue.remove(req)
                 continue
-            granted = self._grant_slot(slot)
+            granted = self._grant_or_preempt(slot, req)
             if granted is None:
-                break
+                return
             n, _, _ = granted  # padded mode never prefix-caches
-            req = self.queue.pop(0)
+            self.queue.remove(req)
+            seq = self._resume_seq(req)
             toks = np.zeros((1, self.max_len), np.int32)
-            toks[0, :n] = req.prompt[:n]
+            toks[0, :n] = seq[:n]
             last_logits, self.caches = self._prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(n, jnp.int32),
                 jnp.asarray(slot, jnp.int32), self.caches,
@@ -392,20 +646,28 @@ class ContinuousBatchingEngine:
             self._finish_admission(req, slot, n, last_logits)
 
     def _start_pending(self) -> None:
-        """Begin a chunked admission when a slot (and its pages) are free.
-        One admission is in flight at a time; its request already owns its
-        pages, so a retirement can't steal them mid-prefill."""
+        """Begin a chunked admission when a slot (and its pages) are free —
+        preempting a lower-priority decode for either when the candidate
+        outranks one (see ``_pick_victim``).  A swapped-out candidate
+        restores in place of prefilling.  One admission is in flight at a
+        time; its request already owns its pages, so a retirement can't
+        steal them mid-prefill."""
         if self._pending is not None or not self.queue:
             return
-        slot = next((s for s in range(self.slots)
-                     if self.active[s] is None), None)
+        req = self.queue[self._select_index()]
+        slot = self._free_slot_for(req)
         if slot is None:
             return
-        granted = self._grant_slot(slot)
+        if self.preempt_mode == "swap" and self.kv.arena.holds(req.uid):
+            if self._restore(req, slot):
+                self.queue.remove(req)
+            return
+        granted = self._grant_or_preempt(slot, req)
         if granted is None:
             return
         n, reuse, fp_pages = granted
-        req = self.queue.pop(0)
+        self.queue.remove(req)
+        seq = self._resume_seq(req)
         caches = self.kv.init_cache(1, prefill_scratch=True)
         if self.backend.paged:
             caches = kvc.adopt_pools(caches, self.caches)
@@ -416,7 +678,7 @@ class ContinuousBatchingEngine:
             caches = kvc.hydrate_prefill_scratch(
                 caches, fp_pages, reuse, self.kv.page_size)
         self._pending = _PendingPrefill(
-            req=req, slot=slot, n=n,
+            req=req, slot=slot, n=n, tokens=seq,
             plan=serving_steps.plan_chunks(n, self.prefill_buckets,
                                            start=reuse),
             next_chunk=0, caches=caches,
@@ -434,7 +696,7 @@ class ContinuousBatchingEngine:
             pend.caches = kvc.adopt_pools(pend.caches, self.caches)
         s0, w = pend.plan[pend.next_chunk]
         chunk = np.zeros((1, w), np.int32)
-        seg = pend.req.prompt[s0:min(s0 + w, pend.n)]
+        seg = pend.tokens[s0:min(s0 + w, pend.n)]
         chunk[0, :len(seg)] = seg
         pend.last_logits, pend.caches = self._prefill_chunk(
             self.params, jnp.asarray(chunk), jnp.asarray(s0, jnp.int32),
@@ -562,24 +824,55 @@ class ContinuousBatchingEngine:
                 self._maybe_finish(slot, req.output[-1])
         return emitted
 
+    def slo_report(self) -> Dict[str, Any]:
+        """Deadline bookkeeping over finished requests: a request meets its
+        SLO when its TTFT (in scheduler steps) is within its deadline;
+        deadline-less requests always count as met.  ``goodput_tokens`` is
+        the DeepSpeed-style goodput-under-SLO numerator — tokens emitted by
+        SLO-met requests only."""
+        met = goodput = with_deadline = 0
+        for r in self.finished:
+            ttft = r.first_token_step - r.submitted_step
+            with_deadline += r.deadline is not None
+            if r.deadline is None or ttft <= r.deadline:
+                met += 1
+                goodput += len(r.output)
+        return {"requests": len(self.finished),
+                "with_deadline": with_deadline, "met": met,
+                "goodput_tokens": goodput}
+
+    @property
+    def idle(self) -> bool:
+        """No work left: nothing queued (which covers swapped-out requests
+        — preemption requeues them), no prefill in flight, no active
+        decode."""
+        return (not self.queue and self._pending is None
+                and all(r is None for r in self.active))
+
     def run_until_drained(self, max_steps: int = 10_000) -> Dict[str, Any]:
         t0 = time.time()
         decoded = 0
-        while (self.queue or self._pending is not None
-               or any(r is not None for r in self.active)) \
-                and self.step_count < max_steps:
+        while not self.idle and self.step_count < max_steps:
             decoded += self.step()
         dt = max(time.time() - t0, 1e-9)
+        ttfts = [r.first_token_step - r.submitted_step
+                 for r in self.finished]
         return {
             "requests": len(self.finished),
             "tokens": sum(len(r.output) for r in self.finished),
             "steps": self.step_count,
             "wall_s": dt,
             "tok_per_s": decoded / dt,
-            "mean_ttft_steps": float(np.mean(
-                [r.first_token_step - r.submitted_step
-                 for r in self.finished])) if self.finished else 0.0,
+            "mean_ttft_steps": float(np.mean(ttfts)) if ttfts else 0.0,
+            "p50_ttft_steps": float(np.percentile(ttfts, 50)) if ttfts
+            else 0.0,
+            "p99_ttft_steps": float(np.percentile(ttfts, 99)) if ttfts
+            else 0.0,
             "admission_stalls": self.admission_stalls,
+            "preemptions": self.preemptions,
+            "preempted_requests": len({u for _, u in self.preempt_log}),
+            "swap": self.kv.arena.stats(),
+            "slo": self.slo_report(),
             "prefill_chunk_ticks": self.prefill_chunk_ticks,
             "spec_rounds": self.spec_rounds,
             "spec_tokens": self.spec_tokens,

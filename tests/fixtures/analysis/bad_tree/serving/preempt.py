@@ -1,0 +1,12 @@
+"""Seeded swap-arena-internals violations: SwapArena private state poked
+from outside serving/kv_cache.py."""
+
+
+def force_restore(kv, uid):
+    # bypasses the swap_ins/bytes_in accounting: the entry restores but
+    # the arena still reports it resident
+    return kv.arena._swapped[uid]
+
+
+def drop_victim(kv, uid):
+    del kv.arena._swapped[uid]

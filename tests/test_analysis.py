@@ -30,7 +30,8 @@ CLEAN = FIX / "clean_tree"
 
 EXPECTED_RULES = {"compat-api", "cache-mode-dispatch", "interpret-literal",
                   "pallas-call", "host-sync", "bare-jit",
-                  "allocator-internals", "cache-length-mutation"}
+                  "allocator-internals", "cache-length-mutation",
+                  "swap-arena-internals"}
 
 
 # ---------------------------------------------------------------------------
@@ -64,6 +65,7 @@ BAD_EXPECT = {
     "serving/engine.py": {"bare-jit"},
     "serving/sched.py": {"allocator-internals"},
     "serving/spec.py": {"cache-length-mutation"},
+    "serving/preempt.py": {"swap-arena-internals"},
     # reason-less marker: reported AND the suppression does not apply
     "serving/cache_backend.py": {"host-sync", "lint-allow"},
 }

@@ -1,0 +1,233 @@
+"""Preemption conformance: a preempted request's greedy continuation is
+bitwise identical to a never-preempted run.
+
+The swap arena snapshots the victim's exact cache bytes (``paged_vq``: code
+pages + the per-page fp prefill scratch; ``paged``: fp values), so a restore
+must reproduce the un-preempted token stream exactly — across both paged
+layouts, both prefill modes, mid-stream EOS, prefix-shared victim pages and
+the ``recompute`` re-prefill path.  The restore scatter is a single jitted
+program (span-shaped payloads), so repeated restores must not retrace."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_factory as mf
+from repro.serving import cache_backend as cbe
+from repro.serving.scheduler import ContinuousBatchingEngine
+
+_MODELS = {}
+
+
+def small_lm(astra=False):
+    """Reduced gpt2-small; astra stays enabled for the vq layouts (the VQ
+    codebooks live in params) and disabled otherwise."""
+    if astra not in _MODELS:
+        cfg = get_config("gpt2-small").reduced()
+        if not astra:
+            cfg = dataclasses.replace(
+                cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+        params = mf.init_params(jax.random.PRNGKey(0), cfg)
+        _MODELS[astra] = (cfg, params)
+    return _MODELS[astra]
+
+
+JOBS = [([5, 9, 3, 7, 2, 8, 4, 1], 16, {}),
+        ([11, 4, 4, 6, 2, 9, 9, 3], 16, {})]
+
+
+def _drain_outputs(eng, jobs):
+    uids = [eng.submit(list(p), max_new_tokens=n, **kw)
+            for p, n, kw in jobs]
+    eng.run_until_drained()
+    by_uid = {r.uid: r.output for r in eng.finished}
+    return [by_uid[u] for u in uids]
+
+
+def _engine_kw(cache_mode, prefill_mode, **extra):
+    kw = dict(slots=2, max_len=64, cache_mode=cache_mode, page_size=8,
+              decode_chunk=2, prefill_chunk=16, astra_mode="off",
+              prefill_mode=prefill_mode)
+    kw.update(extra)
+    return kw
+
+
+# ---------------------------------------------------------------------------
+# The conformance matrix: explicit mid-decode preemption, bitwise parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prefill_mode", ["chunked", "padded"])
+@pytest.mark.parametrize("cache_mode", ["paged", "paged_vq"])
+@pytest.mark.parametrize("preempt_mode", ["swap", "recompute"])
+def test_preempt_restore_bitwise_parity(cache_mode, prefill_mode,
+                                        preempt_mode):
+    cfg, params = small_lm(astra="vq" in cache_mode)
+    kw = _engine_kw(cache_mode, prefill_mode, preempt_mode=preempt_mode)
+
+    base = ContinuousBatchingEngine(cfg, params, **kw)
+    want = _drain_outputs(base, JOBS)
+    assert base.preemptions == 0
+
+    eng = ContinuousBatchingEngine(cfg, params, **kw)
+    uids = [eng.submit(list(p), max_new_tokens=n, **j)
+            for p, n, j in JOBS]
+    for _ in range(4):
+        eng.step()
+    assert all(r is not None for r in eng.active)
+    eng.preempt(0)  # victim mid-decode, several tokens in
+    eng.step()      # restores (or re-prefills) into the free slot
+    eng.preempt(1)  # and again, the other slot
+    eng.run_until_drained()
+
+    assert eng.preemptions == 2
+    by_uid = {r.uid: r.output for r in eng.finished}
+    for u, w in zip(uids, want):
+        assert by_uid[u] == w, (cache_mode, prefill_mode, preempt_mode)
+    if preempt_mode == "swap":
+        # both restores replay ONE jitted scatter: span-shaped payloads
+        assert eng._restore_jit.trace_count <= 1
+        stats = eng.kv.arena.stats()
+        assert stats["swap_outs"] == stats["swap_ins"] == 2
+        assert stats["resident"] == 0 and stats["resident_bytes"] == 0
+    eng.kv.check_invariants()
+
+
+def test_paged_vq_swaps_codes_not_fp():
+    """The Appendix-G ratio applied to the memory hierarchy: a paged_vq
+    victim's swapped page bytes are a fraction of the same victim's fp page
+    bytes (codes are uint8 indices per head-group, not full K/V planes)."""
+    sizes = {}
+    for mode in ("paged", "paged_vq"):
+        cfg, params = small_lm(astra="vq" in mode)
+        eng = ContinuousBatchingEngine(
+            cfg, params, **_engine_kw(mode, "chunked"))
+        eng.submit([5, 9, 3, 7, 2, 8, 4, 1], max_new_tokens=12)
+        for _ in range(3):
+            eng.step()
+        eng.preempt(0)
+        entry = eng.kv.arena.peek(eng.queue[0].uid)
+        # count only the *page-pool* payload: the fp-vs-codes comparison
+        sizes[mode] = sum(int(leaf.nbytes)
+                          for leaf in jax.tree.leaves(entry.pages))
+        eng.run_until_drained()
+        assert eng.finished and len(eng.finished[0].output) == 12
+    assert sizes["paged_vq"] * 4 <= sizes["paged"], sizes
+
+
+# ---------------------------------------------------------------------------
+# Mid-stream EOS across a preemption
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cache_mode", ["paged", "paged_vq"])
+def test_eos_after_restore_matches_baseline(cache_mode):
+    """EOS that fires AFTER the request was preempted and restored retires
+    it at the same position as the never-preempted run — and an already
+    EOS-checked resume token is not re-checked (no early retire)."""
+    cfg, params = small_lm(astra="vq" in cache_mode)
+    kw = _engine_kw(cache_mode, "chunked")
+
+    probe = ContinuousBatchingEngine(cfg, params, **kw)
+    full = _drain_outputs(probe, JOBS[:1])[0]
+    # first token past the pre-preempt window that has no earlier twin —
+    # so EOS genuinely fires mid-stream, after the restore
+    k = next(i for i in range(6, len(full)) if full[i] not in full[:i])
+    eos = full[k]
+
+    base = ContinuousBatchingEngine(cfg, params, **kw)
+    want = _drain_outputs(base, [(JOBS[0][0], 16, dict(eos_id=eos))])[0]
+    assert want[-1] == eos and len(want) == k + 1  # genuinely mid-stream
+
+    eng = ContinuousBatchingEngine(cfg, params, **kw)
+    uid = eng.submit(list(JOBS[0][0]), max_new_tokens=16, eos_id=eos)
+    for _ in range(2):
+        eng.step()
+    assert eng.active[0] is not None and len(eng.active[0].output) < k + 1
+    eng.preempt(0)
+    eng.run_until_drained()
+    got = next(r for r in eng.finished if r.uid == uid)
+    assert got.output == want
+    assert eng.preemptions == 1
+
+
+# ---------------------------------------------------------------------------
+# Prefix-shared victim pages
+# ---------------------------------------------------------------------------
+
+
+def test_preempting_prefix_shared_victim_keeps_shared_pages():
+    """Swapping out a victim whose early pages are shared with the prefix
+    index must only drop the victim's OWN reference: the index keeps the
+    pages alive, a later request still prefix-hits them, and the restored
+    victim's tokens stay bitwise identical."""
+    cfg, params = small_lm(astra=False)
+    shared = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8, 9, 7, 9, 3]  # 2 pages
+    jobs = [(shared + [30, 31], 6, {}),          # retires, seeds the index
+            (shared + [40, 41], 20, dict(priority=2)),  # the victim
+            ([50] * 20, 20, dict(priority=0))]   # the urgent arrival
+    kw = _engine_kw("paged", "chunked", prefix_cache=True)
+
+    base = ContinuousBatchingEngine(cfg, params, **kw)
+    want = _drain_outputs(base, jobs)
+
+    # pool of 10 (9 usable): the victim holds 5 pages (2 prefix-shared),
+    # the urgent request needs 5 with only 4 free -> pressure -> preempt
+    eng = ContinuousBatchingEngine(cfg, params, num_pages=10, **kw)
+    u0 = eng.submit(list(jobs[0][0]), max_new_tokens=6)
+    eng.run_until_drained()
+    hits0 = eng.prefix_hits
+    uv = eng.submit(list(jobs[1][0]), max_new_tokens=20, priority=2)
+    for _ in range(8):
+        eng.step()
+    assert eng.prefix_hits > hits0, "victim did not attach to shared pages"
+    uu = eng.submit([50] * 20, max_new_tokens=20, priority=0)
+    eng.run_until_drained()
+    assert eng.preemptions >= 1
+    by_uid = {r.uid: r.output for r in eng.finished}
+    for u, w in zip((u0, uv, uu), want):
+        assert by_uid[u] == w, "prefix-shared swap diverged"
+    eng.kv.check_invariants()
+    assert len(eng.kv.arena) == 0
+
+
+# ---------------------------------------------------------------------------
+# Slab layouts and the sharded guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cache_mode", ["fp", "vq"])
+def test_slab_preemption_parity(cache_mode):
+    """The dense slab layouts preempt too (whole-slot snapshot): parity and
+    an empty arena after drain."""
+    cfg, params = small_lm(astra="vq" in cache_mode)
+    kw = dict(slots=2, max_len=64, cache_mode=cache_mode, decode_chunk=2,
+              prefill_chunk=16, astra_mode="off")
+    base = ContinuousBatchingEngine(cfg, params, **kw)
+    want = _drain_outputs(base, JOBS)
+
+    eng = ContinuousBatchingEngine(cfg, params, **kw)
+    uids = [eng.submit(list(p), max_new_tokens=n, **j)
+            for p, n, j in JOBS]
+    for _ in range(3):
+        eng.step()
+    eng.preempt(1)
+    eng.run_until_drained()
+    by_uid = {r.uid: r.output for r in eng.finished}
+    for u, w in zip(uids, want):
+        assert by_uid[u] == w
+    assert len(eng.kv.arena) == 0
+
+
+def test_sharded_backend_is_not_preemptible():
+    """Under a sequence-sharded mesh the cache rows live across devices;
+    preemption swap is a single-host feature (like prefix caching) and the
+    backend says so before anyone tries."""
+    local = cbe.get_backend("paged")
+    assert local.preemptible
+    sharded = cbe.get_backend("paged", seq_sharded=True)
+    assert not sharded.preemptible
+    with pytest.raises(ValueError, match="preemptible"):
+        sharded.swap_out(None, 0, None)

@@ -1,10 +1,16 @@
 """Continuous batching scheduler: parity with the static engine, slot reuse,
-EOS handling."""
+EOS handling, submit validation, and the priority/deadline/preemption state
+machine (randomized interleavings with allocator invariants)."""
 import dataclasses
 
 import jax
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised where hypothesis is absent
+    from _fallback_hypothesis import given, settings, st
 
 from repro.configs import get_config
 from repro.models import model_factory as mf
@@ -124,3 +130,167 @@ def test_ttft_reported(model):
     stats = eng.run_until_drained()
     assert stats["mean_ttft_steps"] >= 0.0
     assert stats["tokens"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# Submit validation
+
+
+def test_submit_rejects_nonpositive_budget(model):
+    """max_new_tokens <= 0 could never emit and would pin a slot forever —
+    reject at submit, not at wedge time."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=48)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([1, 2, 3], max_new_tokens=0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([1, 2, 3], max_new_tokens=-4)
+    assert not eng.queue  # the rejects left no queue residue
+
+
+def test_submit_rejects_bad_deadline_and_priority(model):
+    cfg, params = model
+    eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=48)
+    for bad in (0.0, -5.0, float("nan")):
+        with pytest.raises(ValueError, match="deadline"):
+            eng.submit([1, 2, 3], max_new_tokens=2, deadline=bad)
+    with pytest.raises(ValueError, match="priority"):
+        eng.submit([1, 2, 3], max_new_tokens=2, priority=-1)
+    # valid submits after the rejects still work
+    eng.submit([1, 2, 3], max_new_tokens=2, priority=0, deadline=7.5)
+    stats = eng.run_until_drained()
+    assert stats["requests"] == 1
+
+
+def test_engine_generate_rejects_nonpositive_budget(model):
+    cfg, params = model
+    eng = ServingEngine(cfg, params, max_len=48, astra_mode="off")
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.generate([[1, 2, 3]], max_new_tokens=0)
+
+
+# ---------------------------------------------------------------------------
+# Stall accounting: one episode per deferred admission, not one per tick
+
+
+def test_stall_counted_once_per_deferred_admission(model):
+    """A request that waits N ticks for pages is ONE stall episode.  Equal
+    priority means no preemption: request B just queues behind A until A
+    retires and releases its pages."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=64,
+                                   cache_mode="paged", page_size=8,
+                                   num_pages=9, prefill_chunk=32)
+    eng.submit([1] * 24, max_new_tokens=24)  # 48 tokens -> 6 of 8 pages
+    eng.step()                               # admit A
+    eng.submit([2] * 24, max_new_tokens=24)  # needs 6 pages, only 2 free
+    for _ in range(6):
+        eng.step()
+    assert eng.admission_stalls == 1, "stall episode double-counted"
+    assert eng.preemptions == 0, "equal priority must never preempt"
+    stats = eng.run_until_drained()
+    assert stats["requests"] == 2
+    assert stats["admission_stalls"] == 1
+    assert all(len(r.output) == 24 for r in eng.finished)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance bar: priority 0 under full page pressure reaches first token
+
+
+@pytest.mark.parametrize("preempt_mode", ["swap", "recompute"])
+def test_priority_zero_preempts_under_full_pressure(model, preempt_mode):
+    """Both slots busy and every page granted to priority-2 decodes; a
+    priority-0 submit must reach its first token by preempting — a permanent
+    stall here is the bug this PR's scheduler exists to prevent."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=64,
+                                   cache_mode="paged", page_size=8,
+                                   num_pages=11, prefill_chunk=16,
+                                   decode_chunk=2,
+                                   preempt_mode=preempt_mode)
+    eng.submit([7] * 12, max_new_tokens=24, priority=2)  # 36 tok -> 5 pages
+    eng.submit([9] * 12, max_new_tokens=24, priority=2)  # pool now full
+    for _ in range(6):
+        eng.step()
+    assert all(r is not None for r in eng.active)
+    uid = eng.submit([3] * 24, max_new_tokens=12, priority=0, deadline=10.0)
+    for _ in range(8):
+        eng.step()
+    urgent = next(r for r in list(eng.active) + eng.finished
+                  if r is not None and r.uid == uid)
+    assert urgent.first_token_step >= 0, "priority 0 stalled permanently"
+    assert urgent.first_token_step - urgent.submitted_step <= 10
+    assert eng.preemptions >= 1
+    stats = eng.run_until_drained()
+    assert stats["requests"] == 3
+    assert all(len(r.output) == r.max_new_tokens for r in eng.finished)
+    eng.kv.check_invariants()
+    assert len(eng.kv.arena) == 0, "drained engine must not hold swap bytes"
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis state machine: random interleavings of the scheduler lifecycle
+
+
+@pytest.fixture(scope="module")
+def sm_model():
+    # tiny config: the state machine cares about scheduling, not quality
+    cfg = get_config("gpt2-small").reduced()
+    cfg = dataclasses.replace(
+        cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+    params = mf.init_params(jax.random.PRNGKey(1), cfg)
+    return cfg, params
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       preempt_mode=st.sampled_from(["swap", "recompute"]))
+def test_scheduler_state_machine(sm_model, seed, preempt_mode):
+    """Random submit/step/preempt/drain interleavings against a page-starved
+    engine.  Invariants after every operation: the page allocator's books
+    balance, stall/preemption counters only grow (and stalls never inflate
+    with ticks — episodes, not polls).  At the end: the engine drains (no
+    wedged slot), every admitted request retires with its full budget, and
+    the swap arena is empty."""
+    cfg, params = sm_model
+    rng = np.random.RandomState(seed)
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=64, cache_mode="paged", page_size=8,
+        num_pages=int(rng.randint(11, 18)), prefill_chunk=16, decode_chunk=2,
+        preempt_mode=preempt_mode)
+    submitted = 0
+    stalls_seen = 0
+    preempts_seen = 0
+    for _ in range(30):
+        op = rng.choice(["submit", "step", "preempt", "burst"],
+                        p=[0.35, 0.35, 0.15, 0.15])
+        if op == "submit" and submitted < 10:
+            plen = int(rng.randint(1, 25))
+            eng.submit(rng.randint(1, cfg.vocab_size, size=plen).tolist(),
+                       max_new_tokens=int(rng.randint(1, 17)),
+                       priority=int(rng.randint(0, 3)),
+                       deadline=(float(rng.randint(1, 40))
+                                 if rng.rand() < 0.5 else None))
+            submitted += 1
+        elif op == "step":
+            eng.step()
+        elif op == "preempt":
+            live = [s for s, r in enumerate(eng.active) if r is not None]
+            if live:
+                eng.preempt(live[int(rng.randint(len(live)))])
+        else:  # burst: a few ticks back to back
+            for _ in range(int(rng.randint(2, 5))):
+                eng.step()
+        eng.kv.check_invariants()
+        assert eng.admission_stalls >= stalls_seen, "stall counter went back"
+        assert eng.preemptions >= preempts_seen
+        stalls_seen = eng.admission_stalls
+        preempts_seen = eng.preemptions
+    stats = eng.run_until_drained(max_steps=3000)
+    assert eng.idle, "engine wedged: queue/slots never drained"
+    assert stats["requests"] == submitted, "an admitted request vanished"
+    assert all(len(r.output) == r.max_new_tokens for r in eng.finished)
+    eng.kv.check_invariants()
+    assert len(eng.kv.arena) == 0
+    assert stats["preempted_requests"] <= stats["preemptions"]

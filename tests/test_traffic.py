@@ -1,0 +1,115 @@
+"""The traffic harness as a stress suite: seeded traces are replayable
+(identical event logs, bit-for-bit), the starved smoke configuration really
+exercises preemption/stall paths, and a replay under per-step allocator
+invariant checks stays clean.  ``benchmarks/traffic_bench.py`` is imported
+directly — the CI ``traffic`` lane runs the same replay from the CLI."""
+import dataclasses
+import pathlib
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import traffic_bench as tb  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.models import model_factory as mf  # noqa: E402
+from repro.serving.scheduler import ContinuousBatchingEngine  # noqa: E402
+
+_MODEL = {}
+
+
+def small_lm():
+    if not _MODEL:
+        cfg = get_config("gpt2-small").reduced()
+        cfg = dataclasses.replace(
+            cfg, astra=dataclasses.replace(cfg.astra, enabled=False))
+        _MODEL["m"] = (cfg, mf.init_params(jax.random.PRNGKey(0), cfg))
+    return _MODEL["m"]
+
+
+def _starved_engine(cfg, params, **kw):
+    """The smoke shape: 2 slots, a pool one max-length request wide."""
+    kw.setdefault("num_pages", (64 // 8) + 1)
+    return ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=64, cache_mode="paged", page_size=8,
+        decode_chunk=2, prefill_chunk=16, **kw)
+
+
+def _smoke_trace(seed, vocab, mode):
+    return tb.make_trace(seed, n_requests=12, mode=mode, vocab=vocab,
+                         prompt_lens=(4, 24), max_new=(6, 20),
+                         mean_gap=1.0, burst=5)
+
+
+def test_trace_generation_is_seeded():
+    kw = dict(n_requests=12, vocab=997)
+    a = tb.make_trace(7, mode="poisson", **kw)
+    assert a == tb.make_trace(7, mode="poisson", **kw)
+    assert a != tb.make_trace(8, mode="poisson", **kw)
+    assert a != tb.make_trace(7, mode="bursty", **kw)
+    steps = [r["arrive_step"] for r in a]
+    assert steps == sorted(steps)
+    assert all(r["max_new"] >= 1 for r in a)
+    assert all(r["deadline"] is None or r["deadline"] > 0 for r in a)
+    with pytest.raises(ValueError, match="trace mode"):
+        tb.make_trace(0, n_requests=2, mode="zipf", vocab=10)
+
+
+@pytest.mark.parametrize("mode", ["poisson", "bursty"])
+def test_replay_produces_identical_event_logs(mode):
+    """Two replays of the same seeded trace on fresh engines: identical
+    event logs (every submit/first_token/preempt/finish at the same step)
+    and identical step-derived metrics.  Wall-clock keys are excluded —
+    they are the only nondeterminism allowed."""
+    cfg, params = small_lm()
+    rows = []
+    for _ in range(2):
+        eng = _starved_engine(cfg, params)
+        rows.append(tb.run_trace(eng, _smoke_trace(0, cfg.vocab_size, mode)))
+    a, b = rows
+    assert a["events"] == b["events"]
+    assert a["events_sha256"] == b["events_sha256"]
+    for key in ("requests", "tokens", "steps", "p50_ttft_steps",
+                "p99_ttft_steps", "steps_per_token", "goodput_tokens",
+                "admission_stalls", "preemptions", "preempted_requests",
+                "slo", "swap"):
+        assert a[key] == b[key], key
+    assert a["requests"] == 12
+
+
+def test_starved_smoke_config_exercises_preemption():
+    """The point of the starved pool: the replay must hit the preemption
+    and stall paths, not just the happy path — otherwise the determinism
+    assertion above proves nothing about the hard paths."""
+    cfg, params = small_lm()
+    eng = _starved_engine(cfg, params)
+    row = tb.run_trace(eng, _smoke_trace(0, cfg.vocab_size, "bursty"))
+    assert row["preemptions"] >= 1
+    assert row["admission_stalls"] >= 1
+    assert row["swap"]["swap_outs"] == row["swap"]["swap_ins"]
+    assert row["swap"]["bytes_out"] > 0
+    assert row["slo"]["met"] <= row["slo"]["requests"]
+    assert 0 < row["goodput_tokens"] <= row["tokens"]
+
+
+def test_stress_replay_under_invariant_checks():
+    """The stress-suite configuration: per-step allocator invariants during
+    a preemption-heavy replay, every request retires with its full budget,
+    nothing left in the swap arena."""
+    cfg, params = small_lm()
+    eng = _starved_engine(cfg, params)
+    row = tb.run_trace(eng, _smoke_trace(1, cfg.vocab_size, "poisson"),
+                       check_invariants=True)
+    assert row["requests"] == 12
+    assert all(len(r.output) == r.max_new_tokens for r in eng.finished)
+    assert len(eng.kv.arena) == 0
+    eng.kv.check_invariants()
+    # the BENCH_serving.json row schema the CI lane and docs promise
+    for key in ("p50_ttft_steps", "p99_ttft_steps", "mean_ttft_ms",
+                "steps_per_token", "ms_per_token", "tok_per_s",
+                "goodput_tokens", "goodput_tok_per_s", "slo",
+                "admission_stalls", "preemptions", "preempted_requests",
+                "swap", "events", "events_sha256"):
+        assert key in row, key
